@@ -1,0 +1,83 @@
+"""Shared benchmark harness: run one serving system over one workload on
+the simulation backend (roofline cost model; same offered load across
+systems — paper §6.2)."""
+from __future__ import annotations
+
+import copy
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.configs import get_config
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.policy import FlyingPolicy
+from repro.core.scheduler import (HARD, DynamicScheduler, SchedulerConfig)
+from repro.serving.metrics import Summary, summarize
+from repro.serving.simulator import CostModel, SimBackend
+from repro.serving.workload import WorkloadSpec, generate
+
+# paper evaluation models (§6.1.2) mapped to our registered configs
+PAPER_MODELS = {
+    "Llama-3-70B": "paper-llama3-70b",
+    "GPT-OSS-120B": "paper-gpt-oss-120b",
+    "Nemotron-8B": "paper-nemotron-8b",
+}
+
+SYSTEMS = ("static-DP", "static-TP", "shift-parallelism", "flying")
+
+
+def build_sched(arch: str, system: str, *, strategy: str = HARD,
+                blocks: Optional[int] = None):
+    cfg = get_config(arch)
+    plan = ParallelPlan(engine_rows=cfg.engine_rows, tp_base=16,
+                        data_rows=16)
+    if blocks is None:
+        kv_tok = max(cfg.kv_cache_dims_per_token * cfg.num_layers * 2
+                     / (plan.engine_rows * 16), 1)
+        budget = 16e9 - cfg.num_params() * 2 / (plan.engine_rows * 16) - 1e9
+        blocks = max(int(budget / kv_tok / 16), 2048)
+    geom = PoolGeometry(cfg, plan, num_blocks=blocks, block_base=16)
+    cost = CostModel(cfg, plan)
+    fixed = None
+    policy = None
+    switch = "flying"
+    penalty = 1.0
+    if system == "static-DP":
+        fixed = 1
+    elif system == "static-TP":
+        fixed = plan.valid_merges()[-1]
+    elif system == "shift-parallelism":
+        # proxy for [39]: dynamic TP<->SP switching; near-zero switch cost
+        # but its throughput mode (SP) pays a sequence-parallel overhead
+        # and it cannot serve MoE (paper footnote 5)
+        if cfg.moe is not None:
+            return None
+        policy = FlyingPolicy()
+        penalty = 0.8
+    else:
+        policy = FlyingPolicy()
+    be = SimBackend(cost, switch_mode=switch,
+                    dp_throughput_penalty=penalty)
+    sched = DynamicScheduler(plan, geom, be,
+                             SchedulerConfig(strategy=strategy,
+                                             fixed_merge=fixed),
+                             policy=policy)
+    return sched
+
+
+def run_workload(arch: str, system: str, spec: WorkloadSpec, *,
+                 strategy: str = HARD) -> Optional[Dict]:
+    sched = build_sched(arch, system, strategy=strategy)
+    if sched is None:
+        return None
+    for r in generate(spec):
+        sched.submit(copy.deepcopy(r))
+    sched.run()
+    m = summarize(sched.pool.all.values())
+    mp = summarize(sched.pool.all.values(), priority_only=True)
+    return {"summary": m, "priority": mp, "switches": sched.switches,
+            "sched": sched}
+
+
+def csv_row(bench: str, name: str, value, derived: str = "") -> str:
+    return f"{bench},{name},{value},{derived}"

@@ -1,0 +1,46 @@
+"""Fig. 10: ultra-long-context stress at each model's maximum supported
+context (8K / 128K / 1M in the paper): peak prompt throughput, TTFT, ILT
+for static TP, static DP, and flying."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run_workload
+from repro.serving.workload import WorkloadSpec
+
+STRESS = {
+    "Llama-3-70B": ("paper-llama3-70b", 8192),
+    "GPT-OSS-120B": ("paper-gpt-oss-120b", 131072),
+    "Nemotron-8B": ("paper-nemotron-8b", 1048576),
+}
+
+
+def run(n_requests: int = 60, seed: int = 14):
+    rows = []
+    for label, (arch, ctx) in STRESS.items():
+        spec = WorkloadSpec(
+            n_requests=n_requests, seed=seed,
+            prompt_range=(ctx, ctx + 1), output_range=(64, 128),
+            low_rate=(0.2, 0.5), burst_rate=(0.5, 1.0),
+            phase_seconds=120.0)
+        for system in ("static-DP", "static-TP", "flying"):
+            out = run_workload(arch, system, spec)
+            if out is None:
+                continue
+            m = out["summary"]
+            done = sum(1 for r in out["sched"].pool.all.values()
+                       if r.state == "done")
+            tag = f"{label}@{ctx}/{system}"
+            rows.append(csv_row("fig10", f"{tag}/done",
+                                f"{done}/{n_requests}"))
+            rows.append(csv_row("fig10", f"{tag}/mean_ttft_s",
+                                f"{m.mean_ttft:.3f}"))
+            rows.append(csv_row("fig10", f"{tag}/mean_ilt_ms",
+                                f"{m.mean_ilt * 1e3:.2f}"))
+            rows.append(csv_row(
+                "fig10", f"{tag}/prompt_throughput_tok_s",
+                f"{done * ctx / max(m.makespan, 1e-9):.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,40 @@
+"""Fig. 8: end-to-end under bursty traffic — in-flight concurrency,
+P90 TTFT, queue time; three paper models x four systems."""
+from __future__ import annotations
+
+from benchmarks.common import PAPER_MODELS, SYSTEMS, csv_row, run_workload
+from repro.serving.workload import WorkloadSpec
+
+
+def run(n_requests: int = 1200, seed: int = 11):
+    rows = []
+    spec = WorkloadSpec(n_requests=n_requests, phase_seconds=25.0,
+                        seed=seed)
+    results = {}
+    for label, arch in PAPER_MODELS.items():
+        for system in SYSTEMS:
+            out = run_workload(arch, system, spec)
+            if out is None:
+                continue
+            m = out["summary"]
+            results[(label, system)] = m
+            rows.append(csv_row("fig8", f"{label}/{system}/p90_ttft_s",
+                                f"{m.p90_ttft:.4f}"))
+            rows.append(csv_row("fig8", f"{label}/{system}/mean_ttft_s",
+                                f"{m.mean_ttft:.4f}"))
+            rows.append(csv_row("fig8", f"{label}/{system}/p90_queue_s",
+                                f"{m.p90_queue:.4f}"))
+    # headline speedups vs static TP (paper: 1.66x / 4.68x / 4.79x)
+    for label in PAPER_MODELS:
+        tp = results.get((label, "static-TP"))
+        fly = results.get((label, "flying"))
+        if tp and fly and fly.p90_ttft > 0:
+            rows.append(csv_row("fig8", f"{label}/speedup_p90_ttft_vs_TP",
+                                f"{tp.p90_ttft / fly.p90_ttft:.2f}",
+                                "paper: 1.66-4.79x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,86 @@
+"""Kernel microbenchmarks: ``name,us_per_call,derived`` rows.
+
+us_per_call: wall-clock of the jnp ORACLE on this CPU host (the Pallas
+kernels are TPU-targeted; interpret mode is a correctness tool, not a
+timing tool). derived: analytic TPU-v5e roofline time for the kernel's
+working set (HBM-bound terms) — what the §Roofline table uses.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.serving.hardware import V5E
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.key(0)
+
+    # paged decode attention: B=8, H=32/16=2 local heads, 32k ctx
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    B, H, KV, hd, page, nblk = 8, 2, 1, 128, 16, 2048
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (nblk, page, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (nblk, page, KV, hd), jnp.float32)
+    bt = jax.random.randint(ks[3], (B, nblk // B), 0, nblk)
+    cl = jnp.full((B,), (nblk // B) * page, jnp.int32)
+    us = _time(jax.jit(lambda *a: paged_attention_ref(*a)), q, kp, vp, bt,
+               cl)
+    hbm = 2 * nblk * page * KV * hd * 2  # k+v pool bytes (bf16 target)
+    rows.append(csv_row("kernels", "paged_attention/8x32k_ref", f"{us:.0f}",
+                        f"tpu_roofline_us={hbm / V5E.hbm_bw * 1e6:.0f}"))
+
+    # flash prefill: 2 x 2048 x 4 heads
+    from repro.kernels.flash_prefill.ref import flash_prefill_ref
+    B2, T, H2, hd2 = 2, 2048, 4, 128
+    q2 = jax.random.normal(ks[0], (B2, T, H2, hd2), jnp.float32)
+    k2 = jax.random.normal(ks[1], (B2, T, H2, hd2), jnp.float32)
+    v2 = jax.random.normal(ks[2], (B2, T, H2, hd2), jnp.float32)
+    us = _time(jax.jit(lambda *a: flash_prefill_ref(*a)), q2, k2, v2)
+    fl = 4 * B2 * H2 * T * T / 2 * hd2
+    rows.append(csv_row("kernels", "flash_prefill/2x2048_ref", f"{us:.0f}",
+                        f"tpu_roofline_us={fl / V5E.peak_flops_bf16 * 1e6:.1f}"))
+
+    # ssd scan: 2 x 2048 x 8 heads
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    Bs, Ts, Hs, hds, S = 2, 2048, 8, 64, 128
+    x = jax.random.normal(ks[0], (Bs, Ts, Hs, hds), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bs, Ts, Hs)))
+    A = -jnp.exp(jax.random.normal(ks[2], (Hs,)))
+    Bm = jax.random.normal(ks[3], (Bs, Ts, S)) * 0.5
+    Cm = jax.random.normal(ks[4], (Bs, Ts, S)) * 0.5
+    h0 = jnp.zeros((Bs, Hs, hds, S))
+    us = _time(jax.jit(lambda *a: ssd_scan_ref(*a)), x, dt, A, Bm, Cm, h0)
+    fl = 6 * Bs * Ts * Hs * hds * S
+    rows.append(csv_row("kernels", "ssd_scan/2x2048_ref", f"{us:.0f}",
+                        f"tpu_roofline_us={fl / V5E.peak_flops_bf16 * 1e6:.2f}"))
+
+    # rglru scan: 2 x 2048 x 1024 channels
+    from repro.kernels.rglru_scan.ref import rglru_scan_ref
+    Br, Tr, Cr = 2, 2048, 1024
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (Br, Tr, Cr)))
+    g = jax.random.normal(ks[1], (Br, Tr, Cr)) * 0.5
+    us = _time(jax.jit(lambda *a_: rglru_scan_ref(*a_)), a, g,
+               jnp.zeros((Br, Cr)))
+    hbm = 3 * Br * Tr * Cr * 2
+    rows.append(csv_row("kernels", "rglru_scan/2x2048_ref", f"{us:.0f}",
+                        f"tpu_roofline_us={hbm / V5E.hbm_bw * 1e6:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

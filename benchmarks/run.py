@@ -1,0 +1,72 @@
+"""Benchmark suite entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``benchmark,metric,value,derived`` CSV rows (derived = the paper's
+corresponding number where applicable). Roofline terms per (arch x shape)
+come from the dry-run artifacts (results/dryrun/) and are appended as
+the 'roofline' benchmark when present.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller workloads (CI)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    n = 300 if args.fast else 1200
+
+    from benchmarks import (fig8_bursty, fig9_tpot, fig10_longcontext,
+                            kernels_micro, table1_priority,
+                            table2_context_switch)
+    suites = {
+        "fig8": lambda: fig8_bursty.run(n_requests=n),
+        "fig9": lambda: fig9_tpot.run(n_requests=n),
+        "table1": lambda: table1_priority.run(n_requests=max(n // 2, 100)),
+        "table2": table2_context_switch.run,
+        "fig10": lambda: fig10_longcontext.run(
+            n_requests=20 if args.fast else 60),
+        "kernels": kernels_micro.run,
+    }
+    print("benchmark,metric,value,derived")
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        for row in fn():
+            print(row)
+        print(f"{name},elapsed_s,{time.time() - t0:.1f},")
+
+    # roofline rows from dry-run artifacts
+    res_dir = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "dryrun")
+    for path in sorted(glob.glob(os.path.join(res_dir, "*__pod1.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if "roofline" not in r:
+            continue
+        ro = r["roofline"]
+        tag = f"{r['arch']}/{r['shape']}"
+        print(f"roofline,{tag}/t_compute_ms,{ro['t_compute_s']*1e3:.3f},")
+        print(f"roofline,{tag}/t_memory_ms,{ro['t_memory_s']*1e3:.3f},")
+        print(f"roofline,{tag}/t_collective_ms,"
+              f"{ro['t_collective_s']*1e3:.3f},")
+        print(f"roofline,{tag}/dominant,{ro['dominant']},")
+        print(f"roofline,{tag}/useful_flops_ratio,"
+              f"{ro['useful_flops_ratio']:.3f},")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Table 1: Llama-70B under a mixed-priority workload (use case 2):
+mean TPOT/TTFT for priority and for all requests + peak throughput,
+static TP vs static DP vs flying (hard preempt)."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, run_workload
+from repro.serving.workload import WorkloadSpec
+
+
+def run(n_requests: int = 800, seed: int = 13):
+    rows = []
+    spec = WorkloadSpec(
+        n_requests=n_requests, seed=seed, priority_frac=0.15,
+        low_rate=(3.0, 5.0), burst_rate=(3.0, 5.0),  # paper: 3-5 req/s
+        phase_seconds=30.0)
+    for system in ("static-TP", "static-DP", "flying"):
+        out = run_workload("paper-llama3-70b", system, spec,
+                           strategy="hard")
+        m, mp = out["summary"], out["priority"]
+        tag = f"table1/{system}"
+        rows.append(csv_row("table1", f"{tag}/mean_tpot_priority_ms",
+                            f"{mp.median_tpot * 1e3:.1f}"))
+        rows.append(csv_row("table1", f"{tag}/mean_tpot_all_ms",
+                            f"{m.median_tpot * 1e3:.1f}"))
+        rows.append(csv_row("table1", f"{tag}/mean_ttft_priority_ms",
+                            f"{mp.mean_ttft * 1e3:.1f}"))
+        rows.append(csv_row("table1", f"{tag}/mean_ttft_all_ms",
+                            f"{m.mean_ttft * 1e3:.1f}"))
+        rows.append(csv_row("table1", f"{tag}/peak_throughput_tok_s",
+                            f"{m.peak_throughput:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

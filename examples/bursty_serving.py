@@ -1,0 +1,51 @@
+"""Use case 1 (load adaptation): production-scale simulation of a bursty
+trace on the v5e pod cost model — static DP vs static TP vs FLYING
+SERVING, Fig. 8 style.
+
+    PYTHONPATH=src python examples/bursty_serving.py [arch]
+"""
+import copy
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.policy import FlyingPolicy
+from repro.core.scheduler import DynamicScheduler, SchedulerConfig
+from repro.serving.metrics import summarize
+from repro.serving.simulator import CostModel, SimBackend
+from repro.serving.workload import WorkloadSpec, generate
+
+
+def main(arch="llama3-8b"):
+    cfg = get_config(arch)
+    plan = ParallelPlan(engine_rows=cfg.engine_rows, tp_base=16,
+                        data_rows=16)
+    geom = PoolGeometry(cfg, plan, num_blocks=60000, block_base=16)
+    spec = WorkloadSpec(n_requests=600, phase_seconds=25.0, seed=42)
+    reqs = generate(spec)
+    print(f"{arch} on a 256-chip pod "
+          f"({plan.dp_engines} engines x {plan.engine_rows}x16)")
+    print(f"{'system':16s} {'p90 TTFT':>10s} {'p90 queue':>10s} "
+          f"{'TPOT':>8s} {'peak tok/s':>11s} {'switches':>8s}")
+    for name, fixed in (("static-DP", 1),
+                        ("static-TP", plan.valid_merges()[-1]),
+                        ("flying", None)):
+        be = SimBackend(CostModel(cfg, plan))
+        s = DynamicScheduler(plan, geom, be,
+                             SchedulerConfig(strategy="hard",
+                                             fixed_merge=fixed),
+                             policy=None if fixed else FlyingPolicy())
+        for r in reqs:
+            s.submit(copy.deepcopy(r))
+        s.run()
+        m = summarize(s.pool.all.values())
+        print(f"{name:16s} {m.p90_ttft:9.3f}s {m.p90_queue:9.3f}s "
+              f"{m.median_tpot * 1e3:6.1f}ms {m.peak_throughput:11.0f} "
+              f"{s.switches:8d}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,234 @@
+"""KV Cache Adaptor (paper §4.2): one physical block pool, mode-dependent
+*logical* interpretation.
+
+Physical invariant (paper Eq. 2): per-device block bytes
+``M_block = B_base * kvh_dev * head_dim * P_size`` never change. Under a
+merge-m TP group the per-device head slice shrinks to ``kvh_dev/m`` so
+token capacity grows ``B(m) = m * B_base`` (paper Eq. 3 / Alg. 1 step 4:
+``B_req = B_base*N_eng``, ``H_req = H_base/N_eng``). Device pools are
+stored FLAT ``[num_blocks, block_elems]``; each compiled mode *views*
+them ``[num_blocks, B(m), kvh_dev/m, hd]`` — a metadata reshape, no
+reallocation, no migration.
+
+The host side is the ``LogicalTable``: request -> (mode_tag, block_ids,
+length). Blocks are only ever read under the mode that wrote them
+(Soft-Preempt recomputes, Hard-Preempt suspends DP state untouched — the
+same guarantee the paper relies on). Allocation is a free-list over
+physical block ids shared by all modes.
+
+Arch caveats (DESIGN.md §5): MLA's compressed cache and MQA's single KV
+head cannot head-shard, so their view (and capacity) is mode-invariant —
+``capacity_scales`` reports whether Eq. 3 applies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.modes import FlyingMode, ParallelPlan
+from repro.core.views import pow2_shards
+
+
+@dataclass(frozen=True)
+class PoolGeometry:
+    """Static geometry of one architecture's per-device pool.
+
+    Two layouts:
+      - 'head': the paper's scheme — pool holds this device's KV-head
+        slice for ALL tokens of its engine; capacity scales with merge
+        only while KV heads can split further (Eq. 3's regime).
+      - 'striped' (beyond-paper, DESIGN.md/EXPERIMENTS §Perf): the pool
+        holds ALL KV heads for every tp-th token (context parallelism).
+        Capacity then scales with the FULL TP degree for any architecture
+        — including MLA's compressed cache and MQA — restoring Eq. 3
+        universally on wide TPU tiles.
+    """
+    cfg: ArchConfig
+    plan: ParallelPlan
+    num_blocks: int
+    block_base: int  # B_base: tokens/block in the base (merge=1) mode
+    layout: str = "head"  # 'head' | 'striped'
+
+    @property
+    def storage_tp(self) -> int:
+        return self.plan.engine_rows * self.plan.tp_base
+
+    def stripe_factor(self, merge: int) -> int:
+        return merge * self.plan.engine_rows * self.plan.tp_base
+
+    @property
+    def kvh_dev_base(self) -> int:
+        """KV heads per device in the base mode (>=1; replication below)."""
+        kv = self.cfg.num_kv_heads
+        if self.cfg.mla is not None or kv == 0:
+            return 1
+        return kv // pow2_shards(kv, self.storage_tp)
+
+    @property
+    def token_width(self) -> int:
+        """Per-token per-device elements in base mode (one of k/v pool)."""
+        cfg = self.cfg
+        if cfg.mla is not None:
+            return cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        kv = cfg.num_kv_heads
+        if self.layout == "striped":
+            return kv * cfg.resolved_head_dim  # all heads, strided tokens
+        kvh_dev = kv // pow2_shards(kv, self.storage_tp)
+        return kvh_dev * cfg.resolved_head_dim
+
+    @property
+    def block_elems(self) -> int:
+        """The invariant: physical elements per block per device."""
+        return self.block_base * self.token_width
+
+    # ---- mode-dependent logical view -----------------------------------
+    def head_split(self, merge: int) -> int:
+        """How much of `merge` can be absorbed by head-splitting."""
+        cfg = self.cfg
+        if cfg.mla is not None or cfg.num_kv_heads == 0:
+            return 1
+        kvh = self.kvh_dev_base
+        return min(1 << _v2(kvh), merge)
+
+    def capacity(self, merge: int) -> int:
+        """B(m): effective tokens per block under merge m (paper Eq. 3;
+        striped layout generalizes it to the full TP degree)."""
+        if self.layout == "striped":
+            return self.block_base * self.stripe_factor(merge)
+        return self.block_base * self.head_split(merge)
+
+    def capacity_scales(self, merge: int) -> bool:
+        if self.layout == "striped":
+            return True
+        return self.head_split(merge) == merge
+
+    def view_shape(self, merge: int) -> Tuple[int, ...]:
+        """Logical per-device pool view for a compiled mode."""
+        cfg = self.cfg
+        if cfg.mla is not None:
+            return (self.num_blocks, self.block_base, self.token_width)
+        hd = cfg.resolved_head_dim
+        if self.layout == "striped":
+            return (self.num_blocks, self.block_base, cfg.num_kv_heads, hd)
+        hs = self.head_split(merge)
+        return (self.num_blocks, self.block_base * hs,
+                self.kvh_dev_base // hs, hd)
+
+    def view(self, flat_pool, merge: int):
+        """Reinterpret the flat physical pool for a mode — pure reshape."""
+        return flat_pool.reshape(flat_pool.shape[:-2] + self.view_shape(merge))
+
+    def flat_shape(self) -> Tuple[int, int]:
+        return (self.num_blocks, self.block_elems)
+
+
+def _v2(n: int) -> int:
+    k = 0
+    while n > 0 and n % 2 == 0:
+        n //= 2
+        k += 1
+    return k
+
+
+# ---------------------------------------------------------------------------
+# host-side logical table + allocator
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RequestKV:
+    mode_tag: int                  # merge the blocks were written under
+    block_ids: List[int] = field(default_factory=list)
+    length: int = 0                # tokens currently cached
+
+
+class KVCacheAdaptor:
+    """Constant-time metadata remapping across DP/TP layouts (paper §4.2.2).
+
+    One physical free list; per-request logical entries carry the mode tag
+    and effective block capacity. ``switch_mode`` is O(1): it only changes
+    the capacity used for FUTURE allocations.
+    """
+
+    def __init__(self, geom: PoolGeometry):
+        self.geom = geom
+        # last block reserved as the parked-write scratch slot
+        self.free: List[int] = list(range(geom.num_blocks - 1))
+        self.table: Dict[str, RequestKV] = {}
+        self.merge = 1
+
+    # -- O(1) mode switch --------------------------------------------------
+    def switch_mode(self, merge: int) -> None:
+        self.merge = merge
+
+    @property
+    def capacity(self) -> int:
+        return self.geom.capacity(self.merge)
+
+    # -- allocation ----------------------------------------------------------
+    def free_blocks(self) -> int:
+        return len(self.free)
+
+    def can_allocate(self, n_tokens: int, merge: Optional[int] = None) -> bool:
+        cap = self.geom.capacity(merge if merge is not None else self.merge)
+        return len(self.free) >= -(-n_tokens // cap)
+
+    def allocate(self, req_id: str, n_tokens: int) -> RequestKV:
+        """Alg. 1 step 4: KVCacheMgr.Allocate(req, B_req, H_req)."""
+        cap = self.capacity
+        entry = self.table.get(req_id)
+        if entry is None:
+            entry = RequestKV(mode_tag=self.merge)
+            self.table[req_id] = entry
+        assert entry.mode_tag == self.merge, \
+            "blocks must be read under the mode that wrote them"
+        need = -(-(entry.length + n_tokens) // cap) - len(entry.block_ids)
+        if need > len(self.free):
+            raise MemoryError(f"KV pool exhausted for {req_id}")
+        for _ in range(max(need, 0)):
+            entry.block_ids.append(self.free.pop())
+        return entry
+
+    def append_slots(self, req_id: str, n_tokens: int) -> np.ndarray:
+        """Flat device slots for the next n_tokens (allocating as needed).
+        Slot = block_id * capacity + offset, matching the mode view."""
+        entry = self.allocate(req_id, n_tokens)
+        cap = self.capacity
+        pos = entry.length + np.arange(n_tokens)
+        blocks = np.asarray(entry.block_ids)[pos // cap]
+        slots = blocks * cap + pos % cap
+        entry.length += n_tokens
+        return slots.astype(np.int32)
+
+    def block_table(self, req_id: str, max_blocks: int) -> np.ndarray:
+        ids = self.table[req_id].block_ids
+        out = np.zeros((max_blocks,), np.int32)
+        out[: len(ids)] = ids
+        return out
+
+    def release(self, req_id: str) -> None:
+        entry = self.table.pop(req_id, None)
+        if entry:
+            self.free.extend(entry.block_ids)
+
+    def drop_for_recompute(self, req_id: str) -> int:
+        """Soft-Preempt: discard DP-layout blocks; the request re-prefills
+        under the TP layout. Returns tokens to recompute."""
+        entry = self.table.pop(req_id, None)
+        if not entry:
+            return 0
+        self.free.extend(entry.block_ids)
+        return entry.length
+
+    # -- capacity accounting (paper §6.4 Table 2) -----------------------------
+    def max_context_tokens(self, merge: int) -> int:
+        """Max context a single request can hold when merging m engines:
+        the TP group pools the per-engine block budget."""
+        cap = self.geom.capacity(merge)
+        scale = merge if self.geom.capacity_scales(merge) else 1
+        del scale
+        # merging m engines gives the request m engines' pools: blocks are
+        # symmetric per device, so the request sees num_blocks * B(m)
+        return (self.geom.num_blocks - 1) * cap

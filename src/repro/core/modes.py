@@ -1,0 +1,99 @@
+"""Flying-serving parallel modes.
+
+A *ParallelPlan* fixes the per-architecture engine tiling of the pod mesh
+(DESIGN.md §4): the pod's ``(data=16, model=16)`` grid is factored into
+``dp_engines`` independent engine tiles of ``engine_rows x tp_base``
+devices. A *FlyingMode* is one runtime configuration: ``merge`` adjacent
+engines bound into a TP group (the paper's bind primitive). merge=1 is
+pure DP-of-engines; merge=dp_engines is full TP.
+
+Mode meshes reinterpret the SAME device order, so arrays placed under one
+mode's sharding are physically identical under every other mode's — the
+zero-copy invariant the Model Weights Manager relies on (verified by
+tests/test_zero_copy.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+MODE_AXES = ("pod", "dp", "merge", "ed", "model")
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    engine_rows: int = 1     # r: data-axis rows per engine tile
+    tp_base: int = 16        # model axis extent
+    data_rows: int = 16      # data axis extent per pod
+    pods: int = 1
+
+    @property
+    def dp_engines(self) -> int:
+        return self.data_rows // self.engine_rows
+
+    @property
+    def devices_per_pod(self) -> int:
+        return self.data_rows * self.tp_base
+
+    def valid_merges(self) -> Tuple[int, ...]:
+        """Topology-aware group identification (paper §4.3): contiguous
+        power-of-two merges only — linear, not exponential, enumeration."""
+        ms = []
+        m = 1
+        while m <= self.dp_engines:
+            ms.append(m)
+            m *= 2
+        return tuple(ms)
+
+
+@dataclass(frozen=True)
+class FlyingMode:
+    plan: ParallelPlan
+    merge: int
+
+    def __post_init__(self):
+        if self.merge not in self.plan.valid_merges():
+            raise ValueError(
+                f"merge={self.merge} not in {self.plan.valid_merges()}")
+
+    @property
+    def dp(self) -> int:
+        """Independent engine groups after merging."""
+        return self.plan.dp_engines // self.merge
+
+    @property
+    def tp(self) -> int:
+        """Effective TP degree of a merged group."""
+        return self.merge * self.plan.engine_rows * self.plan.tp_base
+
+    @property
+    def mesh_shape(self) -> Tuple[int, ...]:
+        return (self.plan.pods, self.dp, self.merge, self.plan.engine_rows,
+                self.plan.tp_base)
+
+    def describe(self) -> str:
+        return (f"{self.plan.pods}pod x {self.dp}DP x {self.tp}TP "
+                f"(merge={self.merge}, tile={self.plan.engine_rows}x"
+                f"{self.plan.tp_base})")
+
+
+def mode_mesh(mode: FlyingMode, devices: Optional[Sequence] = None
+              ) -> jax.sharding.Mesh:
+    """Mesh for one mode. Device order is ALWAYS the flat jax.devices()
+    order reshaped row-major, identical across modes -> reinterpreting an
+    array's sharding between mode meshes moves no bytes."""
+    if devices is None:
+        devices = jax.devices()
+    n = mode.plan.pods * mode.plan.devices_per_pod
+    devs = np.asarray(devices[:n]).reshape(mode.mesh_shape)
+    return jax.sharding.Mesh(devs, MODE_AXES)
+
+
+def plan_for(cfg, pods: int = 1, data_rows: int = 16, tp_base: int = 16
+             ) -> ParallelPlan:
+    return ParallelPlan(engine_rows=cfg.engine_rows, tp_base=tp_base,
+                        data_rows=data_rows, pods=pods)

@@ -1,0 +1,71 @@
+"""Workload-aware mode policy (paper §2.3 / §3: the three use cases).
+
+decide() returns the target merge for the next step:
+  UC2 (priority): any high-priority request present -> bind a TP group
+      wide enough for its latency SLO (paired with HARD preempt).
+  UC3 (long context): a queued request whose context exceeds the current
+      mode's per-request KV capacity -> merge until it fits (pooled KV).
+  UC1 (load): queue builds -> dissolve to DP (merge=1) to drain; idle ->
+      merge up for latency. Hysteresis avoids flapping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.task_pool import PRIORITY_HIGH
+
+
+@dataclass
+class FlyingPolicy:
+    priority_merge: int = 0        # 0 -> widest
+    dwell_s: float = 2.0           # min seconds between load-driven switches
+
+    def __post_init__(self):
+        self._last_switch_t = -1e9
+        self._last = 1
+
+    def decide(self, sched) -> int:
+        plan = sched.plan
+        widest = plan.valid_merges()[-1]
+        cur = sched.merge
+        arrived = sched.waiting + sched.pool.peek_arrived(sched.now)
+        running = sched.running
+
+        # UC2: priority traffic -> TP for latency (immediate, no dwell).
+        # Bounded merge: the paper binds a SUBSET of engines per priority
+        # request (Fig. 3); with uniform modes we approximate by merging
+        # just enough for near-TP latency while keeping several DP groups
+        # for background traffic (DESIGN.md §2.5 simplification).
+        if any(r.priority == PRIORITY_HIGH and not r.done
+               for r in arrived + running):
+            return self.priority_merge or min(4, widest)
+
+        # UC3: long-context request that cannot fit at current mode
+        for r in arrived:
+            need = r.prompt_len + r.output_len
+            if not sched._adaptor(0).can_allocate(need):
+                m = cur
+                while m < widest and \
+                        sched.geom.capacity(m) * (sched.geom.num_blocks - 1) \
+                        < need:
+                    m *= 2
+                if m > cur:
+                    return m
+                return max(min(cur * 2, widest), cur)
+
+        # UC1: load adaptation with a time dwell (avoid flapping: each
+        # switch pauses/recomputes in-flight state)
+        if sched.now - self._last_switch_t < self.dwell_s:
+            return cur
+        depth = len([r for r in arrived if r.state == "queued"])
+        target = cur
+        if depth >= max(2 * (plan.dp_engines // cur), 4):
+            target = 1
+        elif depth == 0 and not running and not sched.paused:
+            # fully idle: pre-bind a wide TP group so the next arrival
+            # gets TP latency (merging around live DP requests would
+            # pause them under uniform modes)
+            target = widest
+        if target != cur:
+            self._last_switch_t = sched.now
+        return target

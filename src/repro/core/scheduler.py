@@ -1,0 +1,326 @@
+"""Dynamic Scheduler (paper §5, Algorithm 1).
+
+One scheduling iteration = one step-aligned collective step across all
+engine groups (vLLM-v1-style DP coordination — the paper's control plane
+heartbeat becomes the step boundary in JAX's single-controller model).
+The scheduler is execution-agnostic: a ``Backend`` either simulates step
+durations from the roofline cost model (benchmarks) or runs the real
+compiled executables (examples/tests).
+
+Mode switching strategies (paper §5.2, Fig. 7):
+  - SEQUENTIAL: drain every running request before switching (stragglers
+    idle the fleet).
+  - SOFT preempt: while draining, idle engines speculatively run the
+    TP-designated request in DP mode; on switch its KV is dropped and
+    re-prefilled under the TP layout (compute-bound, parallel), keeping
+    the tokens generated meanwhile.
+  - HARD preempt: switch at the next step boundary; incompatible running
+    requests PAUSE — their blocks stay physically resident with their
+    mode tag (KV Cache Adaptor §4.2) and resume without recomputation.
+
+Invariants (paper §5.3): all engines in a TP step observe the same
+request order (single worklist), and transitions happen only at step
+boundaries (safe points) — deadlock-free by construction here, since
+collectives exist only inside per-mode compiled programs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+
+from repro.core.kv_adaptor import KVCacheAdaptor, PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.task_pool import (PRIORITY_HIGH, Request, TaskPool)
+
+SEQUENTIAL = "sequential"
+SOFT = "soft"
+HARD = "hard"
+
+
+class Backend(Protocol):
+    """Execution substrate: simulate or really execute one step."""
+
+    def prefill(self, reqs: Sequence[Request], merge: int,
+                chunk_tokens: int) -> float:
+        """Run (or simulate) prefill of `chunk_tokens` for each req;
+        returns step duration in seconds."""
+
+    def decode(self, reqs: Sequence[Request], merge: int) -> float:
+        """One decode token for every req; returns duration."""
+
+    def switch(self, old: int, new: int) -> float:
+        """Mode transition cost (flying: executable lookup; static
+        baselines: restart)."""
+
+
+@dataclass
+class SchedulerConfig:
+    strategy: str = HARD
+    max_batch_per_group: int = 32
+    prefill_chunk: int = 512  # Sarathi-style small chunks keep TPOT smooth
+    # policy thresholds (use case 1)
+    queue_high: int = 8          # per engine -> go DP
+    queue_low: int = 1
+    latency_merge: int = 0       # 0 -> max available merge at low load
+    fixed_merge: Optional[int] = None  # static baselines pin the mode
+
+
+@dataclass
+class StepLog:
+    t: float
+    merge: int
+    phase: str
+    n_running: int
+    n_queued: int
+    switched: bool = False
+
+
+class DynamicScheduler:
+    """Algorithm 1 event loop over K DP engines."""
+
+    def __init__(self, plan: ParallelPlan, geom: PoolGeometry,
+                 backend: Backend, cfg: SchedulerConfig,
+                 policy=None):
+        self.plan = plan
+        self.geom = geom
+        self.backend = backend
+        self.cfg = cfg
+        self.pool = TaskPool()
+        self.merge = cfg.fixed_merge or 1
+        self.pending_merge: Optional[int] = None
+        self.now = 0.0
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []   # decoding under current mode
+        self.paused: List[Request] = []    # hard-preempted (other mode tag)
+        # one adaptor per engine-tile group; symmetric allocation
+        n_groups = plan.dp_engines
+        self.adaptors = [KVCacheAdaptor(geom) for _ in range(n_groups)]
+        self.policy = policy
+        self.log: List[StepLog] = []
+        self.switches = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def groups(self) -> int:
+        return self.plan.dp_engines // self.merge
+
+    def _adaptor(self, lead_engine: int) -> KVCacheAdaptor:
+        """Requests record their ABSOLUTE lead engine id (stable across
+        merges); merged groups share the lead engine's table."""
+        return self.adaptors[lead_engine]
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.pool.submit(req)
+
+    def run(self, until_drained: bool = True, max_steps: int = 2_000_000,
+            t_end: Optional[float] = None) -> None:
+        steps = 0
+        while steps < max_steps:
+            steps += 1
+            progressed = self.step()
+            if t_end is not None and self.now >= t_end:
+                break
+            if not progressed:
+                nxt = self.pool.next_arrival()
+                if nxt is None:
+                    if until_drained and not (self.waiting or self.running
+                                              or self.paused):
+                        break
+                    if not (self.waiting or self.running or self.paused):
+                        break
+                    # nothing runnable but work exists -> should not happen
+                    break
+                self.now = max(self.now, nxt)
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One Algorithm-1 iteration. Returns False if idle."""
+        # ① Input Processing
+        self.waiting.extend(self.pool.pull(self.now, 1 << 30))
+        # ② Global Synchronization: one agreed order
+        self.waiting.sort(key=lambda r: (-r.priority, r.arrival))
+
+        # ③ Mode Determination (policy layer; Flag_SetTP / Flag_ResetTP)
+        target = self.merge
+        if self.cfg.fixed_merge is None and self.policy is not None:
+            target = self.policy.decide(self)
+        switched = False
+        if target != self.merge:
+            switched = self._transition(target)
+
+        # ④/⑥ KV parameterization + execution
+        progressed = self._execute_one_step()
+        if not progressed and self.paused and self.pending_merge is None:
+            # nothing runnable under the current mode but paused requests
+            # exist: bind back to their layout's mode and resume them
+            if self._transition(self._tag(self.paused[0])):
+                progressed = self._execute_one_step()
+        if not (progressed or switched):
+            return False
+        return True
+
+    # ------------------------------------------------------------------
+    def _incompatible(self) -> List[Request]:
+        """Requests whose KV layout is bound to the current mode: running
+        decodes + partially prefilled admissions."""
+        return list(self.running) + [r for r in self.waiting
+                                     if r.prefilled > 0]
+
+    def _transition(self, target: int) -> bool:
+        strat = self.cfg.strategy
+        incompatible = self._incompatible()
+        if strat == SEQUENTIAL:
+            self.pending_merge = target
+            if incompatible:
+                return False  # wait for full drain (stragglers idle)
+            return self._apply_switch(target)
+        if strat == SOFT:
+            self.pending_merge = target
+            if incompatible:
+                # idle engines speculatively serve waiting TP requests in
+                # DP mode (they'll recompute later) — mark them
+                for r in self.waiting:
+                    if r.mode == "tp" and r.state == "queued":
+                        r.state = "spec_dp"
+                return False
+            # drain complete: recompute any speculative requests' KV
+            for r in list(self.running) + self.waiting:
+                if r.state == "spec_dp":
+                    g = r.engine_group
+                    if g >= 0:
+                        dropped = self._adaptor(g).drop_for_recompute(
+                            r.req_id)
+                        r.prefilled = 0
+                        r.state = "queued"
+                        if r in self.running:
+                            self.running.remove(r)
+                            self.waiting.insert(0, r)
+            return self._apply_switch(target)
+        # HARD: immediate switch at this (safe) step boundary
+        for r in incompatible:
+            r.state = "paused"
+            self.paused.append(r)
+            if r in self.running:
+                self.running.remove(r)
+            if r in self.waiting:
+                self.waiting.remove(r)
+        return self._apply_switch(target)
+
+    def _apply_switch(self, target: int) -> bool:
+        dt = self.backend.switch(self.merge, target)
+        self.now += dt
+        self.merge = target
+        self.pending_merge = None
+        self.switches += 1
+        for a in self.adaptors:
+            a.switch_mode(target)
+        # resume paused requests whose layout matches the new mode — no
+        # recomputation needed (KV Cache Adaptor keeps the blocks valid)
+        back = [r for r in self.paused if self._tag(r) == target]
+        for r in back:
+            self.paused.remove(r)
+            if r.prefilled < r.prompt_len:
+                r.state = "queued"
+                self.waiting.insert(0, r)
+            else:
+                r.state = "running"
+                self.running.append(r)
+        return True
+
+    def _tag(self, r: Request) -> int:
+        g = r.engine_group
+        if g < 0:
+            return self.merge
+        entry = self._entry(r)
+        return entry.mode_tag if entry else self.merge
+
+    def _entry(self, r: Request):
+        for a in self.adaptors:
+            if r.req_id in a.table:
+                return a.table[r.req_id]
+        return None
+
+    # ------------------------------------------------------------------
+    def _execute_one_step(self) -> bool:
+        # admissions: fill groups with queued requests needing prefill
+        admit: List[Request] = []
+        group_load = [0] * self.groups
+        for r in self.running:
+            group_load[r.engine_group // self.merge] += 1
+        for r in list(self.waiting):
+            if r.state not in ("queued", "spec_dp"):
+                continue
+            # pick least-loaded group with KV room
+            order = sorted(range(self.groups), key=lambda g: group_load[g])
+            placed = False
+            for g in order:
+                if group_load[g] >= self.cfg.max_batch_per_group:
+                    continue
+                ad = self._adaptor(g * self.merge)
+                if ad.can_allocate(r.prompt_len + r.output_len):
+                    r.engine_group = g * self.merge  # absolute lead engine
+                    group_load[g] += 1
+                    admit.append(r)
+                    placed = True
+                    break
+            if not placed:
+                break  # head-of-line blocking: wait for memory
+        # ⑥ execution: Sarathi-style mixed step — chunked prefills
+        # piggybacked with the decode batch (paper §1: chunked prefill and
+        # continuous batching preserved), so decode cadence never starves
+        # behind admissions.
+        progressed = False
+        prefills = [r for r in admit if r.prefilled < r.prompt_len]
+        if prefills:
+            for r in prefills:
+                if r.sched_t is None:
+                    r.sched_t = self.now
+                chunk = min(self.cfg.prefill_chunk,
+                            r.prompt_len - r.prefilled)
+                self._adaptor(r.engine_group).append_slots(r.req_id, chunk)
+                r.prefilled += chunk
+            dt = self.backend.prefill(prefills, self.merge,
+                                      self.cfg.prefill_chunk)
+            self.now += dt
+            for r in prefills:
+                if r.prefilled >= r.prompt_len:
+                    r.state = "running" if r.state != "spec_dp" else "spec_dp"
+                    self.waiting.remove(r)
+                    self.running.append(r)
+                    # first token comes out of the final prefill step
+                    r.generated += 1
+                    self._adaptor(r.engine_group).append_slots(r.req_id, 1)
+                    r.first_token_t = self.now
+                    r.token_times.append(self.now)
+            self._log("prefill")
+            progressed = True
+        if self.running:
+            dt = self.backend.decode(self.running, self.merge)
+            self.now += dt
+            done = []
+            for r in self.running:
+                r.generated += 1
+                r.token_times.append(self.now)
+                if not r.done:
+                    self._adaptor(r.engine_group).append_slots(r.req_id, 1)
+                if r.done:
+                    r.finish_t = self.now
+                    r.state = "done"
+                    done.append(r)
+            for r in done:
+                self.running.remove(r)
+                self._adaptor(r.engine_group).release(r.req_id)
+            self._log("decode")
+            # sequential/soft pending switch: retry after drain progress
+            if self.pending_merge is not None and not self._incompatible():
+                self._transition(self.pending_merge)
+            return True
+        return progressed
+
+    def _log(self, phase: str) -> None:
+        self.log.append(StepLog(
+            t=self.now, merge=self.merge, phase=phase,
+            n_running=len(self.running),
+            n_queued=len(self.waiting) + self.pool.queue_depth(self.now)))

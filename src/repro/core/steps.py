@@ -1,0 +1,195 @@
+"""Step-program builders: the SPMD programs the Communicator Pool compiles.
+
+``build_serve_step`` returns a jit-able shard_map program for one flying
+mode (merge factor). Batch layout: requests sharded over ('pod','dp');
+activations replicated within a TP group ('merge','ed','model'). Weights
+arrive in canonical storage layout (replicated over DP axes, engine-tile
+sharded) and are *activated* per-rank inside (core/views.py) — GSPMD
+cannot express storage != compute sharding, which is exactly the paper's
+zero-copy trick, hence shard_map.
+
+``build_train_step`` is the GSPMD path: plain jit with NamedShardings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import MODE_AXES, FlyingMode, mode_mesh
+from repro.core.views import TPContext, make_serving_ctx
+from repro.core.weights_manager import WeightsManager
+from repro.models.cache import DecodeBackend, PrefillBackend, TrainBackend
+from repro.models.model import Model
+from repro.models.transformer import tp_cross_entropy
+
+DP_AXES = ("pod", "dp")
+TP_AXES = ("merge", "ed", "model")
+
+
+def serving_ctx(mode: FlyingMode, cfg: ArchConfig) -> TPContext:
+    n_exp = cfg.moe.num_experts if cfg.moe else 0
+    return make_serving_ctx(mode.merge, mode.plan.engine_rows,
+                            mode.plan.tp_base, n_exp)
+
+
+# ---------------------------------------------------------------------------
+# batch specs: what the host supplies per step
+# ---------------------------------------------------------------------------
+
+def decode_batch_spec():
+    """Per-request arrays (leading dim = global decode batch)."""
+    return {
+        "tokens": P(DP_AXES, None),       # [B,1]
+        "positions": P(DP_AXES, None),    # [B,1]
+        "slots": P(DP_AXES,),             # [B]
+        "block_table": P(DP_AXES, None),  # [B, max_blocks]
+        "context_len": P(DP_AXES,),       # [B]
+    }
+
+
+def prefill_batch_spec():
+    return {
+        "tokens": P(DP_AXES, None),       # [B,T]
+        "positions": P(DP_AXES, None),
+        "slots": P(DP_AXES, None),        # [B,T]
+        "block_table": P(DP_AXES, None),
+        "prior_len": P(DP_AXES,),
+    }
+
+
+# ---------------------------------------------------------------------------
+# serve step
+# ---------------------------------------------------------------------------
+
+def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
+                     phase: str, window: Optional[int] = None,
+                     use_kernel: bool = False, chunked: bool = False):
+    """Build the shard_map step fn for (arch, mode, phase).
+
+    States layout (engine-owned): each per-layer pool leaf is stored with
+    a leading ``[pod*dp*merge]`` group axis and an ``('ed','model')``-
+    sharded head/width axis is implicit in the per-device flat pools, so
+    every device holds exactly its flat [num_blocks, block_elems] slice:
+    leaf global shape = [L, PODS*DP*MERGE, num_blocks, block_elems],
+    spec P(None, ('pod','dp','merge'), None, ('ed','model'))... For
+    simplicity and exactness we shard the flat elems dim over
+    ('ed','model') — block_elems is per-device already, so the GLOBAL
+    leaf is [L, G, num_blocks, elems*ed*model] and each device sees
+    [L, 1, num_blocks, elems]. Recurrent states: batch over DP axes,
+    feature dim over ('ed','model').
+    """
+    cfg = model.cfg
+    ctx = serving_ctx(mode, cfg)
+    mesh = mode_mesh(mode)
+    merge = mode.merge
+    model.states_as_carry = True  # §Perf A2: in-place pool updates
+
+    from repro.models.transformer import gather_vocab
+
+    striped = geom.layout == "striped"
+
+    def step(params, states, batch):
+        sts = _view_states(model, states, geom, merge, flat_to_view=True)
+        if phase == "decode" and striped:
+            from repro.models.striped import StripedDecodeBackend
+            backend = StripedDecodeBackend(
+                ctx=ctx, block_table=batch["block_table"],
+                context_len=batch["context_len"],
+                n_q_heads=cfg.num_heads, n_kv_heads=cfg.num_kv_heads,
+                window=window)
+        elif phase == "decode":
+            backend = DecodeBackend(
+                slots=batch["slots"], block_table=batch["block_table"],
+                context_len=batch["context_len"], use_kernel=use_kernel)
+        elif striped:
+            from repro.models.striped import StripedPrefillBackend
+            backend = StripedPrefillBackend(
+                ctx=ctx, block_table=batch["block_table"], window=window)
+        else:
+            backend = PrefillBackend(
+                slots=batch["slots"], prior_len=batch["prior_len"],
+                block_table=batch["block_table"], chunked=chunked)
+        logits, new_sts, _ = model.forward(
+            params, ctx, mode=phase, tokens=batch["tokens"],
+            positions=batch["positions"], backend=backend, states=sts,
+            window=window, enc_len=batch.get("enc_len"),
+            frontend_embeds=batch.get("frontend_embeds"))
+        new_states = _view_states(model, new_sts, geom, merge,
+                                  flat_to_view=False)
+        return gather_vocab(cfg, logits[:, -1], ctx), new_states
+
+    # shard_map wrapping
+    wm = WeightsManager(cfg, mode.plan)
+    pspecs = wm.partition_specs(model.param_specs())
+
+    def make_state_spec(leaf_ndim):
+        # state leaves: [n_layers, G1=pod*dp*merge, G2=ed*model, *device dims]
+        return P(None, ("pod", "dp", "merge"), ("ed", "model"),
+                 *([None] * (leaf_ndim - 3)))
+
+    def run(params, states, batch):
+        base = decode_batch_spec() if phase == "decode" \
+            else prefill_batch_spec()
+        bspecs = {k: base.get(k, P(DP_AXES, *([None] * (batch[k].ndim - 1))))
+                  for k in batch}
+        sspecs = jax.tree.map(lambda a: make_state_spec(a.ndim), states)
+        out_logits_spec = P(DP_AXES, None)
+        fn = jax.shard_map(
+            step, mesh=mesh,
+            in_specs=(pspecs, sspecs, bspecs),
+            out_specs=(out_logits_spec, sspecs),
+            check_vma=False)
+        return fn(params, states, batch)
+
+    return run, mesh, ctx
+
+
+def _view_states(model: Model, states, geom: PoolGeometry, merge: int, *,
+                 flat_to_view: bool):
+    """Mode view <-> physical layout (paper §4.2: a mode switch IS this
+    metadata reshape). Inside shard_map every state leaf arrives as
+    ``[n_layers, 1, 1, *per_device_dims]`` (the two singleton dims are the
+    sharded group/tile axes). flat_to_view squeezes them and reinterprets
+    flat paged pools ``[n, num_blocks, block_elems]`` as the mode view
+    ``[n, num_blocks, B(m), kvh/m, hd]``; the reverse restores physical
+    layout so outputs land back in the invariant pool."""
+    out = []
+    for (kind_seq, n), group in zip(model.plan, states):
+        new_group = []
+        for kind, st in zip(kind_seq, group):
+            mixer = kind[0]
+            st = dict(st)
+            paged = mixer in ("gqa", "gqa_win", "mla")
+            for key in ("mixer", "cross"):
+                if key not in st:
+                    continue
+                leaves = st[key]
+                if flat_to_view:
+                    leaves = tuple(p.reshape((p.shape[0],) + p.shape[3:])
+                                   for p in leaves)
+                    if paged and key == "mixer":
+                        vs = geom.view_shape(merge)
+                        leaves = tuple(p.reshape((p.shape[0],) + vs)
+                                       for p in leaves)
+                else:
+                    if paged and key == "mixer":
+                        leaves = tuple(
+                            p.reshape((p.shape[0],) + geom.flat_shape())
+                            for p in leaves)
+                    leaves = tuple(
+                        p.reshape((p.shape[0], 1, 1) + p.shape[1:])
+                        for p in leaves)
+                st[key] = leaves
+            new_group.append(st)
+        out.append(tuple(new_group))
+    return out
+
+

@@ -1,0 +1,80 @@
+"""Global Task Pool (paper Fig. 3): arrivals land here; engines pull.
+
+Requests carry the attributes the three use cases key on: priority
+(use case 2), prompt/context length (use case 3), and arrival time
+(use case 1 — load tracking)."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+from collections import deque
+
+PRIORITY_HIGH = 1
+PRIORITY_NORMAL = 0
+
+
+@dataclass
+class Request:
+    req_id: str
+    arrival: float
+    prompt_len: int
+    output_len: int
+    priority: int = PRIORITY_NORMAL
+    # 'auto' lets the policy pick; 'tp' forces a TP binding (paper Alg. 1:
+    # req.mode = TP with req.num_engines)
+    mode: str = "auto"
+    num_engines: int = 1
+
+    # runtime bookkeeping
+    state: str = "queued"  # queued|prefilling|running|paused|spec_dp|done
+    engine_group: int = -1
+    generated: int = 0
+    prefilled: int = 0
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    sched_t: Optional[float] = None      # first scheduling (queue time)
+    token_times: List[float] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.output_len
+
+    def total_context(self) -> int:
+        return self.prompt_len + self.output_len
+
+
+class TaskPool:
+    """FIFO within priority class; high priority drains first."""
+
+    def __init__(self):
+        self._q: Deque[Request] = deque()
+        self._hq: Deque[Request] = deque()
+        self.all: Dict[str, Request] = {}
+        self._ctr = itertools.count()
+
+    def submit(self, req: Request) -> None:
+        self.all[req.req_id] = req
+        (self._hq if req.priority == PRIORITY_HIGH else self._q).append(req)
+
+    def pull(self, now: float, k: int) -> List[Request]:
+        """Step 1 — ProcessInputSocket(): requests that have arrived."""
+        out: List[Request] = []
+        for q in (self._hq, self._q):
+            while q and len(out) < k and q[0].arrival <= now:
+                out.append(q.popleft())
+        return out
+
+    def peek_arrived(self, now: float) -> List[Request]:
+        return [r for r in itertools.chain(self._hq, self._q)
+                if r.arrival <= now]
+
+    def queue_depth(self, now: float) -> int:
+        return len(self.peek_arrived(now))
+
+    def next_arrival(self) -> Optional[float]:
+        cands = [q[0].arrival for q in (self._hq, self._q) if q]
+        return min(cands) if cands else None
+
+    def empty(self) -> bool:
+        return not self._q and not self._hq

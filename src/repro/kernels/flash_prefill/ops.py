@@ -1,0 +1,42 @@
+"""jit'd wrapper: layout transform [B,T,H,hd]->[B,H,T,hd], GQA repeat,
+T padding to the block size, CPU interpret dispatch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill.kernel import flash_prefill_kernel
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "blk"))
+def flash_prefill(q, k, v, *, window: Optional[int] = None, blk: int = 128):
+    """q [B,T,H,hd]; k/v [B,T,KV,hd] -> [B,T,H,hd], causal (+window)."""
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    qt = jnp.moveaxis(q, 1, 2)
+    kt = jnp.moveaxis(k, 1, 2)
+    vt = jnp.moveaxis(v, 1, 2)
+    blk_eff = min(blk, T)
+    pad = (-T) % blk_eff
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = flash_prefill_kernel(qt, kt, vt, window=window, blk_q=blk_eff,
+                               blk_k=blk_eff, interpret=_interpret())
+    out = out[:, :, :T]
+    return jnp.moveaxis(out, 2, 1)
+
+
+__all__ = ["flash_prefill", "flash_prefill_ref"]

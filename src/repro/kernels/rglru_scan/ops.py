@@ -1,0 +1,34 @@
+"""jit'd wrapper: time padding (a=1, g=0 identity elements) + dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rglru_scan.kernel import rglru_scan_kernel
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("blk_t", "blk_c"))
+def rglru_scan(a, g, *, blk_t: int = 128, blk_c: int = 128):
+    """a/g [B,T,C]; h0 = 0 -> (y [B,T,C] fp32, hT [B,C])."""
+    B, T, C = a.shape
+    bt = min(blk_t, T)
+    pad_t = (-T) % bt
+    bc = min(blk_c, C)
+    pad_c = (-C) % bc
+    if pad_t or pad_c:
+        a = jnp.pad(a, ((0, 0), (0, pad_t), (0, pad_c)),
+                    constant_values=1.0)
+        g = jnp.pad(g, ((0, 0), (0, pad_t), (0, pad_c)))
+    y, hT = rglru_scan_kernel(a, g, blk_t=bt, blk_c=bc,
+                              interpret=_interpret())
+    return y[:, :T, :C], hT[:, :C]
+
+
+__all__ = ["rglru_scan", "rglru_scan_ref"]

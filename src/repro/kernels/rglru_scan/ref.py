@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rglru_scan_ref(a, g, h0):
+    """Elementwise recurrence h_t = a_t * h_{t-1} + g_t.
+    a/g [B,T,C] fp32; h0 [B,C] -> (ys [B,T,C], hT)."""
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+    hT, ys = lax.scan(step, h0.astype(jnp.float32),
+                      (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+                       jnp.moveaxis(g.astype(jnp.float32), 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hT

@@ -1,0 +1,34 @@
+"""jit'd wrapper: chunk padding + CPU interpret dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128):
+    """x [Bs,T,H,hd]; dt [Bs,T,H]; A [H]; B/C [Bs,T,S]; h0=0.
+    Returns (y [Bs,T,H,hd] fp32, hT [Bs,H,hd,S])."""
+    Bs, T, H, hd = x.shape
+    ch = min(chunk, T)
+    pad = (-T) % ch
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, hT = ssd_scan_kernel(x, dt.astype(jnp.float32), A, B, C, chunk=ch,
+                            interpret=_interpret())
+    return y[:, :T], hT
+
+
+__all__ = ["ssd_scan", "ssd_scan_ref"]

@@ -1,0 +1,19 @@
+"""Production mesh factory.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state. The dry-run forces 512 host devices before any
+jax import (launch/dryrun.py); everything else sees the real topology.
+"""
+from __future__ import annotations
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def required_devices(multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256

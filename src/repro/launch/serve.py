@@ -1,0 +1,109 @@
+"""Serving launcher.
+
+Two modes:
+  --sim  (default): full-scale discrete-event run on the roofline cost
+         model — the production mesh geometry, any arch, paper workloads.
+  --real: actual execution of reduced configs on local devices (set
+         XLA_FLAGS=--xla_force_host_platform_device_count=8 to emulate a
+         small fleet on CPU).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
+      --requests 500 --strategy hard
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --arch llama3-8b --real --requests 12
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--real", action="store_true")
+    ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--strategy", default="hard",
+                    choices=["hard", "soft", "sequential"])
+    ap.add_argument("--fixed-merge", type=int, default=0,
+                    help="pin the mode (static baseline); 0 = dynamic")
+    ap.add_argument("--switch", default="flying",
+                    choices=["flying", "restart", "none"])
+    ap.add_argument("--priority-frac", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.core.kv_adaptor import PoolGeometry
+    from repro.core.modes import ParallelPlan
+    from repro.core.policy import FlyingPolicy
+    from repro.core.scheduler import DynamicScheduler, SchedulerConfig
+    from repro.serving.metrics import summarize
+    from repro.serving.workload import WorkloadSpec, generate
+
+    if args.real:
+        import jax
+        import jax.numpy as jnp
+        from repro.core.engine import FlyingEngine
+        from repro.models.model import build_model
+        n = len(jax.devices())
+        assert n >= 4, "run with XLA_FLAGS=--xla_force_host_platform" \
+                       "_device_count=8 for a local fleet"
+        cfg = get_config(args.arch).reduced()
+        plan = ParallelPlan(engine_rows=1, tp_base=2, data_rows=n // 2)
+        geom = PoolGeometry(cfg, plan, num_blocks=64, block_base=4)
+        model = build_model(cfg, jnp.float32)
+        params = model.init(jax.random.key(0))
+        backend = FlyingEngine(model, plan, geom, params,
+                               batch_per_engine=2, prefill_len=8)
+        sched = DynamicScheduler(
+            plan, geom, backend,
+            SchedulerConfig(strategy=args.strategy, max_batch_per_group=2,
+                            prefill_chunk=8,
+                            fixed_merge=args.fixed_merge or None),
+            policy=None if args.fixed_merge else FlyingPolicy())
+        sched.adaptors = backend.adaptors
+        spec = WorkloadSpec(n_requests=args.requests, seed=args.seed,
+                            prompt_range=(8, 8), output_range=(4, 8),
+                            low_rate=(20, 50), burst_rate=(100, 200),
+                            phase_seconds=0.5,
+                            priority_frac=args.priority_frac)
+    else:
+        cfg = get_config(args.arch)
+        plan = ParallelPlan(engine_rows=cfg.engine_rows, tp_base=16,
+                            data_rows=16)
+        from repro.serving.simulator import CostModel, SimBackend
+        kv_per_tok = cfg.kv_cache_dims_per_token * cfg.num_layers * 2 \
+            / (plan.engine_rows * plan.tp_base)
+        budget = 16e9 - cfg.num_params() * 2 / (plan.engine_rows * 16) - 2e9
+        blocks = max(int(budget / max(kv_per_tok, 1) / 16), 1024)
+        geom = PoolGeometry(cfg, plan, num_blocks=blocks, block_base=16)
+        backend = SimBackend(CostModel(cfg, plan), switch_mode=args.switch)
+        sched = DynamicScheduler(
+            plan, geom, backend,
+            SchedulerConfig(strategy=args.strategy,
+                            fixed_merge=args.fixed_merge or None),
+            policy=None if args.fixed_merge else FlyingPolicy())
+        spec = WorkloadSpec(n_requests=args.requests, seed=args.seed,
+                            phase_seconds=30.0,
+                            priority_frac=args.priority_frac)
+
+    for r in generate(spec):
+        sched.submit(copy.deepcopy(r))
+    sched.run()
+    m = summarize(sched.pool.all.values())
+    print(f"arch={args.arch} strategy={args.strategy} "
+          f"fixed_merge={args.fixed_merge or 'dynamic'}")
+    print(f"  requests done : {sum(1 for r in sched.pool.all.values() if r.state == 'done')}"
+          f"/{len(sched.pool.all)}")
+    print(f"  mean TTFT     : {m.mean_ttft * 1e3:9.1f} ms")
+    print(f"  P90 TTFT      : {m.p90_ttft * 1e3:9.1f} ms")
+    print(f"  P90 queue     : {m.p90_queue * 1e3:9.1f} ms")
+    print(f"  median TPOT   : {m.median_tpot * 1e3:9.2f} ms")
+    print(f"  peak tput     : {m.peak_throughput:9.0f} tok/s")
+    print(f"  mode switches : {sched.switches}")
+
+
+if __name__ == "__main__":
+    main()

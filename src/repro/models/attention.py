@@ -1,0 +1,161 @@
+"""Attention layers: GQA (with optional qk_norm / sliding window) and MLA
+(DeepSeek-V2 Multi-head Latent Attention). TP realized through
+``TPContext`` logical views (core/views.py)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.views import TPContext
+from repro.models.common import apply_rope, init_linear, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ArchConfig, dtype):
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, H * hd, dtype),
+        "wk": init_linear(ks[1], d, KV * hd, dtype),
+        "wv": init_linear(ks[2], d, KV * hd, dtype),
+        "wo": init_linear(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def gqa_attention(cfg: ArchConfig, p, x, ctx: TPContext, backend, state, *,
+                  positions, window: Optional[int] = None):
+    """x [B,T,d] (replicated over the TP group) -> [B,T,d] (replicated)."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    Hl, KVl = ctx.local_units(H), ctx.local_units(KV)
+
+    q = (x @ ctx.activate(p["wq"], 1, H)).reshape(B, T, Hl, hd)
+    k = (x @ ctx.activate(p["wk"], 1, KV)).reshape(B, T, KVl, hd)
+    v = (x @ ctx.activate(p["wv"], 1, KV)).reshape(B, T, KVl, hd)
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    out, state = backend.attend(state, q, k, v, positions=positions,
+                                window=window)
+    out = out.reshape(B, T, Hl * hd)
+    out = out @ ctx.activate(p["wo"], 0, H)
+    return ctx.psum(out, H), state
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2). The compressed cache (c_kv ++ k_pe, width R+Rr) is
+# REPLICATED across TP ranks (DESIGN.md §5: capacity scaling B(p)
+# inapplicable); head up-projections are view-sharded.
+# ---------------------------------------------------------------------------
+
+def mla_cache_width(cfg: ArchConfig) -> int:
+    m = cfg.mla
+    return m.kv_lora_rank + m.qk_rope_head_dim
+
+
+def init_mla(key, cfg: ArchConfig, dtype):
+    m, d, H = cfg.mla, cfg.d_model, cfg.num_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wdq": init_linear(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wuq": init_linear(ks[1], m.q_lora_rank, H * qk_hd, dtype),
+        "wdkv": init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                            dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wuk": init_linear(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim,
+                           dtype),
+        "wuv": init_linear(ks[4], m.kv_lora_rank, H * m.v_head_dim, dtype),
+        "wo": init_linear(ks[5], H * m.v_head_dim, d, dtype),
+    }
+
+
+def mla_attention(cfg: ArchConfig, p, x, ctx: TPContext, backend, state, *,
+                  positions, window: Optional[int] = None):
+    B, T, d = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    Hl = ctx.local_units(H)
+    R, Rr, Dn, Dv = (m.kv_lora_rank, m.qk_rope_head_dim,
+                     m.qk_nope_head_dim, m.v_head_dim)
+
+    # --- queries (low-rank) ---
+    cq = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ ctx.activate(p["wuq"], 1, H)).reshape(B, T, Hl, Dn + Rr)
+    q_nope, q_pe = q[..., :Dn], q[..., Dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    # --- compressed KV: per-token [R + Rr], cached compressed ---
+    ckv_full = x @ p["wdkv"]                      # [B,T,R+Rr]
+    c_kv = rms_norm(ckv_full[..., :R], p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(ckv_full[..., None, R:], positions,
+                      cfg.rope_theta)[..., 0, :]  # [B,T,Rr]
+    cache_entry = jnp.concatenate([c_kv, k_pe], axis=-1)  # [B,T,R+Rr]
+
+    from repro.models.striped import StripedDecodeBackend
+    if isinstance(backend, StripedDecodeBackend):
+        # absorbed MLA over the striped compressed cache (context parallel)
+        scale = (Dn + Rr) ** -0.5
+        wuk = ctx.activate(p["wuk"], 1, H).reshape(R, Hl, Dn)
+        q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                           wuk.astype(jnp.float32)) * scale
+        out_c, state = backend.attend_mla(
+            state, q_abs, q_pe[:, 0].astype(jnp.float32) * scale,
+            cache_entry[:, 0], R=R, n_heads=H)
+        wuv = ctx.activate(p["wuv"], 1, H).reshape(R, Hl, Dv)
+        out = jnp.einsum("bhr,rhd->bhd", out_c, wuv.astype(jnp.float32))
+        out = out.astype(x.dtype).reshape(B, 1, Hl * Dv)
+        out = out @ ctx.activate(p["wo"], 0, H)
+        return ctx.psum(out, H), state
+
+    ctx_tokens, ctx_len, state = backend.append_ctx(state, cache_entry,
+                                                    positions=positions)
+    # ctx_tokens: [B,Tk,R+Rr] (full prefix incl. current tokens)
+    c_ctx, pe_ctx = ctx_tokens[..., :R], ctx_tokens[..., R:]
+
+    # naive expansion (absorbed variant is a recorded optimization target)
+    wuk = ctx.activate(p["wuk"], 1, H).reshape(R, Hl, Dn)
+    wuv = ctx.activate(p["wuv"], 1, H).reshape(R, Hl, Dv)
+    k_nope = jnp.einsum("btr,rhd->bthd", c_ctx.astype(jnp.float32),
+                        wuk.astype(jnp.float32))
+    vexp = jnp.einsum("btr,rhd->bthd", c_ctx.astype(jnp.float32),
+                      wuv.astype(jnp.float32))
+
+    scale = (Dn + Rr) ** -0.5
+    s = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32), k_nope)
+         + jnp.einsum("bqhd,bkd->bhqk", q_pe.astype(jnp.float32),
+                      pe_ctx.astype(jnp.float32))) * scale
+
+    Tk = ctx_tokens.shape[1]
+    kpos = jnp.arange(Tk)[None, None, :]              # [1,1,Tk]
+    qpos = positions[..., None]                       # [B,T,1]
+    if ctx_len is None:  # in-line context (train / fresh prefill)
+        mask = kpos <= qpos                           # [B,Tq,Tk]
+    else:
+        mask = jnp.broadcast_to((jnp.arange(Tk)[None, :] <
+                                 ctx_len[:, None])[:, None, :], (B, T, Tk))
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    from repro.models.cache import NEG_INF
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, vexp)
+    out = out.astype(x.dtype).reshape(B, T, Hl * Dv)
+    out = out @ ctx.activate(p["wo"], 0, H)
+    return ctx.psum(out, H), state

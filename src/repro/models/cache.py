@@ -1,0 +1,245 @@
+"""Attention cache backends.
+
+The model code is cache-agnostic: each layer calls ``backend.attend(...)``
+(or the raw ``append/gather`` primitives for MLA-style compressed caches)
+and threads a per-layer ``state`` pytree through ``lax.scan``. Backends:
+
+- ``TrainBackend``     — no cache; full-sequence causal (optionally windowed).
+- ``PrefillBackend``   — causal over the fresh chunk (+ merged attention over
+  previously cached pages: chunked prefill), writes new KV into pages.
+- ``DecodeBackend``    — single-token append + paged attention over the pool.
+
+Paged states are the *mode-viewed* arrays produced by the KV Cache Adaptor
+(core/kv_adaptor.py): per layer ``k/v: [num_blocks, page, kvh_local, hd]``
+(or ``[num_blocks, page, width]`` for compressed MLA caches). Physical
+pool bytes are mode-invariant; only this view changes (paper §4.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# reference attention math (pure jnp; Pallas kernels are drop-ins via ops)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def causal_attention(q, k, v, *, q_offset=0, window: Optional[int] = None,
+                     softmax_scale: Optional[float] = None):
+    """q [B,Tq,H,hd], k/v [B,Tk,KV,hd]; causal with optional sliding window.
+    ``q_offset``: absolute position of q[0] minus that of k[0]."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Tq)[:, None] + q_offset
+    kpos = jnp.arange(Tk)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_with_lse(q, k, v, mask, softmax_scale):
+    """Returns (out [B,Tq,H,hd] fp32, lse [B,H,Tq] fp32); mask [B,1,Tq,Tk]
+    or broadcastable.
+
+    GQA is computed GROUPED (q reshaped [KV, rep] against unrepeated K/V)
+    and K/V stay in their storage dtype until the dot — no repeated or
+    fp32-materialized copies of the (large) gathered context (§Perf A1).
+    """
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Tq, KV, rep, hd)
+    # dots accumulate in fp32 without materializing fp32 copies of k/v
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                   preferred_element_type=jnp.float32) * softmax_scale
+    s = s.reshape(B, H, Tq, s.shape[-1])
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = (e / jnp.maximum(denom, 1e-30)).reshape(B, KV, rep, Tq, -1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, Tq, H, hd)
+    lse = (m + jnp.log(jnp.maximum(denom, 1e-30)))[..., 0]
+    return out, lse
+
+
+def merge_attention(outs_lses):
+    """Combine partial attentions over disjoint key sets via their LSEs.
+    outs: [B,Tq,H,hd] fp32; lses: [B,H,Tq]."""
+    ms = jnp.stack([l for _, l in outs_lses])          # [P,B,H,Tq]
+    m = jnp.max(ms, axis=0)
+    ws = jnp.exp(ms - m[None])                          # [P,B,H,Tq]
+    num = sum(o * jnp.transpose(w, (0, 2, 1))[..., None]
+              for (o, _), w in zip(outs_lses, ws))
+    den = jnp.transpose(jnp.sum(ws, axis=0), (0, 2, 1))[..., None]
+    return num / jnp.maximum(den, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# paged pool primitives (jnp reference; serving uses kernels/paged_attention)
+# ---------------------------------------------------------------------------
+
+def paged_append(pool: jax.Array, vals: jax.Array, slots: jax.Array):
+    """pool [nblk, page, ...]; vals [B,T,...]; slots [B,T] flat token slots
+    (= block_id*page + offset; negative => drop)."""
+    nblk, page = pool.shape[0], pool.shape[1]
+    flat = pool.reshape(nblk * page, *pool.shape[2:])
+    v = vals.reshape(-1, *vals.shape[2:]).astype(pool.dtype)
+    s = slots.reshape(-1)
+    # parked writes (slot < 0) target the reserved scratch slot: the last
+    # slot of the last block, which the adaptor never allocates.
+    safe = jnp.where(s >= 0, s, nblk * page - 1)
+    keep = (s >= 0).reshape((-1,) + (1,) * (v.ndim - 1))
+    flat = flat.at[safe].set(jnp.where(keep, v, flat[safe]))
+    return flat.reshape(pool.shape)
+
+
+def paged_gather(pool: jax.Array, block_table: jax.Array):
+    """pool [nblk, page, ...]; block_table [B, max_blocks] -> [B,
+    max_blocks*page, ...] (unmasked; caller masks by context length)."""
+    g = pool[jnp.maximum(block_table, 0)]  # [B, mb, page, ...]
+    B, mb, page = g.shape[0], g.shape[1], g.shape[2]
+    return g.reshape(B, mb * page, *g.shape[3:])
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, context_len, *,
+                        window: Optional[int] = None,
+                        softmax_scale: Optional[float] = None):
+    """Decode attention: q [B,H,hd]; pools [nblk,page,KV,hd];
+    block_table [B,mb]; context_len [B] (includes the current token)."""
+    hd = q.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    k = paged_gather(k_pool, block_table)  # [B, Tk, KV, hd]
+    v = paged_gather(v_pool, block_table)
+    Tk = k.shape[1]
+    kpos = jnp.arange(Tk)[None, :]
+    mask = kpos < context_len[:, None]
+    if window is not None:
+        mask &= kpos >= (context_len[:, None] - window)
+    out, _ = attention_with_lse(q[:, None], k, v, mask[:, None, None, :],
+                                scale)
+    return out[:, 0].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainBackend:
+    """Full-sequence causal attention, no cache (training / eval)."""
+    window: Optional[int] = None
+
+    def attend(self, state, q, k, v, *, positions, window=None):
+        w = window if window is not None else self.window
+        return causal_attention(q, k, v, window=w), state
+
+    # MLA-style raw primitives: keep the full sequence in-line.
+    def append_ctx(self, state, vals, *, positions):
+        return vals, None, state  # ctx, mask(None->causal inline), state
+
+
+@dataclass(frozen=True)
+class PrefillBackend:
+    """Fresh-or-chunked prefill: causal within the chunk, merged with paged
+    attention over previously cached pages; writes the chunk's KV to pages.
+
+    ``slots [B,T]`` flat write slots; ``prior_len [B]`` tokens already in
+    cache (0 for fresh prefill); ``block_table [B,mb]`` covers prior pages.
+    """
+    slots: jax.Array
+    prior_len: jax.Array
+    block_table: jax.Array
+    chunked: bool = False
+
+    def attend(self, state, q, k, v, *, positions, window=None):
+        k_pool, v_pool = state
+        k_pool = paged_append(k_pool, k, self.slots)
+        v_pool = paged_append(v_pool, v, self.slots)
+        hd = q.shape[-1]
+        scale = hd ** -0.5
+        if not self.chunked:
+            out = causal_attention(q, k, v, window=window)
+            return out, (k_pool, v_pool)
+        # chunked: merge in-chunk causal with attention over prior pages
+        B, Tq = q.shape[0], q.shape[1]
+        qpos = jnp.arange(Tq)[None, :, None] + self.prior_len[:, None, None]
+        inmask = (jnp.arange(Tq)[None, None, :] <=
+                  jnp.arange(Tq)[None, :, None])
+        if window is not None:
+            inmask = inmask & (jnp.arange(Tq)[None, None, :] >
+                               jnp.arange(Tq)[None, :, None] - window)
+        o1, l1 = attention_with_lse(q, k, v, inmask[:, None], scale)
+        kp = paged_gather(k_pool, self.block_table)
+        vp = paged_gather(v_pool, self.block_table)
+        Tk = kp.shape[1]
+        pmask = jnp.arange(Tk)[None, None, None, :] < \
+            self.prior_len[:, None, None, None]
+        if window is not None:
+            pmask = pmask & (jnp.arange(Tk)[None, None, None, :] >=
+                             qpos[:, None, :, 0:1] - window + 1)
+        o2, l2 = attention_with_lse(q, kp, vp, pmask, scale)
+        out = merge_attention([(o1, l1), (o2, l2)])
+        return out.astype(q.dtype), (k_pool, v_pool)
+
+    def append_ctx(self, state, vals, *, positions):
+        (pool,) = state if isinstance(state, tuple) and len(state) == 1 \
+            else (state,)
+        pool = paged_append(pool, vals, self.slots)
+        ctx = paged_gather(pool, self.block_table)
+        return ctx, None, (pool,)
+
+
+@dataclass(frozen=True)
+class DecodeBackend:
+    """Single-token decode over the paged pool."""
+    slots: jax.Array          # [B] flat write slot of the new token
+    block_table: jax.Array    # [B, max_blocks]
+    context_len: jax.Array    # [B] incl. the new token
+    use_kernel: bool = False
+
+    def attend(self, state, q, k, v, *, positions, window=None):
+        k_pool, v_pool = state
+        k_pool = paged_append(k_pool, k, self.slots[:, None])
+        v_pool = paged_append(v_pool, v, self.slots[:, None])
+        if self.use_kernel:
+            from repro.kernels.paged_attention import ops as pa_ops
+            out = pa_ops.paged_attention(
+                q[:, 0], k_pool, v_pool, self.block_table, self.context_len,
+                window=window)
+        else:
+            out = paged_attention_ref(q[:, 0], k_pool, v_pool,
+                                      self.block_table, self.context_len,
+                                      window=window)
+        return out[:, None], (k_pool, v_pool)
+
+    def append_ctx(self, state, vals, *, positions):
+        (pool,) = state if isinstance(state, tuple) and len(state) == 1 \
+            else (state,)
+        pool = paged_append(pool, vals[:, None] if vals.ndim == 2 else vals,
+                            self.slots[:, None])
+        ctx = paged_gather(pool, self.block_table)
+        return ctx, self.context_len, (pool,)

@@ -1,0 +1,36 @@
+"""Feed-forward layers: gated MLP (SwiGLU) with TP logical views."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.views import TPContext
+from repro.models.common import gelu, init_linear, silu
+
+
+def init_mlp(key, d: int, d_ff: int, dtype, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": init_linear(ks[0], d, d_ff, dtype),
+        "w_down": init_linear(ks[1], d_ff, d, dtype),
+    }
+    if gated:
+        p["w_gate"] = init_linear(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp(p, x, ctx: TPContext, d_ff: int, *, act=silu):
+    """Column-parallel up/gate, row-parallel down, one psum (paper §4.1.1:
+    'one synchronization step per pair of linear layers')."""
+    up = x @ ctx.activate(p["w_up"], 1, d_ff)
+    if "w_gate" in p:
+        up = act(x @ ctx.activate(p["w_gate"], 1, d_ff)) * up
+    else:
+        up = act(up)
+    out = up @ ctx.activate(p["w_down"], 0, d_ff)
+    return ctx.psum(out, d_ff)
+
+
+def gelu_mlp(p, x, ctx: TPContext, d_ff: int):
+    return mlp(p, x, ctx, d_ff, act=gelu)

@@ -1,0 +1,185 @@
+"""Mamba-2 SSD layer (arXiv:2405.21060), attention-free.
+
+State-space duality: full-sequence processing uses the chunked SSD form
+(intra-chunk dense + inter-chunk state recurrence); decode is a one-step
+state update. TP shards heads (and the channel dims) via logical views;
+B/C projections (ngroups=1) are replicated across TP ranks, out_proj is
+row-parallel with one psum. Per-request cache = (conv_state, ssm_state)
+— fixed-size, sequence-length independent (long_500k is natural).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.views import TPContext
+from repro.models.common import init_linear, rms_norm, silu
+
+
+def dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    return d_in, nh, s.head_dim, s.d_state, s.conv_width
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    d_in, nh, hd, S, cw = dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        # head-sharded projections kept as separate tensors so each gets a
+        # clean storage sharding (B/C are replicated across TP, ngroups=1)
+        "w_z": init_linear(ks[0], d, d_in, dtype),
+        "w_x": init_linear(ks[1], d, d_in, dtype),
+        "w_BC": init_linear(ks[2], d, 2 * S, dtype),
+        "w_dt": init_linear(ks[3], d, nh, dtype),
+        "conv_x": (jax.random.normal(ks[4], (cw, d_in), jnp.float32)
+                   * (1.0 / math.sqrt(cw))).astype(dtype),
+        "conv_BC": (jax.random.normal(ks[5], (cw, 2 * S), jnp.float32)
+                    * (1.0 / math.sqrt(cw))).astype(dtype),
+        "conv_b_x": jnp.zeros((d_in,), dtype),
+        "conv_b_BC": jnp.zeros((2 * S,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "w_out": init_linear(ks[7], d_in, d, dtype),
+    }
+
+
+def _causal_conv(xBC, conv_state, w, b, cw):
+    """xBC [B,T,C]; conv_state [B,cw-1,C] prefix; returns (out, new_state)."""
+    full = jnp.concatenate([conv_state, xBC], axis=1)
+    T = xBC.shape[1]
+    out = sum(full[:, i:i + T] * w[i][None, None] for i in range(cw))
+    new_state = full[:, -(cw - 1):] if cw > 1 else conv_state
+    return silu(out + b[None, None]), new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, h0, chunk: int):
+    """Chunked SSD scan (reference; kernels/ssd_scan mirrors this).
+
+    xh [B,T,H,hd]; dt [B,T,H] (softplus'ed, fp32); A [H] (negative);
+    Bm/Cm [B,T,S]; h0 [B,H,hd,S] fp32. Returns (y [B,T,H,hd] fp32, hT).
+    """
+    Bsz, T, H, hd = xh.shape
+    S = Bm.shape[-1]
+    nc = T // chunk
+    xs = xh.reshape(Bsz, nc, chunk, H, hd).astype(jnp.float32)
+    dts = dt.reshape(Bsz, nc, chunk, H)
+    Bs = Bm.reshape(Bsz, nc, chunk, S).astype(jnp.float32)
+    Cs = Cm.reshape(Bsz, nc, chunk, S).astype(jnp.float32)
+
+    loga = dts * A[None, None, None]                 # [B,nc,c,H] (<=0)
+    s = jnp.cumsum(loga, axis=2)                     # cumulative within chunk
+    # intra-chunk: Y[i] = C_i . sum_{j<=i} exp(s_i - s_j) dt_j B_j x_j^T
+    li = s[:, :, :, None, :] - s[:, :, None, :, :]   # [B,nc,ci,cj,H]
+    tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    tri = tri[None, None, :, :, None]
+    # clamp BEFORE exp: masked entries have li > 0 and exp(li) would be
+    # inf, poisoning the backward pass through where (NaN = inf * 0)
+    li = jnp.where(tri, li, 0.0)
+    L = jnp.where(tri, jnp.exp(li), 0.0)
+    cb = jnp.einsum("bncs,bnjs->bncj", Cs, Bs)       # [B,nc,ci,cj]
+    y_intra = jnp.einsum("bncjh,bnjh,bnjhd->bnchd",
+                         cb[:, :, :, :, None] * L, dts, xs)
+
+    # chunk summaries: S_n = sum_j exp(s_last - s_j) dt_j B_j x_j^T
+    decay_out = jnp.exp(s[:, :, -1:, :] - s)          # [B,nc,c,H]
+    Ssum = jnp.einsum("bnjh,bnjh,bnjhd,bnjs->bnhds",
+                      decay_out, dts, xs, Bs)         # [B,nc,H,hd,S]
+    chunk_decay = jnp.exp(s[:, :, -1, :])             # [B,nc,H]
+
+    def scan_fn(h, inp):
+        Sn, dec = inp
+        h_new = h * dec[..., None, None] + Sn
+        return h_new, h
+    hT, h_prev = lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(Ssum, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)               # [B,nc,H,hd,S] (pre-chunk)
+
+    y_inter = jnp.einsum("bncs,bnch,bnhds->bnchd",
+                         Cs, jnp.exp(s), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, hd)
+    return y, hT
+
+
+def ssd_decode_step(x1, dt1, A, B1, C1, h):
+    """One-token update. x1 [B,H,hd]; dt1 [B,H]; B1/C1 [B,S];
+    h [B,H,hd,S] fp32 -> (y [B,H,hd], h')."""
+    a = jnp.exp(dt1 * A[None])                        # [B,H]
+    upd = jnp.einsum("bh,bhd,bs->bhds", dt1, x1.astype(jnp.float32),
+                     B1.astype(jnp.float32))
+    h = h * a[..., None, None] + upd
+    y = jnp.einsum("bs,bhds->bhd", C1.astype(jnp.float32), h)
+    return y, h
+
+
+def mamba2_layer(cfg: ArchConfig, p, x, ctx: TPContext, state, *,
+                 mode: str):
+    """x [B,T,d] replicated -> (y replicated, new_state).
+    state = (conv_state [B,cw-1,Cl], ssm_state [B,Hl,hd,S]) or None (train).
+    """
+    d_in, nh, hd, S, cw = dims(cfg)
+    B_, T, d = x.shape
+    nhl = nh // ctx.compute_shards(nh)
+
+    z = x @ ctx.activate(p["w_z"], 1, nh)
+    xr = x @ ctx.activate(p["w_x"], 1, nh)
+    BC = x @ p["w_BC"]
+    dt = x @ ctx.activate(p["w_dt"], 1, nh)
+    conv_w = jnp.concatenate([ctx.activate(p["conv_x"], 1, nh),
+                              p["conv_BC"]], axis=1)
+    conv_b = jnp.concatenate([ctx.activate(p["conv_b_x"], 0, nh),
+                              p["conv_b_BC"]], axis=0)
+
+    if state is None:
+        conv_state = jnp.zeros((B_, cw - 1, nhl * hd + 2 * S), x.dtype)
+        h0 = jnp.zeros((B_, nhl, hd, S), jnp.float32)
+    else:
+        conv_state, h0 = state
+
+    xBC = jnp.concatenate([xr, BC], axis=-1)
+    xBC, conv_state = _causal_conv(xBC, conv_state, conv_w, conv_b, cw)
+    xr = xBC[..., :nhl * hd].reshape(B_, T, nhl, hd)
+    Bm = xBC[..., nhl * hd:nhl * hd + S]
+    Cm = xBC[..., nhl * hd + S:]
+
+    A_l = -jnp.exp(ctx.activate(p["A_log"], 0, nh))
+    dtb = ctx.activate(p["dt_bias"], 0, nh)
+    D_l = ctx.activate(p["D"], 0, nh)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + dtb[None, None])
+
+    if mode == "decode":
+        y1, h = ssd_decode_step(xr[:, 0], dtf[:, 0], A_l, Bm[:, 0], Cm[:, 0],
+                                h0)
+        y = y1[:, None]
+    else:
+        chunk = min(cfg.ssm.chunk, T)
+        pad = (-T) % chunk
+        if pad:
+            xr = jnp.pad(xr, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, h = ssd_chunked(xr, dtf, A_l, Bm, Cm, h0, chunk)
+        y = y[:, :T]
+        xr = xr[:, :T]
+
+    y = y + xr.astype(jnp.float32) * D_l[None, None, :, None]
+    y = y.astype(x.dtype).reshape(B_, T, nhl * hd)
+    # gated grouped RMSNorm: normalize per head (TP-invariant)
+    g = (y * silu(z)).reshape(B_, T, nhl, hd)
+    g = rms_norm(g, jnp.ones((hd,), g.dtype), cfg.norm_eps)
+    y = g.reshape(B_, T, nhl * hd) * ctx.activate(p["norm_w"], 0, nh)
+    out = y @ ctx.activate(p["w_out"], 0, nh)
+    out = ctx.psum(out, nh)
+    new_state = (conv_state, h) if state is not None else None
+    return out, new_state

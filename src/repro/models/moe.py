@@ -1,0 +1,225 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Layout (DESIGN.md §4/§5): experts storage-sharded over the engine-tile
+axis ``'ed'`` (expert parallelism), each expert's ``d_ff`` sharded over
+``'model'`` and further *view-sliced* by the flying merge factor. Token
+routing is deterministic and replicated across the TP group (inputs are
+replicated), so dispatch needs a single ``all_to_all`` over ``'ed'`` and
+the layer's one full-group ``psum`` reassembles everything (token shards
+over 'ed' land in disjoint row offsets; ff-slices over 'merge'x'model'
+are disjoint partials).
+
+Capacity-factor dispatch: tokens beyond an expert's capacity are dropped
+(standard Switch/GShard semantics); the ``dense_moe_ref`` oracle in tests
+bounds the disagreement to dropped tokens.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.views import TPContext
+from repro.models.common import init_linear, silu
+from repro.models.ffn import init_mlp, mlp
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    e = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": init_linear(ks[0], d, e.num_experts, jnp.float32),
+        "e_gate": _init_experts(ks[1], e.num_experts, d, e.d_ff_expert, dtype),
+        "e_up": _init_experts(ks[2], e.num_experts, d, e.d_ff_expert, dtype),
+        "e_down": _init_experts(ks[3], e.num_experts, e.d_ff_expert, d, dtype),
+    }
+    if e.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, e.num_shared_experts * e.d_ff_expert,
+                               dtype)
+    return p
+
+
+def _init_experts(key, E, d_in, d_out, dtype):
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.uniform(key, (E, d_in, d_out), jnp.float32,
+                               -scale, scale)).astype(dtype)
+
+
+def _positions_in_expert(e_flat: jax.Array, num_experts: int) -> jax.Array:
+    """Rank of each entry within its expert's arrival order, O(M log M)."""
+    M = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)
+    se = e_flat[order]
+    starts = jnp.searchsorted(se, jnp.arange(num_experts))
+    pos_sorted = jnp.arange(M) - starts[se]
+    return jnp.zeros((M,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+
+
+def route(p_router, x_tokens, top_k: int):
+    """x_tokens [N,d] -> (experts [N,k] int32, weights [N,k] fp32, aux)."""
+    logits = (x_tokens.astype(jnp.float32) @ p_router)          # [N,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, e = lax.top_k(probs, top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux loss
+    E = logits.shape[-1]
+    frac = jnp.mean(jax.nn.one_hot(e[:, 0], E, dtype=jnp.float32), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * imp)
+    return e.astype(jnp.int32), w, aux
+
+
+def _dispatch_compute(cfg: ArchConfig, p, tokens, ctx: TPContext):
+    """Capacity dispatch + expert compute for one token group [Nl,d]
+    (no expert parallelism). Returns (y [Nl,d] fp32 partial-over-ff,
+    aux)."""
+    e = cfg.moe
+    Nl, d = tokens.shape
+    experts, weights, aux = route(p["router"], tokens, e.top_k)
+    M = Nl * e.top_k
+    e_flat = experts.reshape(M)
+    w_flat = weights.reshape(M)
+    t_flat = jnp.arange(M) // e.top_k
+    pos = _positions_in_expert(e_flat, e.num_experts)
+    cap = max(8, int(math.ceil(Nl * e.top_k / e.num_experts
+                               * e.capacity_factor)))
+    cap = -(-cap // 8) * 8
+    valid = pos < cap
+    slot = jnp.where(valid, e_flat * cap + pos, e.num_experts * cap)
+    buf = jnp.zeros((e.num_experts * cap + 1, d), tokens.dtype)
+    buf = buf.at[slot].set(tokens[t_flat])
+    buf = buf[:-1].reshape(e.num_experts, cap, d)
+    wg = ctx.activate_view(p["e_gate"], 2)
+    wu = ctx.activate_view(p["e_up"], 2)
+    wd = ctx.activate_view(p["e_down"], 1)
+    h = silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+        * jnp.einsum("ecd,edf->ecf", buf, wu)
+    out = jnp.einsum("ecf,efd->ecd", h, wd)
+    flat_out = jnp.concatenate(
+        [out.reshape(e.num_experts * cap, d),
+         jnp.zeros((1, d), out.dtype)], axis=0)
+    gathered = flat_out[slot] * w_flat[:, None].astype(out.dtype)
+    y = jnp.zeros((Nl, d), jnp.float32).at[t_flat].add(
+        gathered.astype(jnp.float32))
+    return y, aux
+
+
+def moe_ffn(cfg: ArchConfig, p, x, ctx: TPContext):
+    """x [B,T,d] replicated over the TP group -> (y replicated, aux)."""
+    e = cfg.moe
+    B, T, d = x.shape
+    N = B * T
+    tokens_all = x.reshape(N, d)
+
+    if ctx.moe_groups > 1 and ctx.ep == 1:
+        # GSPMD training (§Perf B2): per-data-shard dispatch. Routing,
+        # positions, capacity and the scatter stay local to each shard's
+        # token group; only the expert compute's partial-sum combine
+        # crosses shards (inserted by GSPMD from the weight sharding).
+        G = ctx.moe_groups
+        xg = tokens_all.reshape(G, N // G, d)
+
+        def one_group(tg):
+            yg, auxg = _dispatch_compute(cfg, p, tg, ctx)
+            return yg, auxg
+        yg, auxg = jax.vmap(one_group)(xg)
+        y = yg.reshape(B, T, d).astype(x.dtype)
+        if e.num_shared_experts:
+            y = y + mlp(p["shared"], x, ctx,
+                        e.num_shared_experts * e.d_ff_expert)
+        return y, jnp.mean(auxg)
+
+    ep = ctx.ep_stored(e.num_experts)
+    Nl = N // ep
+    if ep > 1:
+        # each 'ed' row takes its token slice (inputs are replicated)
+        off = ctx.ep_rank() * Nl
+        tokens = lax.dynamic_slice(tokens_all, (off, 0), (Nl, d))
+    else:
+        tokens = tokens_all
+
+    experts, weights, aux = route(p["router"], tokens, e.top_k)
+    M = Nl * e.top_k
+    e_flat = experts.reshape(M)
+    w_flat = weights.reshape(M)
+    t_flat = jnp.arange(M) // e.top_k
+    pos = _positions_in_expert(e_flat, e.num_experts)
+
+    cap = max(8, int(math.ceil(Nl * e.top_k / e.num_experts
+                               * e.capacity_factor)))
+    cap = -(-cap // 8) * 8
+
+    El = e.num_experts // ep  # local experts after all_to_all
+    valid = pos < cap
+    slot = jnp.where(valid, e_flat * cap + pos, e.num_experts * cap)
+    buf = jnp.zeros((e.num_experts * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(tokens[t_flat])
+    buf = buf[:-1].reshape(e.num_experts, cap, d)
+
+    if ep > 1:
+        # [E, cap, d] -> rows exchange so each holds [ep*cap] tokens of its
+        # El local experts
+        buf = lax.all_to_all(buf, ctx.ep_axes[0], split_axis=0,
+                             concat_axis=1, tiled=True)  # [El, ep*cap, d]
+
+    # expert compute; d_ff stored over 'model', merge view-sliced here
+    wg = ctx.activate_view(p["e_gate"], 2)
+    wu = ctx.activate_view(p["e_up"], 2)
+    wd = ctx.activate_view(p["e_down"], 1)
+    h = silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+        * jnp.einsum("ecd,edf->ecf", buf, wu)
+    out = jnp.einsum("ecf,efd->ecd", h, wd)  # [El, ep*cap, d] partial over ff
+
+    if ep > 1:
+        out = lax.all_to_all(out, ctx.ep_axes[0], split_axis=1,
+                             concat_axis=0, tiled=True)  # [E, cap, d]
+
+    flat_out = jnp.concatenate(
+        [out.reshape(e.num_experts * cap, d),
+         jnp.zeros((1, d), out.dtype)], axis=0)
+    gathered = flat_out[slot] * w_flat[:, None].astype(out.dtype)
+    y_local = jnp.zeros((Nl, d), jnp.float32).at[t_flat].add(
+        gathered.astype(jnp.float32))
+
+    if ep > 1:
+        y = jnp.zeros((N, d), jnp.float32)
+        y = lax.dynamic_update_slice(y, y_local, (ctx.ep_rank() * Nl, 0))
+        # merge ranks duplicate the routing of the same token slice for
+        # their distinct ff-slices -> partials are disjoint; but the psum
+        # over tp_axes sums ep copies of nothing extra (each row wrote its
+        # own offset) and merge x model give ff partials: correct as-is.
+    else:
+        y = y_local
+
+    y = ctx.psum(y.reshape(B, T, d)).astype(x.dtype) if ctx.tp > 1 \
+        else y.reshape(B, T, d).astype(x.dtype)
+
+    if e.num_shared_experts:
+        y = y + mlp(p["shared"], x, ctx, e.num_shared_experts * e.d_ff_expert)
+    return y, aux
+
+
+def dense_moe_ref(cfg: ArchConfig, p, x):
+    """Oracle: every token computed by its top-k experts, no capacity, no
+    parallelism. Used by tests."""
+    e = cfg.moe
+    B, T, d = x.shape
+    tokens = x.reshape(-1, d)
+    experts, weights, aux = route(p["router"], tokens, e.top_k)
+    h_all = jnp.einsum("nd,edf->enf", tokens, p["e_gate"])
+    u_all = jnp.einsum("nd,edf->enf", tokens, p["e_up"])
+    o_all = jnp.einsum("enf,efd->end", silu(h_all) * u_all, p["e_down"])
+    sel = jnp.take_along_axis(
+        jnp.transpose(o_all, (1, 0, 2)), experts[..., None], axis=1)  # [N,k,d]
+    y = jnp.sum(sel * weights[..., None].astype(sel.dtype), axis=1)
+    y = y.reshape(B, T, d).astype(x.dtype)
+    if e.num_shared_experts:
+        from repro.core.views import SINGLE
+        y = y + mlp(p["shared"], x, SINGLE,
+                    e.num_shared_experts * e.d_ff_expert)
+    return y, aux

@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel c):
+    r_t = sigmoid(w_a * u_t + b_a)            (recurrence gate)
+    i_t = sigmoid(w_i * u_t + b_i)            (input gate)
+    log a_t = -8 * softplus(Lambda) * r_t     (learned decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Simplification vs. the paper: gates use per-channel (diagonal) weights
+instead of block-diagonal projections — noted in DESIGN.md; the
+recurrence structure and state shape are unchanged. Channels are TP
+view-sharded; the block is conv1d -> RG-LRU on one branch, GeLU gate on
+the other, merged by the row-parallel out projection (one psum).
+State = (conv_state [B,cw-1,Wl], h [B,Wl] fp32).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.views import TPContext
+from repro.models.common import gelu, init_linear, silu
+
+CONV_W = 4
+
+
+def width(cfg: ArchConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ArchConfig, dtype):
+    d, w = cfg.d_model, width(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_x": init_linear(ks[0], d, w, dtype),
+        "w_gate": init_linear(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (CONV_W, w), jnp.float32)
+                   * (1.0 / math.sqrt(CONV_W))).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "lam": jnp.full((w,), 0.7, jnp.float32),   # Lambda (decay param)
+        "gate_a_w": jnp.zeros((w,), jnp.float32),
+        "gate_a_b": jnp.full((w,), 2.0, jnp.float32),
+        "gate_i_w": jnp.zeros((w,), jnp.float32),
+        "gate_i_b": jnp.zeros((w,), jnp.float32),
+        "w_out": init_linear(ks[3], w, d, dtype),
+    }
+
+
+def _rglru_scan(u, h0, lam, gaw, gab, giw, gib):
+    """u [B,T,Wl]; h0 [B,Wl] fp32 -> (y [B,T,Wl] fp32, hT)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * gaw + gab)
+    i = jax.nn.sigmoid(uf * giw + gib)
+    log_a = -8.0 * jax.nn.softplus(lam) * r          # [B,T,Wl] (<=0)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * uf)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+    hT, ys = lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                 jnp.moveaxis(gated, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def rglru_block(cfg: ArchConfig, p, x, ctx: TPContext, state, *, mode: str):
+    """x [B,T,d] replicated -> (y replicated, new_state)."""
+    w = width(cfg)
+    B_, T, d = x.shape
+    u = x @ ctx.activate(p["w_x"], 1, w)
+    gate = gelu(x @ ctx.activate(p["w_gate"], 1, w))
+
+    cw = ctx.activate(p["conv_w"], 1, w)
+    cb = ctx.activate(p["conv_b"], 0, w)
+    Wl = u.shape[-1]
+    if state is None:
+        conv_state = jnp.zeros((B_, CONV_W - 1, Wl), x.dtype)
+        h0 = jnp.zeros((B_, Wl), jnp.float32)
+    else:
+        conv_state, h0 = state
+
+    full = jnp.concatenate([conv_state, u], axis=1)
+    u = sum(full[:, i:i + T] * cw[i][None, None] for i in range(CONV_W)) \
+        + cb[None, None]
+    new_conv = full[:, -(CONV_W - 1):]
+
+    lam = ctx.activate(p["lam"], 0, w)
+    gaw = ctx.activate(p["gate_a_w"], 0, w)
+    gab = ctx.activate(p["gate_a_b"], 0, w)
+    giw = ctx.activate(p["gate_i_w"], 0, w)
+    gib = ctx.activate(p["gate_i_b"], 0, w)
+
+    if mode == "decode":
+        uf = u[:, 0].astype(jnp.float32)
+        r = jax.nn.sigmoid(uf * gaw + gab)
+        i = jax.nn.sigmoid(uf * giw + gib)
+        log_a = -8.0 * jax.nn.softplus(lam) * r
+        a = jnp.exp(log_a)
+        h = a * h0 + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-12)) \
+            * (i * uf)
+        y = h[:, None]
+        hT = h
+    else:
+        y, hT = _rglru_scan(u, h0, lam, gaw, gab, giw, gib)
+
+    y = (y.astype(x.dtype) * gate)
+    out = y @ ctx.activate(p["w_out"], 0, w)
+    out = ctx.psum(out, w)
+    new_state = (new_conv, hT) if state is not None else None
+    return out, new_state

@@ -1,0 +1,333 @@
+"""Backbone assembly: heterogeneous layer stacks via lax.scan groups.
+
+A layer *kind* is ``(mixer, ffn)`` with mixer in {gqa, gqa_win, mla,
+mamba, rglru} and ffn in {mlp, gelu_mlp, moe, none}; enc-dec decoders add
+a cross-attention sub-block. The stack plan partitions layers into scan
+groups of a repeating kind sequence (hybrid archs scan super-layers), so
+the lowered HLO stays small for 60-90-layer models while cost analysis
+can scale per-layer terms by trip counts (analysis/roofline.py).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core.views import TPContext
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models.cache import causal_attention
+from repro.models.common import (init_embedding, init_linear, rms_norm,
+                                 sinusoidal_positions)
+from repro.models.mamba2 import init_mamba2, mamba2_layer
+from repro.models.rglru import init_rglru, rglru_block
+
+Kind = Tuple[str, str]  # (mixer, ffn)
+
+
+# ---------------------------------------------------------------------------
+# stack plan
+# ---------------------------------------------------------------------------
+
+def stack_plan(cfg: ArchConfig) -> List[Tuple[Tuple[Kind, ...], int]]:
+    """[(kind_sequence, repeat_count), ...] covering all decoder layers."""
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        return [((("mamba", "none"),), L)]
+    if cfg.hybrid is not None:
+        pat = tuple(("rglru" if k == "rglru" else "gqa_win", "gelu_mlp")
+                    for k in cfg.hybrid.pattern)
+        n = L // len(pat)
+        plan = [(pat, n)] if n else []
+        rem = L % len(pat)
+        if rem:
+            plan.append((pat[:rem], 1))
+        return plan
+    ffn = "moe" if cfg.moe is not None else (
+        "gelu_mlp" if cfg.enc_dec is not None else "mlp")
+    mixer = "mla" if cfg.mla is not None else "gqa"
+    if cfg.mla is not None and cfg.moe is not None:
+        # DeepSeek-V2: first layer uses a dense FFN
+        return [(((mixer, "mlp"),), 1), (((mixer, "moe"),), L - 1)]
+    return [(((mixer, ffn),), L)]
+
+
+def kinds_in_plan(cfg: ArchConfig) -> List[Kind]:
+    out: List[Kind] = []
+    for seq, n in stack_plan(cfg):
+        for k in seq:
+            if k not in out:
+                out.append(k)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ArchConfig, kind: Kind, dtype):
+    mixer, ffn = kind
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if mixer in ("gqa", "gqa_win"):
+        p["attn"] = attn_mod.init_gqa(k1, cfg, dtype)
+    elif mixer == "mla":
+        p["attn"] = attn_mod.init_mla(k1, cfg, dtype)
+    elif mixer == "mamba":
+        p["mixer"] = init_mamba2(k1, cfg, dtype)
+    elif mixer == "rglru":
+        p["mixer"] = init_rglru(k1, cfg, dtype)
+    else:
+        raise ValueError(mixer)
+    if cfg.enc_dec is not None and mixer in ("gqa", "gqa_win"):
+        p["norm_x"] = jnp.ones((cfg.d_model,), dtype)
+        p["cross"] = attn_mod.init_gqa(k4, cfg, dtype)
+    if ffn != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        if ffn == "moe":
+            p["ffn"] = moe_mod.init_moe(k2, cfg, dtype)
+        else:
+            p["ffn"] = ffn_mod.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype,
+                                        gated=(ffn == "mlp"))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# per-layer apply
+# ---------------------------------------------------------------------------
+
+def cross_attention(cfg, p, x, ctx, enc_kv, *, enc_len=None):
+    """Decoder cross-attn over precomputed encoder K/V (enc_kv state:
+    (k,v) [B,F,KVl,hd])."""
+    B, T, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    Hl = ctx.local_units(H)
+    q = (x @ ctx.activate(p["wq"], 1, H)).reshape(B, T, Hl, hd)
+    k, v = enc_kv
+    F = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   jnp.repeat(k, Hl // k.shape[2], axis=2)
+                   .astype(jnp.float32)) * hd ** -0.5
+    if enc_len is not None:
+        mask = jnp.arange(F)[None, None, None, :] < enc_len[:, None, None,
+                                                            None]
+        from repro.models.cache import NEG_INF
+        s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr,
+                   jnp.repeat(v, Hl // v.shape[2], axis=2)
+                   .astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, T, Hl * hd)
+    return ctx.psum(o @ ctx.activate(p["wo"], 0, H), H)
+
+
+def apply_layer(cfg: ArchConfig, kind: Kind, p, x, ctx: TPContext, backend,
+                state, *, positions, mode: str, enc_kv=None, enc_len=None,
+                enc_out=None, window: Optional[int] = None):
+    mixer, ffn = kind
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    st_mix = state.get("mixer") if isinstance(state, dict) else None
+    if mixer in ("gqa", "gqa_win"):
+        w = cfg.hybrid.window if (mixer == "gqa_win" and cfg.hybrid) \
+            else window
+        out, st_mix = attn_mod.gqa_attention(cfg, p["attn"], h, ctx, backend,
+                                             st_mix, positions=positions,
+                                             window=w)
+    elif mixer == "mla":
+        out, st_mix = attn_mod.mla_attention(cfg, p["attn"], h, ctx, backend,
+                                             st_mix, positions=positions,
+                                             window=window)
+    elif mixer == "mamba":
+        out, st_mix = mamba2_layer(cfg, p["mixer"], h, ctx, st_mix, mode=mode)
+    elif mixer == "rglru":
+        out, st_mix = rglru_block(cfg, p["mixer"], h, ctx, st_mix, mode=mode)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    new_state = {"mixer": st_mix}
+
+    if "cross" in p and (enc_kv is not None or enc_out is not None):
+        if enc_kv is None:  # train mode: no cached cross-KV, compute inline
+            KV, hd2 = cfg.num_kv_heads, cfg.resolved_head_dim
+            KVl = ctx.local_units(KV)
+            Be, Fe, _ = enc_out.shape
+            enc_kv = (
+                (enc_out @ ctx.activate(p["cross"]["wk"], 1, KV))
+                .reshape(Be, Fe, KVl, hd2),
+                (enc_out @ ctx.activate(p["cross"]["wv"], 1, KV))
+                .reshape(Be, Fe, KVl, hd2))
+        hx = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        x = x + cross_attention(cfg, p["cross"], hx, ctx, enc_kv,
+                                enc_len=enc_len)
+    if ffn != "none":
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if ffn == "moe":
+            out2, aux = moe_mod.moe_ffn(cfg, p["ffn"], h2, ctx)
+        elif ffn == "gelu_mlp":
+            out2 = ffn_mod.gelu_mlp(p["ffn"], h2, ctx, cfg.d_ff)
+        else:
+            out2 = ffn_mod.mlp(p["ffn"], h2, ctx, cfg.d_ff)
+        x = x + out2
+    return x, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / head with TP vocab sharding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "tok": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "norm_f": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = init_linear(ks[1], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        w = cfg.frontend.embed_width or cfg.d_model
+        p["projector"] = init_linear(ks[2], w, cfg.d_model, dtype)
+    return p
+
+
+def embed_tokens(cfg, p, tokens, ctx: TPContext):
+    """Vocab-sharded embedding lookup: masked local gather + one psum."""
+    V = cfg.vocab_size
+    emb = p["tok"]
+    if ctx.tp == 1:
+        x = emb[tokens]
+    else:
+        emb = ctx.activate(emb, 0, V)
+        Vl = emb.shape[0]
+        shard = ctx.compute_shards(V)
+        # this device's vocab offset mirrors activate()'s slice choice
+        stored = ctx.stored_shards(V)
+        if stored == 1:
+            idx = (ctx.storage_major_rank() * shard) // ctx.tp
+        else:
+            rep = ctx.tp // shard
+            idx = ctx.storage_rank() * (shard // stored) \
+                + ctx.view_rank() // rep
+        off = idx * Vl
+        local = tokens - off
+        ok = (local >= 0) & (local < Vl)
+        x = jnp.where(ok[..., None], emb[jnp.clip(local, 0, Vl - 1)], 0)
+        x = ctx.psum(x, V)
+    if cfg.hybrid is not None:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def vocab_offset(cfg, ctx: TPContext):
+    V = cfg.vocab_size
+    if ctx.tp == 1:
+        return 0, V
+    shard = ctx.compute_shards(V)
+    Vl = V // shard
+    stored = ctx.stored_shards(V)
+    if stored == 1:
+        idx = (ctx.storage_major_rank() * shard) // ctx.tp
+    else:
+        rep = ctx.tp // shard
+        idx = ctx.storage_rank() * (shard // stored) + ctx.view_rank() // rep
+    return idx * Vl, Vl
+
+
+def lm_head(cfg, p, x, ctx: TPContext):
+    """Returns LOCAL vocab-shard logits [.., Vl] (fp32)."""
+    w = p["tok"] if cfg.tie_embeddings else p["head"]
+    V = cfg.vocab_size
+    if cfg.tie_embeddings:
+        w = ctx.activate(w, 0, V).astype(jnp.float32)
+        return x.astype(jnp.float32) @ w.T
+    w = ctx.activate(w, 1, V).astype(jnp.float32)
+    return x.astype(jnp.float32) @ w
+
+
+def gather_vocab(cfg, logits_local, ctx: TPContext):
+    """Assemble full-vocab logits from local shards: masked placement +
+    one psum (replication-safe). [.., Vl] -> [.., V] fp32, replicated."""
+    if ctx.tp == 1:
+        return logits_local
+    off, Vl = vocab_offset(cfg, ctx)
+    rep = ctx.replication(cfg.vocab_size)
+    full = jnp.zeros(logits_local.shape[:-1] + (cfg.vocab_size,),
+                     jnp.float32)
+    full = lax.dynamic_update_slice(
+        full, logits_local.astype(jnp.float32),
+        (0,) * (logits_local.ndim - 1) + (off,))
+    return ctx.psum_scaled(full, rep)
+
+
+def tp_cross_entropy(cfg, logits_local, labels, ctx: TPContext,
+                     mask=None):
+    """Distributed softmax CE over vocab-sharded logits (no all-gather)."""
+    off, Vl = vocab_offset(cfg, ctx)
+    rep = ctx.replication(cfg.vocab_size)
+    m_loc = jnp.max(logits_local, axis=-1)
+    if ctx.tp > 1:
+        m = lax.pmax(m_loc, ctx.tp_axes)
+    else:
+        m = m_loc
+    e = jnp.exp(logits_local - m[..., None])
+    denom = jnp.sum(e, axis=-1)
+    denom = ctx.psum_scaled(denom, rep)
+    local = labels - off
+    ok = (local >= 0) & (local < Vl)
+    gold = jnp.take_along_axis(logits_local,
+                               jnp.clip(local, 0, Vl - 1)[..., None],
+                               axis=-1)[..., 0]
+    gold = jnp.where(ok, gold, 0.0)
+    gold = ctx.psum_scaled(gold, rep) if ctx.tp > 1 else gold
+    nll = jnp.log(jnp.maximum(denom, 1e-30)) + m - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder (bidirectional, run once per request at prefill)
+# ---------------------------------------------------------------------------
+
+def init_encoder(key, cfg: ArchConfig, dtype):
+    n = cfg.enc_dec.enc_layers
+    ks = jax.random.split(key, n)
+    return {"layers": [init_layer(ks[i], cfg, ("gqa", "gelu_mlp"), dtype)
+                       for i in range(n)],
+            "norm": jnp.ones((cfg.d_model,), dtype)}
+
+
+def encode(cfg: ArchConfig, p_enc, frames, ctx: TPContext, *, frame_len=None):
+    """frames [B,F,d] (stub embeddings); bidirectional self-attention."""
+    x = frames + sinusoidal_positions(frames.shape[1],
+                                      cfg.d_model)[None].astype(frames.dtype)
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    Hl, KVl = ctx.local_units(H), ctx.local_units(KV)
+    B, F, d = x.shape
+    for lp in p_enc["layers"]:
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        ap = lp["attn"]
+        q = (h @ ctx.activate(ap["wq"], 1, H)).reshape(B, F, Hl, hd)
+        k = (h @ ctx.activate(ap["wk"], 1, KV)).reshape(B, F, KVl, hd)
+        v = (h @ ctx.activate(ap["wv"], 1, KV)).reshape(B, F, KVl, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       jnp.repeat(k, Hl // KVl, 2).astype(jnp.float32)) \
+            * hd ** -0.5
+        if frame_len is not None:
+            from repro.models.cache import NEG_INF
+            s = jnp.where(jnp.arange(F)[None, None, None, :] <
+                          frame_len[:, None, None, None], s, NEG_INF)
+        o = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1),
+                       jnp.repeat(v, Hl // KVl, 2).astype(jnp.float32))
+        o = o.astype(x.dtype).reshape(B, F, Hl * hd)
+        x = x + ctx.psum(o @ ctx.activate(ap["wo"], 0, H), H)
+        h2 = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + ffn_mod.gelu_mlp(lp["ffn"], h2, ctx, cfg.d_ff)
+    return rms_norm(x, p_enc["norm"], cfg.norm_eps)

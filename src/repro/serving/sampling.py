@@ -1,0 +1,22 @@
+"""Token sampling over full-vocab logits (greedy / temperature / top-k).
+Deterministic given a key; used by the engine and examples."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits: jax.Array, *, key: Optional[jax.Array] = None,
+           temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """logits [B,V] fp32 -> token ids [B]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[:, -1:]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    assert key is not None, "temperature sampling needs a key"
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,120 @@
+"""Discrete-event simulation backend: analytic roofline cost model.
+
+Per-step durations derive from the same three roofline terms the dry-run
+analysis reports (compute / HBM / ICI) — so the simulator is calibrated
+by construction against §Roofline. Decode is HBM-bound (weights + KV
+reads), prefill is MXU-bound, collectives ride the ICI ring. TP-merge
+divides weight/KV bytes per chip (near-linear TPOT gain) but adds
+per-layer psum latency — exactly the DP/TP trade the paper exploits.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.configs.base import ArchConfig
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.task_pool import Request
+from repro.serving.hardware import Hardware, V5E
+
+
+@dataclass
+class CostModel:
+    cfg: ArchConfig
+    plan: ParallelPlan
+    hw: Hardware = V5E
+    dtype_bytes: int = 2
+
+    def __post_init__(self):
+        self.n_active = self.cfg.active_params()
+        self.n_total = self.cfg.num_params()
+        self.kv_token_bytes = (self.cfg.kv_cache_dims_per_token
+                               * self.cfg.num_layers * self.dtype_bytes)
+
+    def tp(self, merge: int) -> int:
+        return merge * self.plan.engine_rows * self.plan.tp_base
+
+    # -- decode: one token for a batch, memory-bound ---------------------
+    def decode_step(self, merge: int, batch_per_group: int,
+                    avg_ctx: float) -> float:
+        tp = self.tp(merge)
+        wbytes = self.n_active * self.dtype_bytes / tp
+        kv = self.kv_token_bytes * avg_ctx * batch_per_group / tp
+        t_mem = (wbytes + kv) / (self.hw.hbm_bw * self.hw.mfu_decode_bw)
+        t_flop = (2 * self.n_active * batch_per_group
+                  / (tp * self.hw.peak_flops_bf16 * self.hw.mfu_prefill))
+        t_comm = self._comm(tp, batch_per_group, 1)
+        return max(t_mem, t_flop) + t_comm
+
+    # -- prefill: compute-bound -------------------------------------------
+    def prefill_step(self, merge: int, tokens_per_group: int,
+                     avg_ctx: float = 0.0) -> float:
+        tp = self.tp(merge)
+        flops = 2 * self.n_active * tokens_per_group
+        # causal attention quadratic term
+        flops += (2 * 2 * self.cfg.num_layers * self.cfg.d_model
+                  * tokens_per_group * (avg_ctx + tokens_per_group / 2))
+        t_flop = flops / (tp * self.hw.peak_flops_bf16 * self.hw.mfu_prefill)
+        wbytes = self.n_active * self.dtype_bytes / tp
+        t_mem = wbytes / (self.hw.hbm_bw * self.hw.mfu_decode_bw)
+        t_comm = self._comm(tp, 1, tokens_per_group)
+        return max(t_flop, t_mem) + t_comm
+
+    def _comm(self, tp: int, batch: int, tokens: int) -> float:
+        if tp <= 1:
+            return 0.0
+        L = self.cfg.num_layers
+        hidden = (batch * tokens * self.cfg.d_model * self.dtype_bytes)
+        # 2 all-reduces per layer, ring: 2(p-1)/p volume over ICI
+        vol = 2 * L * hidden * 2 * (tp - 1) / tp
+        lat = 2 * L * 2 * self.hw.ici_latency * math.log2(max(tp, 2))
+        return vol / self.hw.ici_bw + lat
+
+    # -- mode switching -----------------------------------------------------
+    def flying_switch(self) -> float:
+        return 0.015  # paper Table 2: live switch 15 ms
+
+    def cold_restart(self, tp: int) -> float:
+        wbytes = self.n_total * self.dtype_bytes / tp
+        return self.hw.startup_fixed + wbytes / self.hw.weight_load_bw
+
+
+@dataclass
+class SimBackend:
+    """Scheduler Backend running on the cost model (no devices)."""
+    cost: CostModel
+    switch_mode: str = "flying"     # 'flying' | 'restart' | 'none'
+    dp_throughput_penalty: float = 1.0  # shift-parallelism proxy uses <1
+
+    def prefill(self, reqs: Sequence[Request], merge: int,
+                chunk_tokens: int) -> float:
+        groups: dict = {}
+        for r in reqs:
+            c = min(chunk_tokens, r.prompt_len)
+            groups[r.engine_group] = groups.get(r.engine_group, 0) + c
+        worst = max(groups.values())
+        return self.cost.prefill_step(merge, worst)
+
+    def decode(self, reqs: Sequence[Request], merge: int) -> float:
+        groups: dict = {}
+        ctx: dict = {}
+        for r in reqs:
+            groups[r.engine_group] = groups.get(r.engine_group, 0) + 1
+            ctx[r.engine_group] = ctx.get(r.engine_group, 0) \
+                + r.prompt_len + r.generated
+        worst = 0.0
+        for g, b in groups.items():
+            t = self.cost.decode_step(merge, b, ctx[g] / b)
+            worst = max(worst, t)
+        return worst / self.dp_throughput_penalty
+
+    def switch(self, old: int, new: int) -> float:
+        if old == new:
+            return 0.0
+        if self.switch_mode == "flying":
+            return self.cost.flying_switch()
+        if self.switch_mode == "restart":
+            return self.cost.cold_restart(self.cost.tp(new))
+        return 0.0

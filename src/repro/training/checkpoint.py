@@ -1,0 +1,49 @@
+"""Minimal checkpointing: param/opt pytrees to a directory of .npy files
+plus a structure manifest (no external deps; works with sharded arrays by
+gathering to host)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree, step: int = 0) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {"n_leaves": len(leaves), "step": step,
+                "treedef": str(treedef)}
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(path, f"leaf_{i}.npy"),
+                np.asarray(jax.device_get(leaf)))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore(path: str, like_tree):
+    leaves, treedef = _flatten(like_tree)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["n_leaves"] == len(leaves), "structure mismatch"
+    new = [np.load(os.path.join(path, f"leaf_{i}.npy"))
+           for i in range(len(leaves))]
+    for old, n in zip(leaves, new):
+        assert tuple(old.shape) == tuple(n.shape), (old.shape, n.shape)
+    return jax.tree.unflatten(treedef, new), manifest["step"]
+
+
+def latest_step(path: str) -> int:
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f)["step"]
+    except FileNotFoundError:
+        return -1

@@ -1,0 +1,64 @@
+"""AdamW in pure JAX (no external deps), sharding-aware: optimizer state
+inherits the parameter sharding (fp32 m/v alongside bf16 params)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup: int = 100
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def _schedule(self, step):
+        s = step.astype(jnp.float32)
+        return self.lr * jnp.minimum(1.0, (s + 1) / max(self.warmup, 1))
+
+    def update(self, params, grads, state: AdamWState):
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        step = state.step + 1
+        lr = self._schedule(step)
+        b1c = 1 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1 - self.b2 ** step.astype(jnp.float32)
+
+        gs = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+        m = jax.tree.map(lambda m_, g: self.b1 * m_ + (1 - self.b1) * g,
+                         state.m, gs)
+        v = jax.tree.map(
+            lambda v_, g: self.b2 * v_ + (1 - self.b2) * jnp.square(g),
+            state.v, gs)
+
+        def upd(p, m_, v_):
+            delta = (m_ / b1c) / (jnp.sqrt(v_ / b2c) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, AdamWState(step=step, m=m, v=v)
+
+    def state_specs(self, param_specs) -> AdamWState:
+        from jax.sharding import PartitionSpec as P
+        return AdamWState(step=P(), m=param_specs, v=param_specs)

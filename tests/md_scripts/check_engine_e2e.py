@@ -1,0 +1,58 @@
+"""End-to-end real execution: DynamicScheduler + FlyingEngine on 8 host
+devices, with live DP<->TP switches mid-serve (zero-copy checked)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.engine import FlyingEngine
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.policy import FlyingPolicy
+from repro.core.scheduler import (DynamicScheduler, SchedulerConfig, HARD,
+                                  SOFT, SEQUENTIAL)
+from repro.core.task_pool import Request
+from repro.models.model import build_model
+from repro.serving.metrics import summarize
+
+
+def main():
+    cfg = get_config("llama3-8b").reduced()
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.key(0))
+    plan = ParallelPlan(engine_rows=1, tp_base=2, data_rows=4)
+    geom = PoolGeometry(cfg, plan, num_blocks=64, block_base=4)
+
+    for strategy in (HARD, SOFT, SEQUENTIAL):
+        eng = FlyingEngine(model, plan, geom, params, batch_per_engine=2,
+                           max_blocks_per_req=16, prefill_len=8,
+                           check_zero_copy=True)
+        sched = DynamicScheduler(
+            plan, geom, eng,
+            SchedulerConfig(strategy=strategy, max_batch_per_group=2,
+                            prefill_chunk=8),
+            policy=FlyingPolicy())
+        sched.adaptors = eng.adaptors  # share the allocation tables
+        for i in range(10):
+            sched.submit(Request(req_id=f"r{i}", arrival=i * 0.01,
+                                 prompt_len=8, output_len=4,
+                                 priority=1 if i == 5 else 0))
+        sched.run(max_steps=500)
+        done = [r for r in sched.pool.all.values() if r.state == "done"]
+        assert len(done) == 10, (strategy, [
+            (r.req_id, r.state, r.generated) for r in
+            sched.pool.all.values()])
+        for r in done:
+            toks = eng.generated_tokens(r.req_id)
+            assert len(toks) >= r.output_len, (r.req_id, len(toks))
+        m = summarize(done)
+        print(f"{strategy:10s}: 10/10 done, switches={sched.switches}, "
+              f"zero-copy checks passed, p90TTFT={m.p90_ttft:.3f}s")
+    print("ENGINE E2E OK")
+
+
+if __name__ == "__main__":
+    main()

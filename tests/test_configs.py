@@ -1,0 +1,95 @@
+"""Config registry + reduced-variant invariants."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_configs
+from repro.configs.shapes import SHAPES
+
+EXPECTED = {
+    "stablelm-1.6b": dict(num_layers=24, d_model=2048, num_heads=32,
+                          num_kv_heads=32, d_ff=5632, vocab_size=100352),
+    "deepseek-v2-236b": dict(num_layers=60, d_model=5120, num_heads=128,
+                             vocab_size=102400),
+    "qwen3-4b": dict(num_layers=36, d_model=2560, num_heads=32,
+                     num_kv_heads=8, d_ff=9728, vocab_size=151936),
+    "mistral-large-123b": dict(num_layers=88, d_model=12288, num_heads=96,
+                               num_kv_heads=8, d_ff=28672,
+                               vocab_size=32768),
+    "phi3.5-moe-42b-a6.6b": dict(num_layers=32, d_model=4096, num_heads=32,
+                                 num_kv_heads=8, vocab_size=32064),
+    "llama3-8b": dict(num_layers=32, d_model=4096, num_heads=32,
+                      num_kv_heads=8, d_ff=14336, vocab_size=128256),
+    "mamba2-2.7b": dict(num_layers=64, d_model=2560, vocab_size=50280),
+    "internvl2-1b": dict(num_layers=24, d_model=896, num_heads=14,
+                         num_kv_heads=2, d_ff=4864, vocab_size=151655),
+    "whisper-base": dict(num_layers=6, d_model=512, num_heads=8,
+                         d_ff=2048, vocab_size=51865),
+    "recurrentgemma-9b": dict(num_layers=38, d_model=4096, num_heads=16,
+                              num_kv_heads=1, d_ff=12288,
+                              vocab_size=256000),
+}
+
+
+def test_all_assigned_archs_registered():
+    names = list_configs()
+    for a in ASSIGNED_ARCHS:
+        assert a in names
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_exact_assigned_sizes(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+
+
+def test_moe_sizes():
+    ds = get_config("deepseek-v2-236b")
+    assert ds.moe.num_experts == 160 and ds.moe.top_k == 6
+    assert ds.moe.num_shared_experts == 2
+    assert ds.mla.kv_lora_rank == 512
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert phi.moe.num_experts == 16 and phi.moe.top_k == 2
+
+
+def test_param_counts_in_expected_band():
+    # closed-form estimates should land near the advertised sizes
+    bands = {
+        "stablelm-1.6b": (1.2e9, 2.2e9),
+        "llama3-8b": (7e9, 9.5e9),
+        "qwen3-4b": (3e9, 5.5e9),
+        "mistral-large-123b": (110e9, 135e9),
+        "deepseek-v2-236b": (200e9, 260e9),
+        "phi3.5-moe-42b-a6.6b": (36e9, 48e9),
+        "mamba2-2.7b": (2.0e9, 3.4e9),
+        "recurrentgemma-9b": (7e9, 12e9),
+        "internvl2-1b": (0.5e9, 1.3e9),
+        "whisper-base": (4e7, 2e8),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).num_params()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_active_params_less_than_total_for_moe():
+    for arch in ("deepseek-v2-236b", "phi3.5-moe-42b-a6.6b"):
+        cfg = get_config(arch)
+        assert cfg.active_params() < cfg.num_params() / 2
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_variant_limits(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers == 2
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.moe.num_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1

@@ -1,0 +1,161 @@
+"""Dynamic scheduler behaviour (paper §5): Algorithm-1 loop, the three
+switching strategies, the policy's three use cases — on the simulation
+backend."""
+import copy
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.policy import FlyingPolicy
+from repro.core.scheduler import (HARD, SEQUENTIAL, SOFT, DynamicScheduler,
+                                  SchedulerConfig)
+from repro.core.task_pool import PRIORITY_HIGH, Request
+from repro.serving.metrics import summarize
+from repro.serving.simulator import CostModel, SimBackend
+from repro.serving.workload import WorkloadSpec, generate
+
+CFG = get_config("llama3-8b")
+PLAN = ParallelPlan(engine_rows=1, tp_base=16, data_rows=16)
+
+
+def make_sched(strategy=HARD, fixed=None, switch="flying", blocks=40000,
+               cfg=CFG, layout="head"):
+    geom = PoolGeometry(cfg, PLAN, num_blocks=blocks, block_base=16,
+                        layout=layout)
+    be = SimBackend(CostModel(cfg, PLAN), switch_mode=switch)
+    sc = SchedulerConfig(strategy=strategy, fixed_merge=fixed)
+    return DynamicScheduler(PLAN, geom, be, sc,
+                            policy=None if fixed else FlyingPolicy())
+
+
+def burst(n=60, rate=50.0, prompt=512, out=64, prio_every=0):
+    reqs = []
+    for i in range(n):
+        reqs.append(Request(
+            req_id=f"r{i}", arrival=i / rate, prompt_len=prompt,
+            output_len=out,
+            priority=PRIORITY_HIGH if prio_every and i % prio_every == 0
+            else 0))
+    return reqs
+
+
+@pytest.mark.parametrize("strategy", [HARD, SOFT, SEQUENTIAL])
+def test_all_strategies_complete_all_requests(strategy):
+    s = make_sched(strategy)
+    for r in burst(50):
+        s.submit(r)
+    s.run()
+    done = [r for r in s.pool.all.values() if r.state == "done"]
+    assert len(done) == 50
+    for r in done:
+        assert r.generated == r.output_len
+        assert r.first_token_t is not None
+        assert r.finish_t >= r.first_token_t
+
+
+def test_static_modes_never_switch():
+    for fixed in (1, 16):
+        s = make_sched(fixed=fixed)
+        for r in burst(30):
+            s.submit(r)
+        s.run()
+        assert s.switches == 0
+        assert s.merge == fixed
+
+
+def test_flying_tracks_load_uc1():
+    """Use case 1: DP during bursts, TP at low load."""
+    s = make_sched(HARD)
+    reqs = burst(40, rate=100.0)  # heavy burst
+    reqs += [Request(req_id=f"t{i}", arrival=100.0 + i * 5.0,
+                     prompt_len=256, output_len=32) for i in range(4)]
+    for r in reqs:
+        s.submit(r)
+    s.run()
+    merges = {l.merge for l in s.log if l.t < 50}
+    assert 1 in merges, "burst phase should run DP"
+    late = [l.merge for l in s.log if l.t > 100]
+    assert late and max(late) > 1, "idle phase should merge for latency"
+
+
+def test_priority_triggers_tp_uc2():
+    s = make_sched(HARD)
+    for r in burst(20, rate=100.0, prio_every=7):
+        s.submit(r)
+    s.run()
+    m = summarize(s.pool.all.values())
+    mp = summarize(s.pool.all.values(), priority_only=True)
+    assert mp.mean_ttft <= m.mean_ttft * 1.5
+    assert s.switches > 0
+
+
+def test_long_context_merges_uc3():
+    """A request too large for one engine's pool forces a merge (stablelm
+    kv=32 still has head-split headroom at tp16, the paper's Eq. 3)."""
+    s = make_sched(HARD, blocks=2000, cfg=get_config("stablelm-1.6b"))
+    s.submit(Request(req_id="long", arrival=0.0, prompt_len=40000,
+                     output_len=16))
+    s.run()
+    assert s.pool.all["long"].state == "done"
+    assert max(l.merge for l in s.log) > 1
+
+
+def test_striped_layout_fits_long_context_without_merging():
+    """Beyond-paper: the striped cache pools capacity at ANY mode, so the
+    same request fits at merge=1."""
+    s = make_sched(HARD, blocks=2000, layout="striped")
+    s.submit(Request(req_id="long", arrival=0.0, prompt_len=40000,
+                     output_len=16))
+    s.run()
+    assert s.pool.all["long"].state == "done"
+
+
+def test_hard_preempt_pauses_and_resumes_without_recompute():
+    s = make_sched(HARD)
+    for i in range(8):
+        s.submit(Request(req_id=f"bg{i}", arrival=0.0, prompt_len=256,
+                         output_len=400))
+    s.submit(Request(req_id="hp", arrival=0.5, prompt_len=512,
+                     output_len=32, priority=PRIORITY_HIGH))
+    s.run()
+    hp = s.pool.all["hp"]
+    assert hp.state == "done"
+    for i in range(8):
+        bg = s.pool.all[f"bg{i}"]
+        assert bg.state == "done"
+        assert bg.generated == bg.output_len  # resumed, not restarted
+
+
+def test_soft_preempt_recomputes_speculative_kv():
+    s = make_sched(SOFT)
+    for i in range(4):
+        s.submit(Request(req_id=f"bg{i}", arrival=0.0, prompt_len=256,
+                         output_len=64))
+    s.submit(Request(req_id="tp0", arrival=0.1, prompt_len=512,
+                     output_len=32, mode="tp", num_engines=16))
+    s.run()
+    assert s.pool.all["tp0"].state == "done"
+
+
+def test_switch_costs_flow_into_latency():
+    fast = make_sched(HARD, switch="flying")
+    slow = make_sched(HARD, switch="restart")
+    for sch in (fast, slow):
+        for r in burst(30, rate=100.0, prio_every=9):
+            sch.submit(copy.deepcopy(r))
+        sch.run()
+    if fast.switches and slow.switches:
+        mf = summarize(fast.pool.all.values())
+        ms = summarize(slow.pool.all.values())
+        assert ms.p90_ttft > mf.p90_ttft  # cold restarts hurt
+
+
+def test_workload_generator_deterministic():
+    a = generate(WorkloadSpec(n_requests=50, seed=3))
+    b = generate(WorkloadSpec(n_requests=50, seed=3))
+    assert [(r.arrival, r.prompt_len) for r in a] == \
+        [(r.arrival, r.prompt_len) for r in b]
+    c = generate(WorkloadSpec(n_requests=50, seed=4))
+    assert [(r.arrival) for r in a] != [(r.arrival) for r in c]

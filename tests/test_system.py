@@ -1,0 +1,76 @@
+"""End-to-end system behaviour: the paper's headline claims reproduced on
+the simulation backend (full benchmark versions live in benchmarks/)."""
+import copy
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.kv_adaptor import KVCacheAdaptor, PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.policy import FlyingPolicy
+from repro.core.scheduler import HARD, DynamicScheduler, SchedulerConfig
+from repro.serving.metrics import summarize
+from repro.serving.simulator import CostModel, SimBackend
+from repro.serving.workload import WorkloadSpec, generate
+
+CFG = get_config("llama3-8b")
+PLAN = ParallelPlan(engine_rows=1, tp_base=16, data_rows=16)
+
+
+def run_system(fixed=None, n=250, switch="flying", seed=5):
+    geom = PoolGeometry(CFG, PLAN, num_blocks=60000, block_base=16)
+    be = SimBackend(CostModel(CFG, PLAN), switch_mode=switch)
+    s = DynamicScheduler(PLAN, geom, be,
+                         SchedulerConfig(strategy=HARD, fixed_merge=fixed),
+                         policy=None if fixed else FlyingPolicy())
+    for r in generate(WorkloadSpec(n_requests=n, phase_seconds=20.0,
+                                   seed=seed)):
+        s.submit(copy.deepcopy(r))
+    s.run()
+    return s, summarize(s.pool.all.values())
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    out["dp"] = run_system(fixed=1)
+    out["tp"] = run_system(fixed=16)
+    out["flying"] = run_system()
+    return out
+
+
+def test_everything_completes(results):
+    for name, (s, m) in results.items():
+        done = sum(1 for r in s.pool.all.values() if r.state == "done")
+        assert done == len(s.pool.all), name
+
+
+def test_flying_burst_ttft_tracks_dp(results):
+    """Paper §6.2: under bursts flying avoids static TP's queue collapse
+    and tracks the DP TTFT lower bound."""
+    _, dp = results["dp"]
+    _, tp = results["tp"]
+    _, fly = results["flying"]
+    assert tp.p90_ttft > 2.0 * dp.p90_ttft     # TP queues under bursts
+    assert fly.p90_ttft < 0.5 * tp.p90_ttft    # flying avoids the collapse
+    assert fly.p90_ttft < 3.0 * dp.p90_ttft    # ... and tracks DP
+
+
+def test_flying_throughput_near_dp(results):
+    """Paper: flying retains ~95-96% of DP peak throughput."""
+    _, dp = results["dp"]
+    _, fly = results["flying"]
+    assert fly.peak_throughput > 0.75 * dp.peak_throughput
+
+
+def test_kv_capacity_pooling_table2():
+    """Paper Table 2: merging engines multiplies max context (while the
+    adaptor can still split heads / always, striped)."""
+    g = PoolGeometry(get_config("stablelm-1.6b"), PLAN, num_blocks=1000,
+                     block_base=16)
+    assert g.capacity(2) == 2 * g.capacity(1)
+    s = PoolGeometry(CFG, PLAN, num_blocks=1000, block_base=16,
+                     layout="striped")
+    ad = KVCacheAdaptor(s)
+    assert s.capacity(16) // s.capacity(1) == 16
+    assert ad.max_context_tokens(16) == 16 * ad.max_context_tokens(1)

@@ -1,0 +1,79 @@
+"""Training substrate: loss decreases, checkpoint roundtrip, optimizer
+properties."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.modes import ParallelPlan
+from repro.models.model import build_model
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, batches
+from repro.training.optimizer import AdamW
+from repro.training.train_step import build_train_step, train_mesh
+
+
+def test_loss_decreases_llama():
+    cfg = get_config("llama3-8b").reduced()
+    m = build_model(cfg, jnp.float32)
+    plan = ParallelPlan(engine_rows=1, tp_base=1, data_rows=1)
+    mesh = train_mesh(plan)
+    opt = AdamW(lr=1e-3, warmup=5)
+    step, psh, osh, _ = build_train_step(m, plan, mesh, opt=opt)
+    params = jax.device_put(m.init(jax.random.key(0)), psh)
+    carry = (params, jax.jit(opt.init, out_shardings=osh)(params))
+    it = batches(DataConfig(cfg.vocab_size, 32, 4, seed=0))
+    losses = []
+    for _ in range(10):
+        b = next(it)
+        carry, mets = step(carry, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(mets["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_adamw_descends_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, warmup=1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(lr=1.0, grad_clip=1.0, weight_decay=0.0, warmup=1)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    p2, _ = opt.update(params, {"w": jnp.array([1e6, 0.0, 0.0])}, state)
+    assert np.isfinite(np.asarray(p2["w"])).all()
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("qwen3-4b").reduced()
+    m = build_model(cfg, jnp.float32)
+    params = m.init(jax.random.key(0))
+    path = os.path.join(tmp_path, "ck")
+    ckpt.save(path, params, step=17)
+    like = jax.tree.map(lambda a: jnp.zeros_like(a), params)
+    restored, step = ckpt.restore(path, like)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_pipeline_deterministic_and_learnable():
+    cfgd = DataConfig(vocab_size=100, seq_len=64, global_batch=2, seed=1,
+                      copy_period=16)
+    a = next(batches(cfgd))
+    b = next(batches(cfgd))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    t, l = a["tokens"], a["labels"]
+    assert t.shape == (2, 64) and l.shape == (2, 64)
+    assert (l[:, :-1] == t[:, 1:]).all()  # next-token shift
+    # induction structure: a sizeable fraction repeats copy_period back
+    rep = (t[:, cfgd.copy_period:] == t[:, :-cfgd.copy_period]).mean()
+    assert rep > 0.2
