@@ -1,0 +1,22 @@
+# Convenience targets; everything assumes the repo root as cwd.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench bench-smoke quickstart
+
+# tier-1 suite
+test:
+	$(PY) -m pytest -x -q
+
+# full benchmark suite (simulation backend)
+bench:
+	$(PY) benchmarks/run.py --fast
+
+# steady-state hot-path guard: tiny real-execution microbench on CPU;
+# fails if the decode path does any per-token host sync or if fused
+# device sampling diverges from the host argmax reference
+bench-smoke:
+	$(PY) benchmarks/run.py --smoke
+
+quickstart:
+	$(PY) examples/quickstart.py

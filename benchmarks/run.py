@@ -24,14 +24,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller workloads (CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="steady-state hot-path microbench only (tiny "
+                         "config, CPU); fails if the engine falls back "
+                         "to per-token host synchronization")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
     n = 300 if args.fast else 1200
 
+    if args.smoke:
+        from benchmarks import steady_state
+        print("benchmark,metric,value,derived")
+        t0 = time.time()
+        for row in steady_state.run(smoke=True):
+            print(row)
+        print(f"steady_state,elapsed_s,{time.time() - t0:.1f},")
+        return
+
     from benchmarks import (fig8_bursty, fig9_tpot, fig10_longcontext,
-                            kernels_micro, table1_priority,
+                            kernels_micro, steady_state, table1_priority,
                             table2_context_switch)
     suites = {
+        "steady_state": lambda: steady_state.run(smoke=args.fast),
         "fig8": lambda: fig8_bursty.run(n_requests=n),
         "fig9": lambda: fig9_tpot.run(n_requests=n),
         "table1": lambda: table1_priority.run(n_requests=max(n // 2, 100)),

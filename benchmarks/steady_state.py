@@ -1,0 +1,145 @@
+"""Steady-state decode microbenchmark: legacy sync hot path vs. the
+zero-sync path (fused on-device sampling + donated state buffers +
+bounded async in-flight window + vectorized batch assembly).
+
+Drives the FlyingEngine directly (no scheduler) through one prefill and
+N decode steps over a fixed request set — the pure steady state the
+paper's O(1)-switch argument assumes. Reports per-step decode latency
+and tokens/sec for both paths, asserts the new path performs ZERO
+per-token device->host transfers during the timed window (via the
+engine's sync counters), and checks greedy token-identity between the
+fused device argmax and the legacy host argmax.
+
+    PYTHONPATH=src python -m benchmarks.run --smoke
+    PYTHONPATH=src python benchmarks/steady_state.py [--steps N]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _build(fused: bool, donate: bool, window: int, *, bpe: int = 2,
+           prompt: int = 8):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.engine import FlyingEngine
+    from repro.core.kv_adaptor import PoolGeometry
+    from repro.core.modes import ParallelPlan
+    from repro.core.task_pool import Request
+
+    cfg = get_config("llama3-8b").reduced()
+    model_mod = __import__("repro.models.model", fromlist=["build_model"])
+    model = model_mod.build_model(cfg, jnp.float32)
+    params = model.init(jax.random.key(0))
+    n_dev = len(jax.devices())
+    tp = 2 if n_dev >= 4 else 1
+    rows = max(n_dev // tp, 1)
+    plan = ParallelPlan(engine_rows=1, tp_base=tp, data_rows=rows)
+    geom = PoolGeometry(cfg, plan, num_blocks=128, block_base=4)
+    eng = FlyingEngine(model, plan, geom, params, batch_per_engine=bpe,
+                       max_blocks_per_req=40, prefill_len=prompt,
+                       fused_sampling=fused, donate_states=donate,
+                       async_window=window)
+    reqs = []
+    for g in range(plan.dp_engines):
+        for i in range(bpe):
+            r = Request(req_id=f"r{g}_{i}", arrival=0.0, prompt_len=prompt,
+                        output_len=1 << 30)
+            r.engine_group = g
+            reqs.append(r)
+    # scheduler-equivalent allocation: prompt slots, then the first
+    # generated token's slot out of the final prefill step
+    for r in reqs:
+        eng.adaptors[r.engine_group].append_slots(r.req_id, prompt)
+    eng.prefill(reqs, 1, prompt)
+    for r in reqs:
+        eng.adaptors[r.engine_group].append_slots(r.req_id, 1)
+    return eng, reqs
+
+
+def _run_decode(eng, reqs, steps: int) -> float:
+    """N steady-state decode steps (scheduler appends one slot per
+    request after each step). Returns wall seconds for the whole run,
+    including the final completion wait."""
+    import jax
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        eng.decode(reqs, 1)
+        for r in reqs:
+            eng.adaptors[r.engine_group].append_slots(r.req_id, 1)
+    # charge in-flight work to the timed window (fair vs. the sync path)
+    jax.block_until_ready(eng.states)
+    return time.perf_counter() - t0
+
+
+def run(smoke: bool = False, steps: int = 0):
+    steps = steps or (24 if smoke else 96)
+    warm = 4
+    rows = []
+
+    eng_old, reqs_old = _build(fused=False, donate=False, window=0)
+    eng_new, reqs_new = _build(fused=True, donate=True, window=2)
+
+    results = {}
+    for name, (eng, reqs) in (("sync", (eng_old, reqs_old)),
+                              ("zerosync", (eng_new, reqs_new))):
+        _run_decode(eng, reqs, warm)  # compile + warm
+        s0 = eng.sync_stats
+        argmax0, d2h0, steps0 = s0.host_argmax, s0.d2h_batched, s0.steps
+        dt = _run_decode(eng, reqs, steps)
+        ntok = steps * len(reqs)
+        results[name] = dict(
+            step_ms=dt / steps * 1e3, tok_s=ntok / dt,
+            host_argmax=s0.host_argmax - argmax0,
+            d2h_batched=s0.d2h_batched - d2h0,
+            steps=s0.steps - steps0, eng=eng, reqs=reqs)
+
+    new = results["zerosync"]
+    # the guard CI keys on: the zero-sync path must not fall back to
+    # per-token host argmax, and the timed steady window must not
+    # transfer tokens to the host at all
+    assert new["host_argmax"] == 0, \
+        f"zero-sync decode fell back to host argmax x{new['host_argmax']}"
+    assert new["d2h_batched"] == 0, \
+        f"steady-state decode harvested tokens mid-window " \
+        f"(x{new['d2h_batched']})"
+    assert results["sync"]["host_argmax"] > 0  # counter actually counts
+
+    # greedy token-identity: fused device argmax == legacy host argmax
+    for ro, rn in zip(results["sync"]["reqs"], results["zerosync"]["reqs"]):
+        to = results["sync"]["eng"].generated_tokens(ro.req_id)
+        tn = results["zerosync"]["eng"].generated_tokens(rn.req_id)
+        n = min(len(to), len(tn))
+        assert n > 0 and to[:n] == tn[:n], \
+            f"token divergence for {ro.req_id}: {to[:8]} vs {tn[:8]}"
+
+    for name in ("sync", "zerosync"):
+        r = results[name]
+        yield f"steady_state,{name}/decode_step_ms,{r['step_ms']:.3f},"
+        yield f"steady_state,{name}/tokens_per_s,{r['tok_s']:.1f},"
+        yield (f"steady_state,{name}/host_argmax_per_step,"
+               f"{r['host_argmax'] / max(r['steps'], 1):.2f},")
+    speedup = results["sync"]["step_ms"] / results["zerosync"]["step_ms"]
+    yield f"steady_state,speedup_x,{speedup:.2f},"
+    yield "steady_state,token_identity,OK,"
+    yield "steady_state,zero_sync_guard,OK,"
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    print("benchmark,metric,value,derived")
+    for row in run(smoke=args.smoke, steps=args.steps):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

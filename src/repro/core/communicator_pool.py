@@ -15,10 +15,23 @@ At runtime a mode switch is an O(1) dict lookup (paper: "retrieved in
 O(1) time"); nothing is created on the critical path. ``stats`` records
 lookup vs. compile times — benchmarks/table2 reports the gap (the
 paper's 15 ms live vs. 146-292 s cold start).
+
+Hot-path contract (§Perf D):
+  - ``runner(..., sampled=True)`` compiles the sampling-fused step:
+    outputs are device-resident ``[B]`` token ids, never host logits.
+  - ``runner(..., donate=True)`` donates the state pytree
+    (``jax.jit(..., donate_argnums=(1,))``): per-layer KV pools update
+    in place instead of being duplicated every step — the multi-GB
+    state tree is never copied on the critical path, halving peak state
+    memory.
+  - batch/seq extents are bucketed with ``bucket_pow2``; callers pad
+    their host batches to the bucket so chunk-length variation hits an
+    already-compiled executable instead of triggering a recompile.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -28,6 +41,14 @@ from repro.configs.base import ArchConfig
 from repro.core.kv_adaptor import PoolGeometry
 from repro.core.modes import FlyingMode, ParallelPlan, mode_mesh
 from repro.core.steps import build_serve_step
+
+def _quiet_unused_donation() -> None:
+    """The CPU backend copies instead of aliasing when XLA declines a
+    donation; the fallback is correct, just not in-place — don't warn
+    once per step. Registered only when a donating runner is created,
+    never as an import side effect."""
+    warnings.filterwarnings(
+        "ignore", message="Some donated buffers were not usable")
 
 
 def bucket_pow2(n: int, lo: int = 1) -> int:
@@ -51,41 +72,59 @@ class CommunicatorPool:
 
     def __init__(self, model, plan: ParallelPlan, geom: PoolGeometry, *,
                  use_kernel: bool = False, chunked_prefill: bool = True,
-                 window: Optional[int] = None):
+                 window: Optional[int] = None,
+                 sample: Tuple[float, int] = (0.0, 0)):
         self.model = model
         self.plan = plan
         self.geom = geom
         self.use_kernel = use_kernel
         self.chunked = chunked_prefill
         self.window = window
+        self.sample = sample  # (temperature, top_k) for sampled runners
         # step 1: topology-aware group identification (contiguous, pow2)
         self.modes: Dict[int, FlyingMode] = {
             m: FlyingMode(plan, m) for m in plan.valid_merges()}
         self.meshes: Dict[int, jax.sharding.Mesh] = {
             m: mode_mesh(fm) for m, fm in self.modes.items()}
-        self._runners: Dict[Tuple[int, str], Callable] = {}
+        self._runners: Dict[Tuple, Callable] = {}
         self._compiled: Dict[Tuple, Any] = {}
         self.stats = PoolStats()
 
     # ------------------------------------------------------------------
-    def runner(self, merge: int, phase: str) -> Callable:
-        key = (merge, phase)
+    def runner(self, merge: int, phase: str, *, sampled: bool = False,
+               donate: bool = False, batch_bucket: Optional[int] = None,
+               seq_bucket: Optional[int] = None) -> Callable:
+        """Jitted step fn for (mode, phase, variant).
+
+        ``batch_bucket``/``seq_bucket`` are ``bucket_pow2`` extents the
+        caller pads its host batch to (§4.3 step 2 key tuple); they keep
+        one compiled shape per bucketed runner so prefill chunk-length
+        variation never recompiles on the critical path.
+        """
+        key = (merge, phase, sampled, donate, batch_bucket, seq_bucket)
         if key not in self._runners:
+            if donate:
+                _quiet_unused_donation()
             run, _, _ = build_serve_step(
                 self.model, self.modes[merge], self.geom, phase=phase,
                 window=self.window, use_kernel=self.use_kernel,
-                chunked=(phase == "prefill" and self.chunked))
-            self._runners[key] = jax.jit(run)
+                chunked=(phase == "prefill" and self.chunked),
+                sample=self.sample if sampled else None)
+            self._runners[key] = jax.jit(
+                run, donate_argnums=(1,) if donate else ())
         return self._runners[key]
 
     # -- step 2: pre-initialization --------------------------------------
-    def precompile(self, merge: int, phase: str, abstract_args) -> Any:
+    def precompile(self, merge: int, phase: str, abstract_args, *,
+                   sampled: bool = False, donate: bool = False) -> Any:
         """Eagerly lower+compile one executable (startup phase)."""
-        key = self._key(merge, phase, abstract_args)
+        key = self._key(merge, phase, abstract_args, sampled, donate)
         if key in self._compiled:
             return self._compiled[key]
         t0 = time.perf_counter()
-        lowered = self.runner(merge, phase).lower(*abstract_args)
+        runner = self.runner(merge, phase, sampled=sampled, donate=donate,
+                             batch_bucket=key[4], seq_bucket=key[5])
+        lowered = runner.lower(*abstract_args)
         compiled = lowered.compile()
         self.stats.compiles += 1
         self.stats.compile_s += time.perf_counter() - t0
@@ -93,10 +132,11 @@ class CommunicatorPool:
         return compiled
 
     def get(self, merge: int, phase: str, abstract_args,
-            allow_compile: bool = True) -> Any:
+            allow_compile: bool = True, *, sampled: bool = False,
+            donate: bool = False) -> Any:
         """O(1) retrieval on the serving critical path."""
         t0 = time.perf_counter()
-        key = self._key(merge, phase, abstract_args)
+        key = self._key(merge, phase, abstract_args, sampled, donate)
         hit = self._compiled.get(key)
         self.stats.lookups += 1
         self.stats.lookup_s += time.perf_counter() - t0
@@ -105,13 +145,25 @@ class CommunicatorPool:
         self.stats.misses += 1
         if not allow_compile:
             raise KeyError(f"executable {key} not pre-initialized")
-        return self.precompile(merge, phase, abstract_args)
+        return self.precompile(merge, phase, abstract_args,
+                               sampled=sampled, donate=donate)
 
     @staticmethod
-    def _key(merge: int, phase: str, abstract_args) -> Tuple:
+    def _key(merge: int, phase: str, abstract_args,
+             sampled: bool = False, donate: bool = False) -> Tuple:
+        """(merge, phase, variant, batch_bucket, seq_bucket, shapes) —
+        the §4.3 hash-map key. Callers pad their host batches to pow2
+        buckets BEFORE calling (the engine does), so the padded token
+        extents ARE the bucket ids — deriving them from the abstract
+        shapes keeps precompile/get keys identical to the runner keys
+        the engine uses at serve time."""
+        batch = abstract_args[2]
+        tok = batch.get("tokens") if hasattr(batch, "get") else None
+        bb = tok.shape[0] if tok is not None else None
+        sb = tok.shape[1] if tok is not None and tok.ndim > 1 else None
         shapes = tuple(jax.tree.leaves(jax.tree.map(
-            lambda a: (tuple(a.shape), str(a.dtype)), abstract_args[2])))
-        return (merge, phase, shapes)
+            lambda a: (tuple(a.shape), str(a.dtype)), batch)))
+        return (merge, phase, sampled, donate, bb, sb, shapes)
 
     def memory_overhead_bytes(self) -> int:
         """Analogue of the paper's ~2MB/group measurement: serialized

@@ -23,7 +23,7 @@ head cannot head-shard, so their view (and capacity) is mode-invariant —
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -137,11 +137,29 @@ def _v2(n: int) -> int:
 # host-side logical table + allocator
 # ---------------------------------------------------------------------------
 
+def ragged_arange(lens: np.ndarray) -> np.ndarray:
+    """[0..l0), [0..l1), ... concatenated — one vectorized pass. Shared
+    by the adaptor's batch builders and the engine's batch assembly."""
+    lens = np.asarray(lens, np.int64)
+    total = int(lens.sum())
+    return np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
+
+
 @dataclass
 class RequestKV:
     mode_tag: int                  # merge the blocks were written under
     block_ids: List[int] = field(default_factory=list)
     length: int = 0                # tokens currently cached
+    _ids_np: Optional[np.ndarray] = field(default=None, repr=False,
+                                          compare=False)
+
+    def ids_np(self) -> np.ndarray:
+        """Cached int32 view of block_ids (rebuilt only on growth) —
+        the vectorized batch builders index this without re-converting
+        the Python list every step."""
+        if self._ids_np is None or len(self._ids_np) != len(self.block_ids):
+            self._ids_np = np.asarray(self.block_ids, np.int32)
+        return self._ids_np
 
 
 class KVCacheAdaptor:
@@ -197,16 +215,76 @@ class KVCacheAdaptor:
         entry = self.allocate(req_id, n_tokens)
         cap = self.capacity
         pos = entry.length + np.arange(n_tokens)
-        blocks = np.asarray(entry.block_ids)[pos // cap]
-        slots = blocks * cap + pos % cap
+        blocks = entry.ids_np()[pos // cap]
+        slots = blocks.astype(np.int64) * cap + pos % cap
         entry.length += n_tokens
         return slots.astype(np.int32)
 
     def block_table(self, req_id: str, max_blocks: int) -> np.ndarray:
-        ids = self.table[req_id].block_ids
+        ids = self.table[req_id].ids_np()
         out = np.zeros((max_blocks,), np.int32)
-        out[: len(ids)] = ids
+        k = min(len(ids), max_blocks)
+        out[:k] = ids[:k]
         return out
+
+    # -- vectorized batch builders (§Perf D3) -----------------------------
+    def lengths_batch(self, req_ids: Sequence[str]) -> np.ndarray:
+        """Cached-token counts for a batch of requests, [N] int64."""
+        tab = self.table
+        return np.fromiter((tab[r].length for r in req_ids), np.int64,
+                           len(req_ids))
+
+    def block_table_batch(self, req_ids: Sequence[str], max_blocks: int,
+                          out: Optional[np.ndarray] = None) -> np.ndarray:
+        """[N, max_blocks] block table; identical rows to per-request
+        ``block_table``. ``out`` lets callers reuse a persistent host
+        buffer (rows are fully overwritten)."""
+        n = len(req_ids)
+        if out is None:
+            out = np.zeros((n, max_blocks), np.int32)
+        else:
+            out[:n].fill(0)
+        tab = self.table
+        for i, rid in enumerate(req_ids):
+            ids = tab[rid].ids_np()
+            k = min(len(ids), max_blocks)
+            out[i, :k] = ids[:k]
+        return out[:n]
+
+    def append_slots_batch(self, req_ids: Sequence[str],
+                           n_tokens) -> np.ndarray:
+        """Batched ``append_slots``: one padded [N, max(n)] int32 slot
+        array (-1 padding) for the next ``n_tokens[i]`` tokens of each
+        request, allocating blocks as needed. Row i equals the
+        per-request ``append_slots(req_ids[i], n_tokens[i])`` under the
+        same allocation order; the slot math is a single vectorized pass
+        over the flattened (request, offset) index space instead of a
+        Python loop per request."""
+        n = len(req_ids)
+        if np.isscalar(n_tokens):
+            lens = np.full((n,), int(n_tokens), np.int64)
+        else:
+            lens = np.asarray(n_tokens, np.int64)
+        entries = [self.allocate(rid, int(t))
+                   for rid, t in zip(req_ids, lens)]
+        cap = self.capacity
+        T = int(lens.max()) if n else 0
+        out = np.full((n, T), -1, np.int64)
+        total = int(lens.sum())
+        if total:
+            starts = np.fromiter((e.length for e in entries), np.int64, n)
+            rowcat = np.repeat(np.arange(n), lens)
+            offcat = ragged_arange(lens)
+            poscat = np.repeat(starts, lens) + offcat
+            maxb = max(len(e.block_ids) for e in entries)
+            btab = np.zeros((n, maxb), np.int64)
+            for i, e in enumerate(entries):
+                btab[i, : len(e.block_ids)] = e.ids_np()
+            blockcat = btab[rowcat, poscat // cap]
+            out[rowcat, offcat] = blockcat * cap + poscat % cap
+        for e, t in zip(entries, lens):
+            e.length += int(t)
+        return out.astype(np.int32)
 
     def release(self, req_id: str) -> None:
         entry = self.table.pop(req_id, None)
@@ -227,8 +305,6 @@ class KVCacheAdaptor:
         """Max context a single request can hold when merging m engines:
         the TP group pools the per-engine block budget."""
         cap = self.geom.capacity(merge)
-        scale = merge if self.geom.capacity_scales(merge) else 1
-        del scale
         # merging m engines gives the request m engines' pools: blocks are
         # symmetric per device, so the request sees num_blocks * B(m)
         return (self.geom.num_blocks - 1) * cap

@@ -39,7 +39,17 @@ HARD = "hard"
 
 
 class Backend(Protocol):
-    """Execution substrate: simulate or really execute one step."""
+    """Execution substrate: simulate or really execute one step.
+
+    The contract is async-aware: ``prefill``/``decode`` may only LAUNCH
+    a step and return immediately (the real engine runs a bounded
+    in-flight window of compiled steps with sampling fused on device).
+    Generated-token VALUES are observable only after ``drain`` — the
+    scheduler's finish detection is count-based (``Request.generated``),
+    so it never needs a mid-stream synchronization. Backends must drain
+    themselves at mode-switch boundaries (the §5.3 step-boundary safe
+    point); the scheduler additionally drains once at the end of a run.
+    """
 
     def prefill(self, reqs: Sequence[Request], merge: int,
                 chunk_tokens: int) -> float:
@@ -47,11 +57,16 @@ class Backend(Protocol):
         returns step duration in seconds."""
 
     def decode(self, reqs: Sequence[Request], merge: int) -> float:
-        """One decode token for every req; returns duration."""
+        """One decode token for every req; returns duration (dispatch
+        time for asynchronous backends)."""
 
     def switch(self, old: int, new: int) -> float:
         """Mode transition cost (flying: executable lookup; static
-        baselines: restart)."""
+        baselines: restart). Implies a drain of in-flight steps."""
+
+    def drain(self) -> None:
+        """Synchronize any in-flight asynchronous work so generated
+        tokens are host-visible. No-op for synchronous backends."""
 
 
 @dataclass
@@ -133,6 +148,12 @@ class DynamicScheduler:
                     # nothing runnable but work exists -> should not happen
                     break
                 self.now = max(self.now, nxt)
+        # async backends: surface in-flight generated tokens (the only
+        # other drain points are mode-switch safe boundaries, handled by
+        # the backend itself)
+        drain = getattr(self.backend, "drain", None)
+        if drain is not None:
+            drain()
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
@@ -274,13 +295,18 @@ class DynamicScheduler:
         progressed = False
         prefills = [r for r in admit if r.prefilled < r.prompt_len]
         if prefills:
+            chunks: Dict[int, List[Tuple[str, int]]] = {}
             for r in prefills:
                 if r.sched_t is None:
                     r.sched_t = self.now
                 chunk = min(self.cfg.prefill_chunk,
                             r.prompt_len - r.prefilled)
-                self._adaptor(r.engine_group).append_slots(r.req_id, chunk)
+                chunks.setdefault(r.engine_group, []).append(
+                    (r.req_id, chunk))
                 r.prefilled += chunk
+            for g, items in chunks.items():
+                self._adaptor(g).append_slots_batch(
+                    [rid for rid, _ in items], [c for _, c in items])
             dt = self.backend.prefill(prefills, self.merge,
                                       self.cfg.prefill_chunk)
             self.now += dt
@@ -300,15 +326,19 @@ class DynamicScheduler:
             dt = self.backend.decode(self.running, self.merge)
             self.now += dt
             done = []
+            alive: Dict[int, List[str]] = {}
             for r in self.running:
                 r.generated += 1
                 r.token_times.append(self.now)
                 if not r.done:
-                    self._adaptor(r.engine_group).append_slots(r.req_id, 1)
+                    alive.setdefault(r.engine_group, []).append(r.req_id)
                 if r.done:
                     r.finish_t = self.now
                     r.state = "done"
                     done.append(r)
+            # next token's slot, one vectorized allocation per adaptor
+            for g, rids in alive.items():
+                self._adaptor(g).append_slots_batch(rids, 1)
             for r in done:
                 self.running.remove(r)
                 self._adaptor(r.engine_group).release(r.req_id)

@@ -30,6 +30,15 @@ from repro.models.cache import DecodeBackend, PrefillBackend, TrainBackend
 from repro.models.model import Model
 from repro.models.transformer import tp_cross_entropy
 
+# jax >= 0.7 exposes shard_map at top level with `check_vma`; older
+# releases ship it under jax.experimental with the `check_rep` spelling
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SM_KW = {"check_vma": False}
+else:  # pragma: no cover - exercised on jax < 0.7 installs
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_KW = {"check_rep": False}
+
 DP_AXES = ("pod", "dp")
 TP_AXES = ("merge", "ed", "model")
 
@@ -71,8 +80,18 @@ def prefill_batch_spec():
 
 def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
                      phase: str, window: Optional[int] = None,
-                     use_kernel: bool = False, chunked: bool = False):
+                     use_kernel: bool = False, chunked: bool = False,
+                     sample: Optional[Tuple[float, int]] = None):
     """Build the shard_map step fn for (arch, mode, phase).
+
+    ``sample=(temperature, top_k)`` fuses token sampling into the
+    compiled step: the program returns device-resident ``[B]`` int32
+    token ids instead of gathered ``[B, V]`` logits, so steady-state
+    serving never materializes logits on the host (§Perf D1). Greedy
+    (temperature<=0) uses the gather-free distributed argmax; stochastic
+    sampling reads per-row seeds from ``batch['sample_seeds']``.
+    ``sample=None`` keeps the logits-returning contract (reference paths
+    and consistency tests).
 
     States layout (engine-owned): each per-layer pool leaf is stored with
     a leading ``[pod*dp*merge]`` group axis and an ``('ed','model')``-
@@ -92,7 +111,7 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
     merge = mode.merge
     model.states_as_carry = True  # §Perf A2: in-place pool updates
 
-    from repro.models.transformer import gather_vocab
+    from repro.models.transformer import gather_vocab, sample_tokens
 
     striped = geom.layout == "striped"
 
@@ -121,9 +140,16 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
             params, ctx, mode=phase, tokens=batch["tokens"],
             positions=batch["positions"], backend=backend, states=sts,
             window=window, enc_len=batch.get("enc_len"),
-            frontend_embeds=batch.get("frontend_embeds"))
+            frontend_embeds=batch.get("frontend_embeds"),
+            last_pos=batch.get("last_pos"))
         new_states = _view_states(model, new_sts, geom, merge,
                                   flat_to_view=False)
+        if sample is not None:
+            temp, top_k = sample
+            tokens = sample_tokens(cfg, logits[:, -1], ctx,
+                                   temperature=temp, top_k=top_k,
+                                   seeds=batch.get("sample_seeds"))
+            return tokens, new_states
         return gather_vocab(cfg, logits[:, -1], ctx), new_states
 
     # shard_map wrapping
@@ -141,12 +167,12 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
         bspecs = {k: base.get(k, P(DP_AXES, *([None] * (batch[k].ndim - 1))))
                   for k in batch}
         sspecs = jax.tree.map(lambda a: make_state_spec(a.ndim), states)
-        out_logits_spec = P(DP_AXES, None)
-        fn = jax.shard_map(
+        out_spec = P(DP_AXES,) if sample is not None else P(DP_AXES, None)
+        fn = _shard_map(
             step, mesh=mesh,
             in_specs=(pspecs, sspecs, bspecs),
-            out_specs=(out_logits_spec, sspecs),
-            check_vma=False)
+            out_specs=(out_spec, sspecs),
+            **_SM_KW)
         return fn(params, states, batch)
 
     return run, mesh, ctx

@@ -64,6 +64,11 @@ def main():
                             fixed_merge=args.fixed_merge or None),
             policy=None if args.fixed_merge else FlyingPolicy())
         sched.adaptors = backend.adaptors
+        if args.fixed_merge and args.fixed_merge != 1:
+            # static baseline: bind the engine (and shared adaptors) to
+            # the pinned mode once at startup — the scheduler never
+            # issues a transition for fixed_merge runs
+            backend.switch(1, args.fixed_merge)
         spec = WorkloadSpec(n_requests=args.requests, seed=args.seed,
                             prompt_range=(8, 8), output_range=(4, 8),
                             low_rate=(20, 50), burst_rate=(100, 200),

@@ -135,12 +135,15 @@ class Model:
     def forward(self, params, ctx: TPContext, *, mode: str,
                 tokens=None, positions=None, backend=None, states=None,
                 embeds=None, enc_len=None, window: Optional[int] = None,
-                frontend_embeds=None):
+                frontend_embeds=None, last_pos=None):
         """Returns (local vocab-shard logits fp32, new_states, aux_loss).
 
         mode: 'train' | 'prefill' | 'decode'. ``frontend_embeds`` feeds the
         stubbed modality frontend (vlm patches / audio frames).
-        ``positions`` [B,T] absolute positions.
+        ``positions`` [B,T] absolute positions. ``last_pos`` [B] (prefill
+        only): per-request index of the final REAL prompt token, so the
+        sampled logits don't depend on batch padding; defaults to the
+        last position of the padded window.
         """
         cfg = self.cfg
         enc_out = None
@@ -239,7 +242,11 @@ class Model:
 
         x = tfm.rms_norm(x, params["embed"]["norm_f"], cfg.norm_eps)
         if mode == "prefill":
-            x = x[:, -1:]  # only the last position's logits are sampled
+            # only the final prompt position's logits are sampled
+            if last_pos is not None:
+                x = x[jnp.arange(x.shape[0]), last_pos][:, None, :]
+            else:
+                x = x[:, -1:]
         logits = tfm.lm_head(cfg, params["embed"], x, ctx)
         return logits, (new_groups if states is not None else None), \
             aux_total

@@ -265,6 +265,50 @@ def gather_vocab(cfg, logits_local, ctx: TPContext):
     return ctx.psum_scaled(full, rep)
 
 
+def tp_argmax(cfg, logits_local, ctx: TPContext):
+    """Distributed greedy argmax over vocab-sharded logits [.., Vl] ->
+    token ids [..] int32, replicated across the TP group — WITHOUT
+    materializing the gathered [.., V] array (the serve hot path samples
+    on device; §Perf D1).
+
+    Tie-breaking matches ``jnp.argmax`` over the gathered logits exactly:
+    each shard proposes its first-occurrence global index, losers propose
+    V, and a pmin picks the lowest winning index. Shard-local values equal
+    the gathered values bitwise (replication pre-scaling is a power-of-two
+    exponent shift), so the winner set is identical too."""
+    if ctx.tp == 1:
+        return jnp.argmax(logits_local, axis=-1).astype(jnp.int32)
+    off, Vl = vocab_offset(cfg, ctx)
+    local_max = jnp.max(logits_local, axis=-1)
+    local_arg = jnp.argmax(logits_local, axis=-1).astype(jnp.int32) + off
+    m = lax.pmax(local_max, ctx.tp_axes)
+    cand = jnp.where(local_max == m, local_arg,
+                     jnp.int32(cfg.vocab_size))
+    return lax.pmin(cand, ctx.tp_axes).astype(jnp.int32)
+
+
+def sample_tokens(cfg, logits_local, ctx: TPContext, *,
+                  temperature: float = 0.0, top_k: int = 0, seeds=None):
+    """In-step sampling over vocab-sharded logits [B, Vl] -> [B] int32.
+
+    temperature <= 0: greedy via the gather-free distributed argmax.
+    temperature > 0: gather the vocab (replicated within the TP group, so
+    every rank draws the identical sample from the per-row ``seeds``),
+    apply optional top-k truncation, and draw categorically. ``seeds``
+    [B] int32/uint32 must be supplied by the host batch."""
+    if temperature <= 0.0:
+        return tp_argmax(cfg, logits_local, ctx)
+    full = gather_vocab(cfg, logits_local, ctx) / temperature
+    if top_k:
+        vals, _ = lax.top_k(full, top_k)
+        full = jnp.where(full < vals[:, -1:], -jnp.inf, full)
+    assert seeds is not None, "temperature sampling needs per-row seeds"
+
+    def draw(seed, row):
+        return jax.random.categorical(jax.random.PRNGKey(seed), row)
+    return jax.vmap(draw)(seeds.astype(jnp.uint32), full).astype(jnp.int32)
+
+
 def tp_cross_entropy(cfg, logits_local, labels, ctx: TPContext,
                      mask=None):
     """Distributed softmax CE over vocab-sharded logits (no all-gather)."""

@@ -118,3 +118,6 @@ class SimBackend:
         if self.switch_mode == "restart":
             return self.cost.cold_restart(self.cost.tp(new))
         return 0.0
+
+    def drain(self) -> None:
+        """Synchronous backend: nothing in flight."""

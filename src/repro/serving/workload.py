@@ -30,6 +30,11 @@ class WorkloadSpec:
     seed: int = 0
 
 
+def _rint(rng, lo, hi) -> int:
+    """rng.integers tolerant of degenerate (lo == hi) ranges."""
+    return int(rng.integers(lo, hi)) if hi > lo else int(lo)
+
+
 def generate(spec: WorkloadSpec) -> List[Request]:
     rng = np.random.default_rng(spec.seed)
     reqs: List[Request] = []
@@ -44,10 +49,10 @@ def generate(spec: WorkloadSpec) -> List[Request]:
             phase_low = not phase_low
             phase_end += (spec.phase_seconds if phase_low
                           else (spec.burst_seconds or spec.phase_seconds))
-        prompt = int(rng.integers(*spec.prompt_range))
+        prompt = _rint(rng, *spec.prompt_range)
         if spec.long_context_frac and rng.uniform() < spec.long_context_frac:
             prompt = spec.long_prompt
-        out = int(rng.integers(*spec.output_range))
+        out = _rint(rng, *spec.output_range)
         prio = PRIORITY_HIGH if (spec.priority_frac and
                                  rng.uniform() < spec.priority_frac) \
             else PRIORITY_NORMAL

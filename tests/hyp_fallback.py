@@ -1,0 +1,77 @@
+"""Property-test shim: use hypothesis when installed, else a small
+deterministic fallback engine so the suite still collects and runs.
+
+The fallback draws ``max_examples`` pseudo-random examples from a
+function-name-seeded RNG (stable across runs) covering the same strategy
+combinators the suite uses: integers, sampled_from, lists, tuples. It is
+not a shrinker — a real hypothesis install gives better minimal
+counterexamples — but the invariants get exercised either way.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(items):
+            seq = list(items)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elem.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(
+                lambda rng: tuple(e.draw(rng) for e in elems))
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        # Like hypothesis, strategies fill the TRAILING parameters; any
+        # leading ones are pytest fixtures, which the wrapper's synthetic
+        # signature exposes (no functools.wraps: pytest must not see the
+        # strategy-supplied params).
+        def deco(fn):
+            sig = inspect.signature(fn)
+            lead = list(sig.parameters.values())[
+                : len(sig.parameters) - len(strats)]
+
+            def wrapper(**fixtures):
+                args = [fixtures[p.name] for p in lead]
+                n = getattr(fn, "_max_examples", 20)
+                rng = random.Random(fn.__qualname__)
+                for _ in range(n):
+                    fn(*args, *[s.draw(rng) for s in strats])
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__signature__ = inspect.Signature(lead)
+            return wrapper
+        return deco

@@ -1,0 +1,94 @@
+"""Zero-sync hot path under 8 forced host devices: the fused/donated/
+async engine is token-identical to the legacy sync engine through a live
+DP->TP mode switch, state buffers reinterpret zero-copy across the
+switch (pointer-asserted inside FlyingEngine.switch), and steady-state
+decode performs no per-token device->host transfer."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.engine import FlyingEngine
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.task_pool import Request
+from repro.models.model import build_model
+
+PROMPT = 8
+
+
+def make_reqs(tag, groups, per_group):
+    reqs = []
+    for g in groups:
+        for i in range(per_group):
+            r = Request(req_id=f"{tag}{g}_{i}", arrival=0.0,
+                        prompt_len=PROMPT, output_len=1 << 30)
+            r.engine_group = g
+            reqs.append(r)
+    return reqs
+
+
+def phase(eng, reqs, merge, steps):
+    for r in reqs:
+        eng.adaptors[r.engine_group].append_slots(r.req_id, PROMPT)
+    eng.prefill(reqs, merge, PROMPT)
+    for r in reqs:
+        eng.adaptors[r.engine_group].append_slots(r.req_id, 1)
+    for _ in range(steps):
+        eng.decode(reqs, merge)
+        for r in reqs:
+            eng.adaptors[r.engine_group].append_slots(r.req_id, 1)
+    for r in reqs:
+        eng.adaptors[r.engine_group].release(r.req_id)
+
+
+def run(eng):
+    # phase A: merge=1, every engine serving its own batch
+    a = make_reqs("a", range(eng.plan.dp_engines), eng.bpe)
+    phase(eng, a, 1, 6)
+    # live switch 1 -> 2 (zero-copy: params AND states pointer-asserted)
+    eng.switch(1, 2)
+    # phase B: merged pairs, lead engines 0 and 2
+    b = make_reqs("b", range(0, eng.plan.dp_engines, 2), eng.bpe * 2)
+    phase(eng, b, 2, 6)
+    eng.switch(2, 1)
+    c = make_reqs("c", range(eng.plan.dp_engines), eng.bpe)
+    phase(eng, c, 1, 4)
+    return {r.req_id: eng.generated_tokens(r.req_id) for r in a + b + c}
+
+
+def main():
+    cfg = get_config("llama3-8b").reduced()
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.key(0))
+    plan = ParallelPlan(engine_rows=1, tp_base=2, data_rows=4)
+    geom = PoolGeometry(cfg, plan, num_blocks=64, block_base=4)
+
+    eng_new = FlyingEngine(model, plan, geom, params, batch_per_engine=2,
+                           prefill_len=PROMPT, check_zero_copy=True)
+    eng_old = FlyingEngine(model, plan, geom, params, batch_per_engine=2,
+                           prefill_len=PROMPT, check_zero_copy=True,
+                           fused_sampling=False, donate_states=False,
+                           async_window=0)
+    toks_new = run(eng_new)
+    toks_old = run(eng_old)
+    assert toks_new == toks_old, {
+        k: (toks_new[k], toks_old[k]) for k in toks_new
+        if toks_new[k] != toks_old[k]}
+    assert all(len(v) >= 5 for v in toks_new.values())
+    s = eng_new.sync_stats
+    assert s.host_argmax == 0, s
+    assert eng_old.sync_stats.host_argmax > 0
+    # drains happened only at the two switches + final readouts
+    print(f"tokens identical across {len(toks_new)} requests and 2 live "
+          f"switches; zero-copy (params+states) verified; "
+          f"fused path host_argmax=0 (legacy="
+          f"{eng_old.sync_stats.host_argmax})")
+    print("HOTPATH OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,7 @@
 """KV Cache Adaptor property tests (paper §4.2 invariants)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyp_fallback import given, settings, st
 
 from repro.configs import get_config
 from repro.core.kv_adaptor import KVCacheAdaptor, PoolGeometry
@@ -114,3 +113,65 @@ def test_scratch_slot_reserved():
     ad = KVCacheAdaptor(g)
     # last block is never allocatable (parked-write scratch)
     assert ad.free_blocks() == 7
+
+
+# ---------------------------------------------------------------------------
+# vectorized batch builders == per-request reference (§Perf D3)
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.integers(1, 70), min_size=1, max_size=9),
+       st.sampled_from([1, 2, 4]),
+       st.sampled_from(["head", "striped"]),
+       st.sampled_from(["stablelm-1.6b", "llama3-8b", "deepseek-v2-236b"]))
+@settings(max_examples=40, deadline=None)
+def test_append_slots_batch_matches_per_request(ntoks, merge, layout, arch):
+    """Batched slot/table builders must be bit-identical to the
+    per-request reference across merge modes, layouts, and block
+    boundaries (chunk sizes straddle capacity multiples)."""
+    g = geom_for(arch, layout=layout, blocks=512, base=4)
+    ad_ref, ad_bat = KVCacheAdaptor(g), KVCacheAdaptor(g)
+    ad_ref.switch_mode(merge)
+    ad_bat.switch_mode(merge)
+    rids = [f"r{i}" for i in range(len(ntoks))]
+    # two rounds: the second appends to existing entries (mid-block
+    # continuation + block-boundary crossings)
+    for _ in range(2):
+        ref = [ad_ref.append_slots(rid, n) for rid, n in zip(rids, ntoks)]
+        bat = ad_bat.append_slots_batch(rids, ntoks)
+        assert bat.shape == (len(rids), max(ntoks))
+        for i, (rid, n) in enumerate(zip(rids, ntoks)):
+            np.testing.assert_array_equal(bat[i, :n], ref[i])
+            assert (bat[i, n:] == -1).all()
+        for rid in rids:
+            np.testing.assert_array_equal(
+                ad_bat.block_table(rid, 32),
+                ad_ref.block_table(rid, 32))
+        np.testing.assert_array_equal(
+            ad_bat.block_table_batch(rids, 32),
+            np.stack([ad_ref.block_table(r, 32) for r in rids]))
+    np.testing.assert_array_equal(
+        ad_bat.lengths_batch(rids),
+        np.asarray([ad_ref.table[r].length for r in rids]))
+
+
+def test_append_slots_batch_scalar_tokens_and_reused_out():
+    g = geom_for()
+    ad = KVCacheAdaptor(g)
+    rids = ["a", "b", "c"]
+    slots = ad.append_slots_batch(rids, 5)
+    assert slots.shape == (3, 5)
+    assert (slots >= 0).all()
+    out = np.full((8, 4), 99, np.int32)
+    bt = ad.block_table_batch(rids, 4, out=out)
+    assert bt.shape == (3, 4)
+    assert bt.base is out  # persistent-buffer reuse, no realloc
+
+
+def test_ids_np_cache_tracks_growth():
+    ad = KVCacheAdaptor(geom_for(base=4))
+    ad.append_slots("r0", 3)
+    e = ad.table["r0"]
+    first = e.ids_np()
+    assert first is e.ids_np()          # cached while unchanged
+    ad.append_slots("r0", 8)            # crosses a block boundary
+    np.testing.assert_array_equal(e.ids_np(), np.asarray(e.block_ids))

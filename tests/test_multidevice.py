@@ -46,6 +46,13 @@ def test_engine_end_to_end_all_strategies():
     assert "ENGINE E2E OK" in out
 
 
+def test_zero_sync_hot_path_across_switches():
+    """Fused/donated/async engine is token-identical to the legacy sync
+    engine through live mode switches; states reinterpret zero-copy."""
+    out = run_script("check_hotpath.py")
+    assert "HOTPATH OK" in out
+
+
 def test_pallas_kernel_in_distributed_decode():
     """The Pallas paged-attention kernel (interpret mode on CPU) drops
     into the distributed serve step and matches the reference."""

@@ -1,8 +1,7 @@
 """Cost-model sanity properties (the simulator is the benchmark
 substrate, so its monotonicities must hold)."""
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyp_fallback import given, settings, st
 
 from repro.configs import get_config
 from repro.core.modes import ParallelPlan
