@@ -13,8 +13,11 @@ bench:
 	$(PY) benchmarks/run.py --fast
 
 # steady-state hot-path guard: tiny real-execution microbench on CPU;
-# fails if the decode path does any per-token host sync or if fused
-# device sampling diverges from the host argmax reference
+# fails if the decode path does any per-token host sync, if fused
+# device sampling diverges from the host argmax reference, or if
+# mb-bucketed decode diverges from the narrow-engine reference.
+# Writes the perf-trajectory artifact BENCH_decode.json at the repo
+# root (step ms, tok/s, sync counters, context-sweep points).
 bench-smoke:
 	$(PY) benchmarks/run.py --smoke
 

@@ -42,11 +42,19 @@ from repro.core.kv_adaptor import PoolGeometry
 from repro.core.modes import FlyingMode, ParallelPlan, mode_mesh
 from repro.core.steps import build_serve_step
 
+_donation_quieted = False
+
+
 def _quiet_unused_donation() -> None:
     """The CPU backend copies instead of aliasing when XLA declines a
     donation; the fallback is correct, just not in-place — don't warn
-    once per step. Registered only when a donating runner is created,
-    never as an import side effect."""
+    once per step. Registered once, only when the first donating runner
+    is created, never as an import side effect (runner keys multiply
+    with mb/seq buckets; re-registering would grow warnings.filters)."""
+    global _donation_quieted
+    if _donation_quieted:
+        return
+    _donation_quieted = True
     warnings.filterwarnings(
         "ignore", message="Some donated buffers were not usable")
 
@@ -71,7 +79,8 @@ class CommunicatorPool:
     """Per-mode meshes + eagerly compiled executables."""
 
     def __init__(self, model, plan: ParallelPlan, geom: PoolGeometry, *,
-                 use_kernel: bool = False, chunked_prefill: bool = True,
+                 use_kernel: Optional[bool] = None,
+                 chunked_prefill: bool = True,
                  window: Optional[int] = None,
                  sample: Tuple[float, int] = (0.0, 0)):
         self.model = model
@@ -93,15 +102,21 @@ class CommunicatorPool:
     # ------------------------------------------------------------------
     def runner(self, merge: int, phase: str, *, sampled: bool = False,
                donate: bool = False, batch_bucket: Optional[int] = None,
-               seq_bucket: Optional[int] = None) -> Callable:
+               seq_bucket: Optional[int] = None,
+               mb_bucket: Optional[int] = None) -> Callable:
         """Jitted step fn for (mode, phase, variant).
 
-        ``batch_bucket``/``seq_bucket`` are ``bucket_pow2`` extents the
-        caller pads its host batch to (§4.3 step 2 key tuple); they keep
-        one compiled shape per bucketed runner so prefill chunk-length
-        variation never recompiles on the critical path.
+        ``batch_bucket``/``seq_bucket``/``mb_bucket`` are ``bucket_pow2``
+        extents the caller pads its host batch to (§4.3 step 2 key
+        tuple); they keep one compiled shape per bucketed runner so
+        chunk-length variation never recompiles on the critical path.
+        ``mb_bucket`` is the block-table width (§Perf D5): a batch of
+        short contexts runs a narrow executable whose attention cost
+        tracks live context, even when the engine is configured for a
+        long-context ``max_blocks``.
         """
-        key = (merge, phase, sampled, donate, batch_bucket, seq_bucket)
+        key = (merge, phase, sampled, donate, batch_bucket, seq_bucket,
+               mb_bucket)
         if key not in self._runners:
             if donate:
                 _quiet_unused_donation()
@@ -123,7 +138,8 @@ class CommunicatorPool:
             return self._compiled[key]
         t0 = time.perf_counter()
         runner = self.runner(merge, phase, sampled=sampled, donate=donate,
-                             batch_bucket=key[4], seq_bucket=key[5])
+                             batch_bucket=key[4], seq_bucket=key[5],
+                             mb_bucket=key[6])
         lowered = runner.lower(*abstract_args)
         compiled = lowered.compile()
         self.stats.compiles += 1
@@ -151,19 +167,21 @@ class CommunicatorPool:
     @staticmethod
     def _key(merge: int, phase: str, abstract_args,
              sampled: bool = False, donate: bool = False) -> Tuple:
-        """(merge, phase, variant, batch_bucket, seq_bucket, shapes) —
-        the §4.3 hash-map key. Callers pad their host batches to pow2
-        buckets BEFORE calling (the engine does), so the padded token
-        extents ARE the bucket ids — deriving them from the abstract
-        shapes keeps precompile/get keys identical to the runner keys
-        the engine uses at serve time."""
+        """(merge, phase, variant, batch_bucket, seq_bucket, mb_bucket,
+        shapes) — the §4.3 hash-map key. Callers pad their host batches
+        to pow2 buckets BEFORE calling (the engine does), so the padded
+        token extents AND the block-table width ARE the bucket ids —
+        deriving them from the abstract shapes keeps precompile/get keys
+        identical to the runner keys the engine uses at serve time."""
         batch = abstract_args[2]
         tok = batch.get("tokens") if hasattr(batch, "get") else None
+        bt = batch.get("block_table") if hasattr(batch, "get") else None
         bb = tok.shape[0] if tok is not None else None
         sb = tok.shape[1] if tok is not None and tok.ndim > 1 else None
+        mb = bt.shape[1] if bt is not None and bt.ndim > 1 else None
         shapes = tuple(jax.tree.leaves(jax.tree.map(
             lambda a: (tuple(a.shape), str(a.dtype)), batch)))
-        return (merge, phase, sampled, donate, bb, sb, shapes)
+        return (merge, phase, sampled, donate, bb, sb, mb, shapes)
 
     def memory_overhead_bytes(self) -> int:
         """Analogue of the paper's ~2MB/group measurement: serialized

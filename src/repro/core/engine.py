@@ -67,12 +67,14 @@ class _DecodeCache:
     """Steady-state decode batch state: persistent numpy buffers plus
     incrementally-advanced per-request metadata. While the running set
     is unchanged, per-step batch prep is a handful of whole-array numpy
-    ops (lengths += 1, vectorized slot math) — no per-request Python."""
+    ops (lengths += 1, vectorized slot math) — no per-request Python.
+    ``mb`` is the bucketed block-table width the staging buffers were
+    built for; crossing a bucket boundary rebuilds the cache (§Perf D5)."""
     __slots__ = ("key", "rows", "row_reqs", "entries", "lengths", "nblk",
-                 "cap", "bufs")
+                 "cap", "bufs", "mb")
 
     def __init__(self, key, rows, row_reqs, entries, lengths, nblk, cap,
-                 bufs):
+                 bufs, mb):
         self.key = key
         self.rows = rows
         self.row_reqs = row_reqs
@@ -81,13 +83,15 @@ class _DecodeCache:
         self.nblk = nblk
         self.cap = cap
         self.bufs = bufs
+        self.mb = mb
 
 
 class FlyingEngine:
     def __init__(self, model: Model, plan: ParallelPlan, geom: PoolGeometry,
                  params, *, batch_per_engine: int = 4,
                  max_blocks_per_req: int = 16, prefill_len: int = 32,
-                 check_zero_copy: bool = False, use_kernel: bool = False,
+                 check_zero_copy: bool = False,
+                 use_kernel: Optional[bool] = None,
                  fused_sampling: bool = True, donate_states: bool = True,
                  async_window: int = 2, temperature: float = 0.0,
                  top_k: int = 0, harvest_limit: int = 512):
@@ -133,6 +137,7 @@ class FlyingEngine:
         self._bt_scratch: Optional[np.ndarray] = None
         self._host_bufs: Dict[Tuple, Dict[str, np.ndarray]] = {}
         self._pos_cache: Dict[Tuple[int, int], jax.Array] = {}
+        self._seed_iota: Dict[int, jax.Array] = {}
         self._step_counter = 0
 
     # ------------------------------------------------------------------
@@ -234,27 +239,35 @@ class FlyingEngine:
 
     def _bufs(self, key: Tuple) -> Dict[str, np.ndarray]:
         """Persistent preallocated host staging buffers, keyed by
-        (phase, merge, batch[, seq]). Reused across steps; a decode
-        cache rebuild re-initializes the rows it owns."""
+        (phase, merge, batch, mb_bucket[, seq]) — the block-table stage
+        is built at the bucketed width, so short-context batches upload
+        (and compile against) a narrow table (§Perf D5). Reused across
+        steps; a decode cache rebuild re-initializes the rows it owns."""
         b = self._host_bufs.get(key)
         if b is not None:
             return b
-        phase, _, B = key[0], key[1], key[2]
+        phase, _, B, mb = key[0], key[1], key[2], key[3]
         if phase == "decode":
             b = {"toks": np.zeros((B, 1), np.int32),
                  "pos": np.zeros((B, 1), np.int32),
                  "slots": np.full((B,), -1, np.int32),
-                 "btab": np.zeros((B, self.max_blocks), np.int32),
+                 "btab": np.zeros((B, mb), np.int32),
                  "ctxl": np.ones((B,), np.int32)}
         else:
-            T = key[3]
+            T = key[4]
             b = {"toks": np.zeros((B, T), np.int32),
                  "slots": np.full((B, T), -1, np.int32),
-                 "btab": np.zeros((B, self.max_blocks), np.int32),
+                 "btab": np.zeros((B, mb), np.int32),
                  "prior": np.zeros((B,), np.int32),
                  "lastp": np.zeros((B,), np.int32)}
         self._host_bufs[key] = b
         return b
+
+    def _mb_bucket(self, max_need_blocks: int) -> int:
+        """Bucketed block-table width: pow2 over the max blocks any live
+        request needs, capped at the engine's configured max."""
+        return min(bucket_pow2(max(int(max_need_blocks), 1)),
+                   self.max_blocks)
 
     @staticmethod
     def _h2d(buf: np.ndarray) -> jax.Array:
@@ -275,9 +288,7 @@ class FlyingEngine:
         return p
 
     def _fill_block_tables(self, btab: np.ndarray, rows: np.ndarray,
-                           reqs: Sequence[Request],
-                           lengths_out: Optional[np.ndarray] = None
-                           ) -> None:
+                           reqs: Sequence[Request]) -> None:
         """Scatter the adaptors' vectorized batch tables into the padded
         host buffer (one block_table_batch per engine-group adaptor,
         staged through a persistent scratch buffer — the scatter
@@ -286,6 +297,7 @@ class FlyingEngine:
         if self._bt_scratch is None:
             self._bt_scratch = np.zeros(
                 (self._global_batch(), self.max_blocks), np.int32)
+        mb = btab.shape[1]
         by_ad: Dict[int, List[int]] = {}
         for i, r in enumerate(reqs):
             by_ad.setdefault(r.engine_group, []).append(i)
@@ -293,10 +305,8 @@ class FlyingEngine:
             ad = self.adaptors[g]
             rids = [reqs[i].req_id for i in idxs]
             btab[rows[np.asarray(idxs)]] = \
-                ad.block_table_batch(rids, self.max_blocks,
-                                     out=self._bt_scratch)
-            if lengths_out is not None:
-                lengths_out[np.asarray(idxs)] = ad.lengths_batch(rids)
+                ad.block_table_batch(rids, mb,
+                                     out=self._bt_scratch[:, :mb])
 
     # -- device token ring ---------------------------------------------
     def _tokens_in(self, reqs: Sequence[Request], rows: np.ndarray,
@@ -374,11 +384,18 @@ class FlyingEngine:
 
     # -- sampling seeds -------------------------------------------------
     def _seeds(self, B: int) -> Optional[jax.Array]:
+        """Per-row sampling seeds without per-step host uploads: the [B]
+        iota is a cached device array per batch size; each step adds only
+        the scalar step offset on device (same uint32 values as the old
+        host-built ``base + arange`` mod 2**32)."""
         if self.temperature <= 0.0:
             return None
-        base = self._step_counter * B
-        return jnp.asarray(
-            (base + np.arange(B)).astype(np.uint32))
+        iota = self._seed_iota.get(B)
+        if iota is None:
+            iota = jnp.arange(B, dtype=jnp.uint32)
+            self._seed_iota[B] = iota
+        base = (self._step_counter * B) & 0xFFFFFFFF
+        return iota + jnp.uint32(base)
 
     # ------------------------------------------------------------------
     def prefill(self, reqs: Sequence[Request], merge: int,
@@ -398,9 +415,11 @@ class FlyingEngine:
         elens = np.fromiter((e.length for e in entries), np.int64, n)
         covs = np.minimum(plens, elens)  # positions written this step
         # seq bucket: pad to pow2 so chunk-length variation reuses one
-        # compiled executable per bucket instead of recompiling
+        # compiled executable per bucket instead of recompiling;
+        # mb bucket: block-table width tracks the widest live request
         T = min(bucket_pow2(max(int(plens.max()), 1)), self.prefill_len)
-        bufs = self._bufs(("prefill", self.merge, B, T))
+        mb = self._mb_bucket(max(len(e.block_ids) for e in entries))
+        bufs = self._bufs(("prefill", self.merge, B, mb, T))
         toks, slots, btab = bufs["toks"], bufs["slots"], bufs["btab"]
         toks.fill(0)
         slots.fill(-1)
@@ -436,7 +455,7 @@ class FlyingEngine:
             batch["sample_seeds"] = seeds
         runner = self.pool.runner(
             self.merge, "prefill", sampled=self.fused, donate=self.donate,
-            batch_bucket=B, seq_bucket=T)
+            batch_bucket=B, seq_bucket=T, mb_bucket=mb)
         self._step_counter += 1
         self.sync_stats.steps += 1
         if self.fused:
@@ -461,28 +480,34 @@ class FlyingEngine:
         c = self._steady
         if c is not None and c.key == key:
             self._decode_advance(c)
-            return c
+            # crossing an mb bucket boundary (pow2 of the max live
+            # blocks) rebuilds the cache against wider staging buffers;
+            # within a bucket the steady path is untouched
+            if self._mb_bucket(-(-int(c.lengths.max()) // c.cap)) == c.mb:
+                return c
         return self._decode_build(key, reqs)
 
     def _decode_build(self, key, reqs: Sequence[Request]) -> _DecodeCache:
         B = self._global_batch()
         n = len(reqs)
-        bufs = self._bufs(("decode", self.merge, B))
+        rows_map = self._rows(reqs)
+        rows = np.fromiter((rows_map[r.req_id] for r in reqs), np.int64, n)
+        entries = [self.adaptors[r.engine_group].table[r.req_id]
+                   for r in reqs]
+        cap = self.geom.capacity(self.merge)
+        nblk = np.fromiter((len(e.block_ids) for e in entries), np.int64, n)
+        lengths = np.fromiter((e.length for e in entries), np.int64, n)
+        mb = self._mb_bucket(-(-int(lengths.max()) // cap) if n else 1)
+        bufs = self._bufs(("decode", self.merge, B, mb))
         # reset: rows not owned by this membership must stay inert
         bufs["slots"].fill(-1)
         bufs["btab"].fill(0)
         bufs["ctxl"].fill(1)
         bufs["pos"].fill(0)
-        rows_map = self._rows(reqs)
-        rows = np.fromiter((rows_map[r.req_id] for r in reqs), np.int64, n)
-        entries = [self.adaptors[r.engine_group].table[r.req_id]
-                   for r in reqs]
-        lengths = np.zeros((n,), np.int64)
-        nblk = np.fromiter((len(e.block_ids) for e in entries), np.int64, n)
-        self._fill_block_tables(bufs["btab"], rows, reqs, lengths_out=lengths)
+        self._fill_block_tables(bufs["btab"], rows, reqs)
         row_reqs = tuple((int(row), r.req_id) for row, r in zip(rows, reqs))
         c = _DecodeCache(key, rows, row_reqs, entries, lengths, nblk,
-                         self.geom.capacity(self.merge), bufs)
+                         cap, bufs, mb)
         self._steady = c
         return c
 
@@ -500,8 +525,7 @@ class FlyingEngine:
                 e = c.entries[i]
                 ids = e.ids_np()
                 row = c.rows[i]
-                btab[row, : min(len(ids), self.max_blocks)] = \
-                    ids[: self.max_blocks]
+                btab[row, : min(len(ids), c.mb)] = ids[: c.mb]
                 c.nblk[i] = len(e.block_ids)
 
     def decode(self, reqs: Sequence[Request], merge: int) -> float:
@@ -528,7 +552,7 @@ class FlyingEngine:
             batch["sample_seeds"] = seeds
         runner = self.pool.runner(
             self.merge, "decode", sampled=self.fused, donate=self.donate,
-            batch_bucket=B, seq_bucket=1)
+            batch_bucket=B, seq_bucket=1, mb_bucket=c.mb)
         self._step_counter += 1
         self.sync_stats.steps += 1
         if self.fused:

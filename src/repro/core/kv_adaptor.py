@@ -238,17 +238,24 @@ class KVCacheAdaptor:
                           out: Optional[np.ndarray] = None) -> np.ndarray:
         """[N, max_blocks] block table; identical rows to per-request
         ``block_table``. ``out`` lets callers reuse a persistent host
-        buffer (rows are fully overwritten)."""
+        buffer (rows are fully overwritten). One vectorized scatter over
+        the flattened (request, block) index space — the same
+        padded-table trick as ``append_slots_batch`` — instead of a
+        Python loop per request."""
         n = len(req_ids)
         if out is None:
             out = np.zeros((n, max_blocks), np.int32)
         else:
             out[:n].fill(0)
         tab = self.table
-        for i, rid in enumerate(req_ids):
-            ids = tab[rid].ids_np()
-            k = min(len(ids), max_blocks)
-            out[i, :k] = ids[:k]
+        ids = [tab[r].ids_np() for r in req_ids]
+        lens = np.fromiter((len(a) for a in ids), np.int64, n)
+        if n and int(lens.sum()):
+            rowcat = np.repeat(np.arange(n), lens)
+            offcat = ragged_arange(lens)
+            keep = offcat < max_blocks
+            cat = np.concatenate(ids)
+            out[rowcat[keep], offcat[keep]] = cat[keep]
         return out[:n]
 
     def append_slots_batch(self, req_ids: Sequence[str],

@@ -80,9 +80,15 @@ def prefill_batch_spec():
 
 def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
                      phase: str, window: Optional[int] = None,
-                     use_kernel: bool = False, chunked: bool = False,
+                     use_kernel: Optional[bool] = None,
+                     chunked: bool = False,
                      sample: Optional[Tuple[float, int]] = None):
     """Build the shard_map step fn for (arch, mode, phase).
+
+    ``use_kernel``: None dispatches decode attention by platform (Pallas
+    kernel where compiled support exists, jnp reference elsewhere);
+    True forces the kernel (interpret-mode parity on CPU); False pins
+    the reference path. See kernels/paged_attention/ops.resolve_impl.
 
     ``sample=(temperature, top_k)`` fuses token sampling into the
     compiled step: the program returns device-resident ``[B]`` int32
@@ -127,7 +133,9 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
         elif phase == "decode":
             backend = DecodeBackend(
                 slots=batch["slots"], block_table=batch["block_table"],
-                context_len=batch["context_len"], use_kernel=use_kernel)
+                context_len=batch["context_len"],
+                impl={None: "auto", True: "force",
+                      False: "ref"}[use_kernel])
         elif striped:
             from repro.models.striped import StripedPrefillBackend
             backend = StripedPrefillBackend(

@@ -31,7 +31,7 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, out_ref,
             m_ref, l_ref, acc_ref, *, page: int, window: Optional[int],
-            mb: int):
+            mb: int, softmax_scale: Optional[float]):
     b = pl.program_id(0)
     j = pl.program_id(1)
     ctx = ctx_ref[b]
@@ -58,7 +58,7 @@ def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, out_ref,
         s = jax.lax.dot_general(
             qg, k, (((2,), (2,)), ((0,), (1,))),
             preferred_element_type=jnp.float32)     # [KV, rep, page]
-        s = s * (hd ** -0.5)
+        s = s * (softmax_scale if softmax_scale is not None else hd ** -0.5)
         pos = start + jax.lax.broadcasted_iota(jnp.int32, (KV, rep, page), 2)
         mask = pos < ctx
         if window is not None:
@@ -85,15 +85,18 @@ def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, out_ref,
 
 def paged_attention_kernel(q, k_pool, v_pool, block_table, context_len, *,
                            window: Optional[int] = None,
+                           softmax_scale: Optional[float] = None,
                            interpret: bool = False):
     """q [B,H,hd]; pools [nblk,page,KV,hd]; block_table [B,MB] int32;
-    context_len [B] int32 -> [B,H,hd]."""
+    context_len [B] int32 -> [B,H,hd]. ``softmax_scale`` overrides the
+    default 1/sqrt(hd) (absorbed-MLA callers pre-scale q and pass 1.0)."""
     B, H, hd = q.shape
     nblk, page, KV, _ = k_pool.shape
     MB = block_table.shape[1]
 
     grid = (B, MB)
-    kern = functools.partial(_kernel, page=page, window=window, mb=MB)
+    kern = functools.partial(_kernel, page=page, window=window, mb=MB,
+                             softmax_scale=softmax_scale)
     flat_k = k_pool  # [nblk, page, KV, hd]
 
     out = pl.pallas_call(
@@ -119,3 +122,67 @@ def paged_attention_kernel(q, k_pool, v_pool, block_table, context_len, *,
         interpret=interpret,
     )(block_table, context_len, q, flat_k, v_pool)
     return out
+
+
+# ---------------------------------------------------------------------------
+# fused single-token append: the serving decode path's pool write
+# ---------------------------------------------------------------------------
+
+def _append_kernel(blk_ref, off_ref, *refs, n: int):
+    # refs = (*val_refs, *pool_in_refs, *out_refs); the BlockSpec index
+    # maps already target exactly the (block, offset) row each request
+    # writes, so the body is a pure VMEM copy + dtype cast.
+    val_refs, out_refs = refs[:n], refs[2 * n:]
+    for v_ref, o_ref in zip(val_refs, out_refs):
+        o_ref[0, 0] = v_ref[0].astype(o_ref.dtype)
+
+
+def paged_append_token_kernel(pools, vals, slots, *, interpret: bool = False):
+    """In-place single-token append into paged pools (no full-pool
+    scatter: each output block IS the one written row, aliased to its
+    input pool).
+
+    pools: tuple of [nblk, page, *w] arrays; vals: matching tuple of
+    [B, *w] new-token values; slots [B] int32 flat slots
+    (block*page + off; negative => parked to the reserved scratch row
+    — the last row of the last block, which the adaptor never
+    allocates). Returns the updated pools, buffer-aliased to the inputs
+    when XLA honors the donation.
+
+    Grid is (B,): per grid step one (1, 1, *w) block is DMA'd in and
+    written back. Distinct live requests never share a target row
+    (block tables are disjoint per adaptor), and parked rows all target
+    the don't-care scratch row, so there is no write hazard."""
+    n = len(pools)
+    B = slots.shape[0]
+    nblk, page = pools[0].shape[0], pools[0].shape[1]
+    slots = slots.astype(jnp.int32)
+    parked = slots < 0
+    blk = jnp.where(parked, nblk - 1, slots // page)
+    off = jnp.where(parked, page - 1, slots % page)
+
+    def val_spec(v):
+        return pl.BlockSpec((1,) + v.shape[1:], lambda b, t, o: (b,) + (0,) *
+                            (v.ndim - 1))
+
+    def row_spec(p):
+        return pl.BlockSpec((1, 1) + p.shape[2:],
+                            lambda b, t, o: (t[b], o[b]) + (0,) *
+                            (p.ndim - 2))
+
+    outs = pl.pallas_call(
+        functools.partial(_append_kernel, n=n),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # blk, off
+            grid=(B,),
+            in_specs=[val_spec(v) for v in vals] +
+                     [row_spec(p) for p in pools],
+            out_specs=[row_spec(p) for p in pools],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in pools],
+        # alias indices count the scalar-prefetch operands too:
+        # (blk, off, *vals, *pools) -> pool i is operand 2 + n + i
+        input_output_aliases={2 + n + i: i for i in range(n)},
+        interpret=interpret,
+    )(blk, off, *vals, *pools)
+    return tuple(outs)

@@ -1,33 +1,140 @@
-"""jit'd dispatch wrapper for the paged decode-attention kernel.
+"""Dispatch layer for paged decode attention (serving hot path).
 
-Interpret mode on CPU (the container target), compiled on TPU. Handles
-GQA head-replication edge cases and falls back to the jnp oracle for
-shapes the kernel does not support (KV > H pools never occur)."""
+Implementations, selected per call via ``impl`` (docs/PERF.md §D5):
+
+- ``"kernel"``    — the compiled Pallas TPU kernel (fused single-token
+  append + context-proportional online-softmax attention).
+- ``"interpret"`` — the SAME kernel through the Pallas interpreter:
+  slow, but traces/compiles on any backend — the CPU parity path the
+  token-identity tests force.
+- ``"ref"``       — the pure-jnp oracle (gather-based), also the fast
+  path on CPU where interpret-mode kernels lose to fused XLA.
+
+``"auto"``/None resolves to ``kernel`` on TPU and ``ref`` elsewhere;
+``"force"`` (what ``use_kernel=True`` maps to) resolves to ``kernel``
+on TPU and ``interpret`` elsewhere. The env var
+``REPRO_PAGED_ATTN_IMPL`` overrides ``auto`` resolution — it is read
+at TRACE time, so it must be set before the first step of a process
+compiles; already-compiled runners cached by the CommunicatorPool are
+not re-resolved.
+
+These functions are called from inside the compiled serve step (no
+inner jit: an extra jit boundary would block XLA from threading the
+pool aliasing into the step's donated state buffers).
+"""
 from __future__ import annotations
 
-import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.kernel import paged_attention_kernel
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.kernel import (paged_append_token_kernel,
+                                                  paged_attention_kernel)
+from repro.kernels.paged_attention.ref import (paged_append_token_ref,
+                                               paged_attention_ref,
+                                               paged_mla_attention_ref)
+
+IMPLS = ("kernel", "interpret", "ref")
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def resolve_impl(impl: Optional[str] = None) -> str:
+    """Resolve an impl request to one of ``kernel|interpret|ref``."""
+    if impl in (None, "auto"):
+        env = os.environ.get("REPRO_PAGED_ATTN_IMPL", "").strip()
+        if env and env != "auto":
+            impl = env
+        else:
+            return "kernel" if jax.default_backend() == "tpu" else "ref"
+    if impl == "force":
+        return "kernel" if jax.default_backend() == "tpu" else "interpret"
+    if impl not in IMPLS:
+        raise ValueError(f"unknown paged-attention impl {impl!r}; valid: "
+                         f"{IMPLS + ('auto', 'force')}")
+    return impl
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
 def paged_attention(q, k_pool, v_pool, block_table, context_len, *,
-                    window: Optional[int] = None):
+                    window: Optional[int] = None,
+                    softmax_scale: Optional[float] = None,
+                    impl: Optional[str] = None):
     """q [B,H,hd]; pools [nblk,page,KV,hd] (mode-viewed); block_table
     [B,MB]; context_len [B] -> [B,H,hd]."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return paged_attention_ref(q, k_pool, v_pool, block_table,
+                                   context_len, window=window,
+                                   softmax_scale=softmax_scale)
     return paged_attention_kernel(
         q, k_pool, v_pool, block_table.astype(jnp.int32),
         context_len.astype(jnp.int32), window=window,
-        interpret=_interpret())
+        softmax_scale=softmax_scale, interpret=(impl == "interpret"))
 
 
-__all__ = ["paged_attention", "paged_attention_ref"]
+def paged_attention_decode(q, k_new, v_new, k_pool, v_pool, slots,
+                           block_table, context_len, *,
+                           window: Optional[int] = None,
+                           softmax_scale: Optional[float] = None,
+                           impl: Optional[str] = None):
+    """Fused single-token KV append + paged decode attention.
+
+    q [B,H,hd]; k_new/v_new [B,KV,hd] (the step's new token, written at
+    ``slots`` [B] before attending); pools [nblk,page,KV,hd].
+    Returns (out [B,H,hd], k_pool, v_pool). On the kernel path the pool
+    write is an in-place aliased row write (no full-pool scatter)."""
+    impl = resolve_impl(impl)
+    slots = slots.astype(jnp.int32)
+    if impl == "ref":
+        k_pool, v_pool = paged_append_token_ref(
+            (k_pool, v_pool), (k_new, v_new), slots)
+        out = paged_attention_ref(q, k_pool, v_pool, block_table,
+                                  context_len, window=window,
+                                  softmax_scale=softmax_scale)
+        return out, k_pool, v_pool
+    interp = impl == "interpret"
+    k_pool, v_pool = paged_append_token_kernel(
+        (k_pool, v_pool), (k_new, v_new), slots, interpret=interp)
+    out = paged_attention_kernel(
+        q, k_pool, v_pool, block_table.astype(jnp.int32),
+        context_len.astype(jnp.int32), window=window,
+        softmax_scale=softmax_scale, interpret=interp)
+    return out, k_pool, v_pool
+
+
+def paged_mla_attention_decode(q_cat, entry_new, pool, slots, block_table,
+                               context_len, *, R: int,
+                               window: Optional[int] = None,
+                               softmax_scale: float = 1.0,
+                               impl: Optional[str] = None):
+    """Absorbed-MLA fused decode over the compressed paged cache.
+
+    q_cat [B,H,W] = [q_nope·W_uk ++ q_pe] (pre-scaled by the caller, so
+    ``softmax_scale`` defaults to 1); entry_new [B,W] new-token
+    [c_kv ++ k_pe]; pool [nblk,page,W]. Returns (out_c [B,H,R] fp32,
+    pool). The kernel path views the pool as a KV=1 head of width W —
+    scores are q_cat·entry and the value read is the compressed entry
+    itself (the first R lanes of the kernel output), so the expanded
+    [B,Tk,H,·] K/V of the naive path never exists."""
+    impl = resolve_impl(impl)
+    slots = slots.astype(jnp.int32)
+    if impl == "ref":
+        (pool,) = paged_append_token_ref((pool,), (entry_new,), slots)
+        out = paged_mla_attention_ref(q_cat, pool, block_table, context_len,
+                                      R=R, window=window,
+                                      softmax_scale=softmax_scale)
+        return out, pool
+    interp = impl == "interpret"
+    (pool,) = paged_append_token_kernel((pool,), (entry_new,), slots,
+                                        interpret=interp)
+    pool4 = pool[:, :, None, :]                     # [nblk, page, 1, W]
+    out = paged_attention_kernel(
+        q_cat.astype(jnp.float32), pool4, pool4,
+        block_table.astype(jnp.int32), context_len.astype(jnp.int32),
+        window=window, softmax_scale=softmax_scale, interpret=interp)
+    return out[..., :R], pool
+
+
+__all__ = ["paged_attention", "paged_attention_decode",
+           "paged_mla_attention_decode", "paged_attention_ref",
+           "resolve_impl"]

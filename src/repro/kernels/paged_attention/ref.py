@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the paged decode-attention kernel."""
+"""Pure-jnp oracles for the paged decode-attention kernels."""
 from __future__ import annotations
 
 from typing import Optional
@@ -11,7 +11,8 @@ NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                         block_table: jax.Array, context_len: jax.Array, *,
-                        window: Optional[int] = None) -> jax.Array:
+                        window: Optional[int] = None,
+                        softmax_scale: Optional[float] = None) -> jax.Array:
     """q [B,H,hd]; pools [nblk, page, KV, hd]; block_table [B,MB];
     context_len [B] (tokens valid, including the current one).
     Returns [B,H,hd] (q.dtype)."""
@@ -25,8 +26,9 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     rep = H // KV
     k = jnp.repeat(k, rep, axis=2)
     v = jnp.repeat(v, rep, axis=2)
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
     s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * hd ** -0.5
+                   k.astype(jnp.float32)) * scale
     pos = jnp.arange(MB * page)[None, None, :]
     mask = pos < context_len[:, None, None]
     if window is not None:
@@ -35,3 +37,44 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bht,bthd->bhd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_append_token_ref(pools, vals, slots):
+    """Oracle for ``paged_append_token_kernel``: write each request's
+    new-token row at its flat slot (negative slots park to the reserved
+    scratch row). pools: tuple [nblk,page,*w]; vals: tuple [B,*w]."""
+    out = []
+    for pool, v in zip(pools, vals):
+        nblk, page = pool.shape[0], pool.shape[1]
+        flat = pool.reshape(nblk * page, *pool.shape[2:])
+        safe = jnp.where(slots >= 0, slots, nblk * page - 1)
+        flat = flat.at[safe].set(v.astype(pool.dtype))
+        out.append(flat.reshape(pool.shape))
+    return tuple(out)
+
+
+def paged_mla_attention_ref(q_cat: jax.Array, pool: jax.Array,
+                            block_table: jax.Array, context_len: jax.Array,
+                            *, R: int, window: Optional[int] = None,
+                            softmax_scale: float = 1.0) -> jax.Array:
+    """Absorbed-MLA decode oracle over the compressed paged cache.
+
+    q_cat [B,H,W] = [q_nope·W_uk ++ q_pe] (caller pre-scales);
+    pool [nblk, page, W] with W = R + Rr cached [c_kv ++ k_pe] entries.
+    Scores are q_cat·entry (= q_abs·c + q_pe·pe); the value read is the
+    compressed context vector, so nothing of shape [B,Tk,H,·] is ever
+    materialized. Returns [B,H,R] fp32 (caller up-projects with W_uv)."""
+    B, H, W = q_cat.shape
+    page = pool.shape[1]
+    ctx = pool[jnp.maximum(block_table, 0)]        # [B,MB,page,W]
+    MB = block_table.shape[1]
+    ctx = ctx.reshape(B, MB * page, W)
+    s = jnp.einsum("bhw,btw->bht", q_cat.astype(jnp.float32),
+                   ctx.astype(jnp.float32)) * softmax_scale
+    pos = jnp.arange(MB * page)[None, None, :]
+    mask = pos < context_len[:, None, None]
+    if window is not None:
+        mask &= pos >= context_len[:, None, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bht,btr->bhr", p, ctx[..., :R].astype(jnp.float32))

@@ -108,28 +108,44 @@ def mla_attention(cfg: ArchConfig, p, x, ctx: TPContext, backend, state, *,
                       cfg.rope_theta)[..., 0, :]  # [B,T,Rr]
     cache_entry = jnp.concatenate([c_kv, k_pe], axis=-1)  # [B,T,R+Rr]
 
-    from repro.models.striped import StripedDecodeBackend
-    if isinstance(backend, StripedDecodeBackend):
-        # absorbed MLA over the striped compressed cache (context parallel)
+    def absorbed_decode(attend):
+        # absorbed MLA decode: score q·W_uk against the compressed
+        # [R+Rr] cache and read compressed context vectors — never
+        # materialize k_nope/vexp [B,Tk,H,·] (§Perf D5). ``attend``
+        # is the backend-specific (q_abs, q_pe, entry) -> (out_c,
+        # state) call; everything else is shared.
         scale = (Dn + Rr) ** -0.5
         wuk = ctx.activate(p["wuk"], 1, H).reshape(R, Hl, Dn)
         q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
                            wuk.astype(jnp.float32)) * scale
-        out_c, state = backend.attend_mla(
-            state, q_abs, q_pe[:, 0].astype(jnp.float32) * scale,
-            cache_entry[:, 0], R=R, n_heads=H)
+        out_c, new_state = attend(
+            q_abs, q_pe[:, 0].astype(jnp.float32) * scale,
+            cache_entry[:, 0])
         wuv = ctx.activate(p["wuv"], 1, H).reshape(R, Hl, Dv)
         out = jnp.einsum("bhr,rhd->bhd", out_c, wuv.astype(jnp.float32))
         out = out.astype(x.dtype).reshape(B, 1, Hl * Dv)
         out = out @ ctx.activate(p["wo"], 0, H)
-        return ctx.psum(out, H), state
+        return ctx.psum(out, H), new_state
+
+    from repro.models.cache import DecodeBackend
+    from repro.models.striped import StripedDecodeBackend
+    if isinstance(backend, StripedDecodeBackend):
+        # striped compressed cache (context parallel)
+        return absorbed_decode(lambda qa, qp, e: backend.attend_mla(
+            state, qa, qp, e, R=R, n_heads=H))
+    if isinstance(backend, DecodeBackend):
+        # paged compressed cache (mb-bucketed block table)
+        return absorbed_decode(
+            lambda qa, qp, e: backend.attend_mla_absorbed(
+                state, qa, qp, e, R=R, window=window))
 
     ctx_tokens, ctx_len, state = backend.append_ctx(state, cache_entry,
                                                     positions=positions)
     # ctx_tokens: [B,Tk,R+Rr] (full prefix incl. current tokens)
     c_ctx, pe_ctx = ctx_tokens[..., :R], ctx_tokens[..., R:]
 
-    # naive expansion (absorbed variant is a recorded optimization target)
+    # naive expansion (train/prefill compute over live activations; the
+    # paged decode path above uses the absorbed form)
     wuk = ctx.activate(p["wuk"], 1, H).reshape(R, Hl, Dn)
     wuv = ctx.activate(p["wuv"], 1, H).reshape(R, Hl, Dv)
     k_nope = jnp.einsum("btr,rhd->bthd", c_ctx.astype(jnp.float32),

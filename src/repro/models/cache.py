@@ -215,26 +215,56 @@ class PrefillBackend:
 
 @dataclass(frozen=True)
 class DecodeBackend:
-    """Single-token decode over the paged pool."""
+    """Single-token decode over the paged pool.
+
+    ``impl`` selects the attention implementation (resolved by
+    ``kernels/paged_attention/ops.resolve_impl``): ``None``/"auto"
+    dispatches to the Pallas kernel where compiled support exists (TPU)
+    and the jnp reference elsewhere; "force" insists on the kernel
+    (interpret-mode on CPU: the parity path); "ref" pins the reference.
+    The kernel path fuses the single-token KV append (an aliased
+    per-request row write) instead of the two full-pool scatters."""
     slots: jax.Array          # [B] flat write slot of the new token
-    block_table: jax.Array    # [B, max_blocks]
+    block_table: jax.Array    # [B, max_blocks] (mb-bucketed width)
     context_len: jax.Array    # [B] incl. the new token
-    use_kernel: bool = False
+    impl: Optional[str] = None
 
     def attend(self, state, q, k, v, *, positions, window=None):
+        from repro.kernels.paged_attention import ops as pa_ops
         k_pool, v_pool = state
-        k_pool = paged_append(k_pool, k, self.slots[:, None])
-        v_pool = paged_append(v_pool, v, self.slots[:, None])
-        if self.use_kernel:
-            from repro.kernels.paged_attention import ops as pa_ops
-            out = pa_ops.paged_attention(
-                q[:, 0], k_pool, v_pool, self.block_table, self.context_len,
-                window=window)
-        else:
+        if pa_ops.resolve_impl(self.impl) == "ref":
+            # deliberately NOT ops.paged_attention_decode(impl="ref"):
+            # this grouped attention (attention_with_lse) never
+            # materializes repeated/fp32 copies of the gathered context
+            # (§Perf A1) — the kernels-local oracle does, and is a test
+            # oracle, not a serving path
+            k_pool = paged_append(k_pool, k, self.slots[:, None])
+            v_pool = paged_append(v_pool, v, self.slots[:, None])
             out = paged_attention_ref(q[:, 0], k_pool, v_pool,
                                       self.block_table, self.context_len,
                                       window=window)
+        else:
+            out, k_pool, v_pool = pa_ops.paged_attention_decode(
+                q[:, 0], k[:, 0], v[:, 0], k_pool, v_pool, self.slots,
+                self.block_table, self.context_len, window=window,
+                impl=self.impl)
         return out[:, None], (k_pool, v_pool)
+
+    def attend_mla_absorbed(self, state, q_abs, q_pe, entry, *, R: int,
+                            window=None):
+        """Absorbed MLA decode (§Perf D5): q_abs [B,Hl,R] = q_nope·W_uk,
+        q_pe [B,Hl,Rr] (both pre-scaled), entry [B,R+Rr] the new token's
+        compressed cache row. Scores run against the compressed pool
+        directly; returns ([B,Hl,R] fp32 context read, new state) for
+        the caller to up-project with W_uv — the naive path's
+        [B,Tk,H,·] K/V expansion is never materialized."""
+        from repro.kernels.paged_attention import ops as pa_ops
+        (pool,) = state if isinstance(state, tuple) else (state,)
+        q_cat = jnp.concatenate([q_abs, q_pe], axis=-1)
+        out_c, pool = pa_ops.paged_mla_attention_decode(
+            q_cat, entry, pool, self.slots, self.block_table,
+            self.context_len, R=R, window=window, impl=self.impl)
+        return out_c, (pool,)
 
     def append_ctx(self, state, vals, *, positions):
         (pool,) = state if isinstance(state, tuple) and len(state) == 1 \

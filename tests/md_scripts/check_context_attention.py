@@ -1,0 +1,93 @@
+"""Context-proportional decode attention under 8 forced host devices:
+the forced-kernel engine (Pallas interpret on CPU, fused single-token
+append) is token-identical to the reference engine ACROSS MERGE MODES
+(live DP->TP switches), decode runner keys carry mb buckets narrower
+than the configured max_blocks, and the steady window stays zero-sync."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.engine import FlyingEngine
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.task_pool import Request
+from repro.models.model import build_model
+
+PROMPT = 8
+
+
+def make_reqs(tag, groups, per_group):
+    reqs = []
+    for g in groups:
+        for i in range(per_group):
+            r = Request(req_id=f"{tag}{g}_{i}", arrival=0.0,
+                        prompt_len=PROMPT, output_len=1 << 30)
+            r.engine_group = g
+            reqs.append(r)
+    return reqs
+
+
+def phase(eng, reqs, merge, steps):
+    for r in reqs:
+        eng.adaptors[r.engine_group].append_slots(r.req_id, PROMPT)
+    eng.prefill(reqs, merge, PROMPT)
+    for r in reqs:
+        eng.adaptors[r.engine_group].append_slots(r.req_id, 1)
+    for _ in range(steps):
+        eng.decode(reqs, merge)
+        for r in reqs:
+            eng.adaptors[r.engine_group].append_slots(r.req_id, 1)
+    for r in reqs:
+        eng.adaptors[r.engine_group].release(r.req_id)
+
+
+def run(eng):
+    a = make_reqs("a", range(eng.plan.dp_engines), eng.bpe)
+    phase(eng, a, 1, 6)
+    eng.switch(1, 2)
+    b = make_reqs("b", range(0, eng.plan.dp_engines, 2), eng.bpe * 2)
+    phase(eng, b, 2, 6)
+    eng.switch(2, 1)
+    c = make_reqs("c", range(eng.plan.dp_engines), eng.bpe)
+    phase(eng, c, 1, 4)
+    return {r.req_id: eng.generated_tokens(r.req_id) for r in a + b + c}
+
+
+def main():
+    cfg = get_config("llama3-8b").reduced()
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.key(0))
+    plan = ParallelPlan(engine_rows=1, tp_base=2, data_rows=4)
+    geom = PoolGeometry(cfg, plan, num_blocks=64, block_base=4)
+
+    eng_ker = FlyingEngine(model, plan, geom, params, batch_per_engine=2,
+                           prefill_len=PROMPT, max_blocks_per_req=32,
+                           use_kernel=True)
+    eng_ref = FlyingEngine(model, plan, geom, params, batch_per_engine=2,
+                           prefill_len=PROMPT, max_blocks_per_req=32,
+                           use_kernel=False)
+    toks_ker = run(eng_ker)
+    toks_ref = run(eng_ref)
+    assert toks_ker == toks_ref, {
+        k: (toks_ker[k], toks_ref[k]) for k in toks_ker
+        if toks_ker[k] != toks_ref[k]}
+    assert all(len(v) >= 5 for v in toks_ker.values())
+    for eng in (eng_ker, eng_ref):
+        assert eng.sync_stats.host_argmax == 0, eng.sync_stats
+        mbs = {(k[0], k[6]) for k in eng.pool._runners if k[1] == "decode"}
+        # both merge modes ran, every decode key bucketed far below the
+        # configured 32-wide table
+        assert {m for m, _ in mbs} == {1, 2}, mbs
+        assert all(mb <= 4 for _, mb in mbs), mbs
+    print(f"tokens identical across {len(toks_ker)} requests, 2 live "
+          f"switches, kernel vs ref dispatch; decode mb buckets "
+          f"{sorted(mbs)} (max_blocks=32); zero-sync steady window")
+    print("CONTEXT ATTENTION OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,10 +30,88 @@ def test_paged_attention(B, H, KV, hd, page, nblk, MB, window, dtype):
     vp = jax.random.normal(ks[2], (nblk, page, KV, hd), dtype)
     bt = jax.random.randint(ks[3], (B, MB), 0, nblk)
     cl = jax.random.randint(ks[4], (B,), 1, MB * page + 1)
-    out = paged_attention(q, kp, vp, bt, cl, window=window)
+    # impl="interpret" forces the Pallas kernel through the interpreter
+    # (the auto dispatch picks the jnp ref on CPU — that would compare
+    # the oracle against itself)
+    out = paged_attention(q, kp, vp, bt, cl, window=window,
+                          impl="interpret")
     ref = paged_attention_ref(q, kp, vp, bt, cl, window=window)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **tols(dtype))
+
+
+def _disjoint_tables(k, B, MB, nblk):
+    """Per-request block tables with DISJOINT block ids (the serving
+    invariant: one adaptor never shares a block between requests), so
+    no two rows can target the same write slot — the fused append
+    kernel's documented precondition. Excludes the scratch block."""
+    assert B * MB <= nblk - 1
+    return jax.random.permutation(k, nblk - 1)[:B * MB].reshape(B, MB)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KV,hd,page,nblk,MB,window", [
+    (4, 8, 2, 128, 16, 64, 8, None),    # GQA
+    (2, 4, 1, 64, 8, 16, 4, 32),        # MQA + sliding window
+    (3, 16, 4, 128, 32, 64, 6, None),
+])
+def test_paged_attention_decode_fused_append(B, H, KV, hd, page, nblk, MB,
+                                             window, dtype):
+    """The fused single-token append + attend kernel path must match
+    the unfused reference (scatter append, then oracle attention),
+    including a parked (slot<0) row and pool write-back."""
+    from repro.kernels.paged_attention.ops import paged_attention_decode
+    from repro.kernels.paged_attention.ref import (paged_append_token_ref,
+                                                   paged_attention_ref)
+    ks = jax.random.split(key, 7)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kp = jax.random.normal(ks[1], (nblk, page, KV, hd), dtype)
+    vp = jax.random.normal(ks[2], (nblk, page, KV, hd), dtype)
+    kn = jax.random.normal(ks[3], (B, KV, hd), dtype)
+    vn = jax.random.normal(ks[4], (B, KV, hd), dtype)
+    bt = _disjoint_tables(ks[5], B, MB, nblk)
+    cl = jax.random.randint(ks[6], (B,), 1, MB * page + 1)
+    slots = (bt[jnp.arange(B), (cl - 1) // page] * page
+             + (cl - 1) % page).astype(jnp.int32)
+    slots = slots.at[0].set(-1)  # parked row -> scratch, never read
+    out, ko, vo = paged_attention_decode(q, kn, vn, kp, vp, slots, bt, cl,
+                                         window=window, impl="interpret")
+    kr, vr = paged_append_token_ref((kp, vp), (kn, vn), slots)
+    ref = paged_attention_ref(q, kr, vr, bt, cl, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tols(dtype))
+    np.testing.assert_array_equal(np.asarray(ko), np.asarray(kr))
+    np.testing.assert_array_equal(np.asarray(vo), np.asarray(vr))
+
+
+@pytest.mark.parametrize("B,H,R,Rr,page,nblk,MB", [
+    (2, 8, 32, 16, 8, 16, 4),
+    (3, 4, 64, 32, 16, 32, 6),
+])
+def test_paged_mla_attention_decode_kernel_vs_ref(B, H, R, Rr, page, nblk,
+                                                  MB):
+    """Absorbed-MLA fused decode: the KV=1 kernel view over the
+    compressed pool matches the jnp oracle."""
+    from repro.kernels.paged_attention.ops import paged_mla_attention_decode
+    W = R + Rr
+    ks = jax.random.split(key, 5)
+    qc = jax.random.normal(ks[0], (B, H, W))
+    pool = jax.random.normal(ks[1], (nblk, page, W))
+    en = jax.random.normal(ks[2], (B, W))
+    bt = _disjoint_tables(ks[3], B, MB, nblk)
+    cl = jax.random.randint(ks[4], (B,), 1, MB * page + 1)
+    slots = (bt[jnp.arange(B), (cl - 1) // page] * page
+             + (cl - 1) % page).astype(jnp.int32)
+    scale = W ** -0.5
+    oi, pi = paged_mla_attention_decode(qc, en, pool, slots, bt, cl, R=R,
+                                        softmax_scale=scale,
+                                        impl="interpret")
+    orf, prf = paged_mla_attention_decode(qc, en, pool, slots, bt, cl, R=R,
+                                          softmax_scale=scale, impl="ref")
+    assert oi.shape == (B, H, R)
+    np.testing.assert_allclose(np.asarray(oi), np.asarray(orf),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(prf))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -58,3 +58,10 @@ def test_pallas_kernel_in_distributed_decode():
     into the distributed serve step and matches the reference."""
     out = run_script("check_kernel_serve.py")
     assert "PALLAS KERNEL SERVE PATH OK" in out
+
+
+def test_context_proportional_attention_across_merges():
+    """Kernel-dispatch vs reference token identity across live merge
+    switches, with mb-bucketed decode executables (§Perf D5)."""
+    out = run_script("check_context_attention.py")
+    assert "CONTEXT ATTENTION OK" in out
