@@ -15,9 +15,10 @@ bench:
 # steady-state hot-path guard: tiny real-execution microbench on CPU;
 # fails if the decode path does any per-token host sync, if fused
 # device sampling diverges from the host argmax reference, or if
-# mb-bucketed decode diverges from the narrow-engine reference.
-# Writes the perf-trajectory artifact BENCH_decode.json at the repo
-# root (step ms, tok/s, sync counters, context-sweep points).
+# mb-bucketed decode/prefill diverges from the narrow-engine reference.
+# Writes the perf-trajectory artifacts BENCH_decode.json and
+# BENCH_prefill.json at the repo root (step ms, tok/s, sync counters,
+# context/chunk/prior sweep points).
 bench-smoke:
 	$(PY) benchmarks/run.py --smoke
 

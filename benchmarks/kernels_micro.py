@@ -54,6 +54,44 @@ def run():
     rows.append(csv_row("kernels", "flash_prefill/2x2048_ref", f"{us:.0f}",
                         f"tpu_roofline_us={fl / V5E.peak_flops_bf16 * 1e6:.1f}"))
 
+    # the SAME Pallas kernel through the interpreter (small shape — the
+    # interpreter re-traces the body per grid step, so this times the
+    # kernel program itself rather than only the jnp oracle)
+    from repro.kernels.flash_prefill.ops import flash_prefill
+    Ti = 256
+    us = _time(lambda *a: flash_prefill(*a, blk=128),
+               q2[:1, :Ti], k2[:1, :Ti], v2[:1, :Ti], iters=3)
+    fli = 4 * 1 * H2 * Ti * Ti / 2 * hd2
+    rows.append(csv_row(
+        "kernels", "flash_prefill/1x256_interp_kernel", f"{us:.0f}",
+        f"tpu_roofline_us={fli / V5E.peak_flops_bf16 * 1e6:.2f}"))
+
+    # paged flash-prefill (chunked prefill over the pool, §Perf D6):
+    # interpret-mode kernel vs jnp oracle on one chunk with prior context
+    from repro.kernels.flash_prefill.ops import paged_flash_prefill
+    Bp, Tc, KVp, hdp, page, nblk = 2, 128, 2, 128, 16, 64
+    MBp = nblk // Bp // 2
+    qp = jax.random.normal(ks[0], (Bp, Tc, H2, hdp), jnp.float32)
+    knp = jax.random.normal(ks[1], (Bp, Tc, KVp, hdp), jnp.float32)
+    vnp = jax.random.normal(ks[2], (Bp, Tc, KVp, hdp), jnp.float32)
+    kpp = jax.random.normal(ks[3], (nblk, page, KVp, hdp), jnp.float32)
+    vpp = jax.random.normal(ks[4], (nblk, page, KVp, hdp), jnp.float32)
+    btp = jax.random.permutation(ks[3], nblk - 1)[:Bp * MBp].reshape(Bp,
+                                                                     MBp)
+    prior = jnp.full((Bp,), 64, jnp.int32)
+    posp = prior[:, None] + jnp.arange(Tc)[None]
+    slotp = (btp[jnp.arange(Bp)[:, None], posp // page] * page
+             + posp % page).astype(jnp.int32)
+    hbm_p = 2 * Bp * MBp * page * KVp * hdp * 2 \
+        + 4 * Bp * Tc * KVp * hdp * 2
+    for impl in ("interpret", "ref"):
+        us = _time(lambda *a, i=impl: paged_flash_prefill(
+            *a, window=None, impl=i), qp, knp, vnp, kpp, vpp, slotp, btp,
+            prior, iters=3)
+        rows.append(csv_row(
+            "kernels", f"paged_flash_prefill/2x128c_{impl}", f"{us:.0f}",
+            f"tpu_roofline_us={hbm_p / V5E.hbm_bw * 1e6:.1f}"))
+
     # ssd scan: 2 x 2048 x 8 heads
     from repro.kernels.ssd_scan.ref import ssd_scan_ref
     Bs, Ts, Hs, hds, S = 2, 2048, 8, 64, 128

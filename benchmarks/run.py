@@ -33,8 +33,10 @@ def main() -> None:
     n = 300 if args.fast else 1200
 
     if args.smoke:
-        from benchmarks import decode_attention, steady_state
+        from benchmarks import (decode_attention, prefill_attention,
+                                steady_state)
         data = {}
+        pdata = {}
         print("benchmark,metric,value,derived")
         t0 = time.time()
         for row in steady_state.run(smoke=True, out=data):
@@ -44,25 +46,33 @@ def main() -> None:
         for row in decode_attention.run(smoke=True, out=data):
             print(row)
         print(f"decode_attention,elapsed_s,{time.time() - t0:.1f},")
-        # perf trajectory artifact: future PRs diff against this file
+        t0 = time.time()
+        for row in prefill_attention.run(smoke=True, out=pdata):
+            print(row)
+        print(f"prefill_attention,elapsed_s,{time.time() - t0:.1f},")
+        # perf trajectory artifacts: future PRs diff against these files
         import jax
-        data["meta"] = {"devices": len(jax.devices()),
-                        "backend": jax.default_backend(),
-                        "smoke": True}
-        path = os.path.join(os.path.dirname(__file__), "..",
-                            "BENCH_decode.json")
-        with open(path, "w") as f:
-            json.dump(data, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"bench,artifact,{os.path.abspath(path)},")
+        meta = {"devices": len(jax.devices()),
+                "backend": jax.default_backend(), "smoke": True}
+        data["meta"] = meta
+        pdata["meta"] = meta
+        for fname, d in (("BENCH_decode.json", data),
+                         ("BENCH_prefill.json", pdata)):
+            path = os.path.join(os.path.dirname(__file__), "..", fname)
+            with open(path, "w") as f:
+                json.dump(d, f, indent=2, sort_keys=True)
+                f.write("\n")
+            print(f"bench,artifact,{os.path.abspath(path)},")
         return
 
     from benchmarks import (decode_attention, fig8_bursty, fig9_tpot,
-                            fig10_longcontext, kernels_micro, steady_state,
+                            fig10_longcontext, kernels_micro,
+                            prefill_attention, steady_state,
                             table1_priority, table2_context_switch)
     suites = {
         "steady_state": lambda: steady_state.run(smoke=args.fast),
         "decode_attention": lambda: decode_attention.run(smoke=args.fast),
+        "prefill_attention": lambda: prefill_attention.run(smoke=args.fast),
         "fig8": lambda: fig8_bursty.run(n_requests=n),
         "fig9": lambda: fig9_tpot.run(n_requests=n),
         "table1": lambda: table1_priority.run(n_requests=max(n // 2, 100)),

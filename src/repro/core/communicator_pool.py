@@ -174,8 +174,15 @@ class CommunicatorPool:
         deriving them from the abstract shapes keeps precompile/get keys
         identical to the runner keys the engine uses at serve time."""
         batch = abstract_args[2]
-        tok = batch.get("tokens") if hasattr(batch, "get") else None
-        bt = batch.get("block_table") if hasattr(batch, "get") else None
+        get = batch.get if hasattr(batch, "get") else (lambda k: None)
+        # mixed-phase batches prefix their parts: the chunk bucket is the
+        # prefill token extent, the (shared) mb bucket its table width
+        tok = get("tokens")
+        if tok is None:
+            tok = get("p_tokens")
+        bt = get("block_table")
+        if bt is None:
+            bt = get("p_block_table")
         bb = tok.shape[0] if tok is not None else None
         sb = tok.shape[1] if tok is not None and tok.ndim > 1 else None
         mb = bt.shape[1] if bt is not None and bt.ndim > 1 else None

@@ -23,6 +23,12 @@ bounded in-flight window. Tokens surface only at drain points (mode
 switches, ``generated_tokens``) as batched transfers. ``sync_stats``
 counts every class of host crossing so benchmarks and CI can assert the
 path stays clean.
+
+Prefill is truly chunked (§Perf D6): long prompts stream through
+``prefill_chunk``-sized slices with absolute positions and per-request
+prior lengths, and when prefill chunks co-reside with a decode batch
+the scheduler drives ``mixed()`` — one compiled launch covering both
+phases, with promoted requests' first tokens routed on device.
 """
 from __future__ import annotations
 
@@ -94,13 +100,17 @@ class FlyingEngine:
                  use_kernel: Optional[bool] = None,
                  fused_sampling: bool = True, donate_states: bool = True,
                  async_window: int = 2, temperature: float = 0.0,
-                 top_k: int = 0, harvest_limit: int = 512):
+                 top_k: int = 0, harvest_limit: int = 512,
+                 mixed_step: bool = True):
         self.model = model
         self.cfg = model.cfg
         self.plan = plan
         self.geom = geom
         self.bpe = batch_per_engine
         self.max_blocks = max_blocks_per_req
+        # retained for callers' convenience only: prompts are NEVER
+        # truncated to it (§Perf D6) — chunk extents come from the
+        # scheduler's slot allocations, seq buckets from the chunks
         self.prefill_len = prefill_len
         self.check_zero_copy = check_zero_copy
         self.merge = 1
@@ -109,6 +119,7 @@ class FlyingEngine:
         self.window = max(int(async_window), 0)
         self.temperature = temperature
         self.harvest_limit = max(int(harvest_limit), 1)
+        self.mixed_step = mixed_step
         assert fused_sampling or temperature <= 0.0, \
             "the legacy host path samples greedily; temperature/top_k " \
             "need fused_sampling=True"
@@ -136,7 +147,6 @@ class FlyingEngine:
         self._steady: Optional[_DecodeCache] = None
         self._bt_scratch: Optional[np.ndarray] = None
         self._host_bufs: Dict[Tuple, Dict[str, np.ndarray]] = {}
-        self._pos_cache: Dict[Tuple[int, int], jax.Array] = {}
         self._seed_iota: Dict[int, jax.Array] = {}
         self._step_counter = 0
 
@@ -256,6 +266,7 @@ class FlyingEngine:
         else:
             T = key[4]
             b = {"toks": np.zeros((B, T), np.int32),
+                 "pos": np.zeros((B, T), np.int32),
                  "slots": np.full((B, T), -1, np.int32),
                  "btab": np.zeros((B, mb), np.int32),
                  "prior": np.zeros((B,), np.int32),
@@ -278,14 +289,6 @@ class FlyingEngine:
         in-flight window: the next step mutates the buffer before the
         previous step's transfer has executed."""
         return jnp.asarray(buf.copy())
-
-    def _positions(self, B: int, T: int) -> jax.Array:
-        p = self._pos_cache.get((B, T))
-        if p is None:
-            p = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None],
-                                 (B, T))
-            self._pos_cache[(B, T)] = p
-        return p
 
     def _fill_block_tables(self, btab: np.ndarray, rows: np.ndarray,
                            reqs: Sequence[Request]) -> None:
@@ -398,12 +401,16 @@ class FlyingEngine:
         return iota + jnp.uint32(base)
 
     # ------------------------------------------------------------------
-    def prefill(self, reqs: Sequence[Request], merge: int,
-                chunk_tokens: int) -> float:
-        """Scheduler has already allocated the chunk's slots (Alg. 1 step
-        4); the engine derives device slot ids from the adaptor entry."""
-        assert merge == self.merge
-        t0 = time.perf_counter()
+    def _stage_prefill(self, reqs: Sequence[Request], mb_min: int = 1):
+        """Host staging for one chunked-prefill launch (§Perf D6). Each
+        request's chunk covers prompt positions
+        ``[r.prefilled, min(entry.length, prompt_len))``: the scheduler
+        has already allocated the chunk's slots (Alg. 1 step 4) and only
+        advances ``prefilled`` after the launch, so at staging time
+        ``prefilled`` IS the prior context length — long prompts stream
+        through in ``prefill_chunk``-sized slices with true absolute
+        positions, never truncated. Returns (batch, rows, final_mask,
+        T, mb)."""
         B = self._global_batch()
         n = len(reqs)
         prompts = [self._prompt_tokens(r) for r in reqs]
@@ -413,12 +420,23 @@ class FlyingEngine:
                    for r in reqs]
         plens = np.fromiter((len(p) for p in prompts), np.int64, n)
         elens = np.fromiter((e.length for e in entries), np.int64, n)
-        covs = np.minimum(plens, elens)  # positions written this step
-        # seq bucket: pad to pow2 so chunk-length variation reuses one
-        # compiled executable per bucket instead of recompiling;
+        # prompt positions cached once this chunk lands (entry.length may
+        # already include the first decode token's slot on final chunks)
+        end = np.minimum(elens, plens)
+        prior = np.fromiter((max(int(r.prefilled), 0) for r in reqs),
+                            np.int64, n)
+        prior = np.minimum(prior, end)
+        chunk = end - prior
+        final = end >= plens
+        # seq bucket: pad the CHUNK extent to pow2 so chunk-length
+        # variation reuses one compiled executable per bucket;
         # mb bucket: block-table width tracks the widest live request
-        T = min(bucket_pow2(max(int(plens.max()), 1)), self.prefill_len)
-        mb = self._mb_bucket(max(len(e.block_ids) for e in entries))
+        T = bucket_pow2(max(int(chunk.max()), 1))
+        nblocks = max(len(e.block_ids) for e in entries)
+        assert nblocks <= self.max_blocks, \
+            f"request needs {nblocks} blocks > max_blocks_per_req=" \
+            f"{self.max_blocks}"
+        mb = max(self._mb_bucket(nblocks), mb_min)
         bufs = self._bufs(("prefill", self.merge, B, mb, T))
         toks, slots, btab = bufs["toks"], bufs["slots"], bufs["btab"]
         toks.fill(0)
@@ -426,30 +444,42 @@ class FlyingEngine:
         btab.fill(0)
         cap = self.geom.capacity(self.merge)
         self._fill_block_tables(btab, rows, reqs)
-        if int(plens.sum()):
-            rowcat = np.repeat(rows, plens)
-            offcat = ragged_arange(plens)
-            toks[rowcat, offcat] = np.concatenate(prompts)[
-                : len(rowcat)]
-        if int(covs.sum()):
-            rowcat = np.repeat(rows, covs)
-            poscat = ragged_arange(covs)
+        if int(chunk.sum()):
+            rowcat = np.repeat(rows, chunk)
+            offcat = ragged_arange(chunk)
+            poscat = np.repeat(prior, chunk) + offcat
+            toks[rowcat, offcat] = np.concatenate(
+                [p[lo:hi] for p, lo, hi in zip(prompts, prior, end)])
             blockcat = btab[rowcat, poscat // cap].astype(np.int64)
-            slots[rowcat, poscat] = blockcat * cap + poscat % cap
-        # sample each request at its true final prompt position: the
-        # token must not depend on the padded window length (seq bucket)
-        # or on which other requests are co-batched
+            slots[rowcat, offcat] = blockcat * cap + poscat % cap
+        priorb = bufs["prior"]
+        priorb.fill(0)
+        priorb[rows] = prior
+        # sample each request at its true final chunk position: the token
+        # must not depend on the padded window length (seq bucket) or on
+        # which other requests are co-batched
         lastp = bufs["lastp"]
         lastp.fill(0)
-        lastp[rows] = np.maximum(covs - 1, 0)
+        lastp[rows] = np.maximum(chunk - 1, 0)
+        posb = bufs["pos"]
+        posb[:] = np.arange(T, dtype=np.int32)[None]
+        posb[rows] += prior[:, None].astype(np.int32)
         batch = {
             "tokens": self._h2d(toks),
-            "positions": self._positions(B, T),
+            "positions": self._h2d(posb),
             "slots": self._h2d(slots),
             "block_table": self._h2d(btab),
-            "prior_len": self._h2d(bufs["prior"]),
+            "prior_len": self._h2d(priorb),
             "last_pos": self._h2d(lastp),
         }
+        return batch, rows, final, T, mb
+
+    def prefill(self, reqs: Sequence[Request], merge: int,
+                chunk_tokens: int) -> float:
+        assert merge == self.merge
+        t0 = time.perf_counter()
+        B = self._global_batch()
+        batch, rows, final, T, mb = self._stage_prefill(reqs)
         seeds = self._seeds(B)
         if seeds is not None:
             batch["sample_seeds"] = seeds
@@ -460,34 +490,135 @@ class FlyingEngine:
         self.sync_stats.steps += 1
         if self.fused:
             toks_dev, self.states = runner(self.params, self.states, batch)
+            # only FINAL chunks emit a token; mid-prompt chunks leave the
+            # device token ring (and its decode feed-back key) untouched
             row_reqs = tuple((int(row), r.req_id)
-                             for row, r in zip(rows, reqs))
-            # prefill membership never matches a decode key: the next
-            # decode gathers these first tokens on device by row map
-            self._note_tokens(None, toks_dev, row_reqs)
+                             for row, r, f in zip(rows, reqs, final) if f)
+            if row_reqs:
+                # prefill membership never matches a decode key: the next
+                # decode gathers these first tokens on device by row map
+                self._note_tokens(None, toks_dev, row_reqs)
         else:
             logits, self.states = jax.block_until_ready(
                 runner(self.params, self.states, batch))
-            for r, row in zip(reqs, rows):
+            for r, row, f in zip(reqs, rows, final):
+                if not f:
+                    continue
                 tok = int(jnp.argmax(logits[row]))
                 self.sync_stats.host_argmax += 1
                 self._token_buf.setdefault(r.req_id, []).append(tok)
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
-    def _decode_cache(self, reqs: Sequence[Request]) -> _DecodeCache:
+    def request_fits(self, r: Request, merge: int) -> bool:
+        """Admission gate: can this request's full context EVER sit in
+        one ``max_blocks_per_req``-wide block table under ``merge``?
+        Chunked prefill streams the whole prompt (no more silent
+        truncation), so over-cap requests must be rejected up front —
+        otherwise they would crash the serve loop mid-stream once their
+        block count outgrows the table."""
+        cap = self.geom.capacity(merge)
+        need = -(-(r.prompt_len + r.output_len) // cap)
+        return need <= self.max_blocks
+
+    def supports_mixed(self) -> bool:
+        """Mixed steps cover the paged-attention serving path: recurrent
+        states (SSM/hybrid) are batch-dense — a full-batch prefill pass
+        would clobber decode rows' states — and enc-dec prefill needs
+        frontend embeds. Those fall back to sequential launches."""
+        return (self.mixed_step and self.fused and self.cfg.enc_dec is None
+                and self.cfg.family not in ("ssm", "hybrid")
+                and self.geom.layout != "striped")
+
+    def mixed(self, prefills: Sequence[Request], decodes: Sequence[Request],
+              merge: int, chunk_tokens: int) -> float:
+        """One compiled launch for a Sarathi-style mixed step (§Perf D6):
+        prefill chunk rows and the decode batch share a single executable
+        keyed ``(merge, 'mixed', batch_bucket, chunk_bucket, mb_bucket)``.
+        ``decodes`` may include requests whose FINAL chunk is in
+        ``prefills`` this step (the scheduler promotes before launching);
+        their first-token input routes on device from the prefill output
+        rows via ``d_src_rows`` — token-identical to the sequential
+        prefill->decode pair, in one step launch."""
+        assert merge == self.merge
+        assert self.fused, "mixed step requires fused sampling"
+        t0 = time.perf_counter()
+        B = self._global_batch()
+        cap = self.geom.capacity(self.merge)
+        # shared mb bucket: the widest need of either phase, so both
+        # block tables stage (and compile) at one width per runner key
+        pre_blocks = max(len(self.adaptors[r.engine_group]
+                             .table[r.req_id].block_ids) for r in prefills)
+        dec_len = max(self.adaptors[r.engine_group].table[r.req_id].length
+                      for r in decodes)
+        mb = max(self._mb_bucket(pre_blocks),
+                 self._mb_bucket(-(-int(dec_len) // cap)))
+        pbatch, prows, final, T, mb = self._stage_prefill(prefills,
+                                                          mb_min=mb)
+        c = self._decode_cache(decodes, mb_min=mb)
+        bufs, drows = c.bufs, c.rows
+        tokens = self._stage_decode(decodes, c)
+        # on-device routing for rows promoted out of THIS step's prefill:
+        # group-local prefill row index (both rows live on the same
+        # engine-group shard)
+        bpg = self.bpe * self.merge
+        src = np.full((B,), -1, np.int32)
+        p_row_of = {r.req_id: int(row)
+                    for r, row, f in zip(prefills, prows, final) if f}
+        for r, drow in zip(decodes, drows):
+            pr = p_row_of.get(r.req_id)
+            if pr is not None:
+                src[drow] = pr % bpg
+        batch = {"p_" + k: v for k, v in pbatch.items()}
+        batch.update({
+            "d_tokens": tokens,
+            "d_positions": self._h2d(bufs["pos"]),
+            "d_slots": self._h2d(bufs["slots"]),
+            "d_block_table": self._h2d(bufs["btab"]),
+            "d_context_len": self._h2d(bufs["ctxl"]),
+            "d_src_rows": jnp.asarray(src),
+        })
+        # two seed draws mirror the sequential two-launch assignment, so
+        # stochastic sampling stays token-identical across the fusion
+        p_seeds = self._seeds(B)
+        self._step_counter += 1
+        d_seeds = self._seeds(B)
+        self._step_counter += 1
+        if p_seeds is not None:
+            batch["p_sample_seeds"] = p_seeds
+            batch["d_sample_seeds"] = d_seeds
+        runner = self.pool.runner(
+            self.merge, "mixed", sampled=True, donate=self.donate,
+            batch_bucket=B, seq_bucket=T, mb_bucket=mb)
+        self.sync_stats.steps += 1  # ONE launch for the whole tick
+        (p_toks, d_toks), self.states = runner(self.params, self.states,
+                                               batch)
+        prow_reqs = tuple((int(row), r.req_id)
+                          for row, r, f in zip(prows, prefills, final) if f)
+        if prow_reqs:
+            self._note_tokens(None, p_toks, prow_reqs)
+        self._note_tokens(c.key, d_toks, c.row_reqs)
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    def _decode_cache(self, reqs: Sequence[Request],
+                      mb_min: int = 1) -> _DecodeCache:
         key = (self.merge, tuple(r.req_id for r in reqs))
         c = self._steady
         if c is not None and c.key == key:
             self._decode_advance(c)
             # crossing an mb bucket boundary (pow2 of the max live
-            # blocks) rebuilds the cache against wider staging buffers;
-            # within a bucket the steady path is untouched
-            if self._mb_bucket(-(-int(c.lengths.max()) // c.cap)) == c.mb:
+            # blocks, or a mixed step's shared-width floor) rebuilds the
+            # cache against wider staging buffers; within a bucket the
+            # steady path is untouched
+            need = max(self._mb_bucket(-(-int(c.lengths.max()) // c.cap)),
+                       mb_min)
+            if need == c.mb:
                 return c
-        return self._decode_build(key, reqs)
+        return self._decode_build(key, reqs, mb_min)
 
-    def _decode_build(self, key, reqs: Sequence[Request]) -> _DecodeCache:
+    def _decode_build(self, key, reqs: Sequence[Request],
+                      mb_min: int = 1) -> _DecodeCache:
         B = self._global_batch()
         n = len(reqs)
         rows_map = self._rows(reqs)
@@ -497,7 +628,8 @@ class FlyingEngine:
         cap = self.geom.capacity(self.merge)
         nblk = np.fromiter((len(e.block_ids) for e in entries), np.int64, n)
         lengths = np.fromiter((e.length for e in entries), np.int64, n)
-        mb = self._mb_bucket(-(-int(lengths.max()) // cap) if n else 1)
+        mb = max(self._mb_bucket(-(-int(lengths.max()) // cap) if n else 1),
+                 mb_min)
         bufs = self._bufs(("decode", self.merge, B, mb))
         # reset: rows not owned by this membership must stay inert
         bufs["slots"].fill(-1)
@@ -528,18 +660,28 @@ class FlyingEngine:
                 btab[row, : min(len(ids), c.mb)] = ids[: c.mb]
                 c.nblk[i] = len(e.block_ids)
 
-    def decode(self, reqs: Sequence[Request], merge: int) -> float:
-        assert merge == self.merge
-        t0 = time.perf_counter()
-        B = self._global_batch()
-        c = self._decode_cache(reqs)
+    def _stage_decode(self, reqs: Sequence[Request],
+                      c: _DecodeCache) -> jax.Array:
+        """Per-step decode staging over the cache's persistent buffers:
+        vectorized position/slot/context math plus the device-resident
+        previous-token gather. Shared by ``decode`` and ``mixed`` — the
+        mixed-vs-sequential token-identity contract rides on the two
+        paths staging identically."""
         bufs, rows, cap = c.bufs, c.rows, c.cap
         p = c.lengths - 1
         bufs["pos"][rows, 0] = p
         bufs["slots"][rows] = \
             bufs["btab"][rows, p // cap].astype(np.int64) * cap + p % cap
         bufs["ctxl"][rows] = c.lengths
-        tokens = self._tokens_in(reqs, rows, c.key, bufs["toks"])
+        return self._tokens_in(reqs, rows, c.key, bufs["toks"])
+
+    def decode(self, reqs: Sequence[Request], merge: int) -> float:
+        assert merge == self.merge
+        t0 = time.perf_counter()
+        B = self._global_batch()
+        c = self._decode_cache(reqs)
+        bufs = c.bufs
+        tokens = self._stage_decode(reqs, c)
         batch = {
             "tokens": tokens,
             "positions": self._h2d(bufs["pos"]),
@@ -561,7 +703,7 @@ class FlyingEngine:
         else:
             logits, self.states = jax.block_until_ready(
                 runner(self.params, self.states, batch))
-            for r, row in zip(reqs, rows):
+            for r, row in zip(reqs, c.rows):
                 tok = int(jnp.argmax(logits[row]))
                 self.sync_stats.host_argmax += 1
                 self._token_buf.setdefault(r.req_id, []).append(tok)
@@ -576,8 +718,9 @@ class FlyingEngine:
                 # req_id seed deterministically
                 self._prompt_cache.pop(next(iter(self._prompt_cache)))
             rng = np.random.default_rng(abs(hash(r.req_id)) % (1 << 31))
-            p = rng.integers(0, self.cfg.vocab_size,
-                             size=min(r.prompt_len, self.prefill_len))
+            # the FULL prompt: chunked prefill streams it in slices (the
+            # seed-era cap at prefill_len silently truncated long prompts)
+            p = rng.integers(0, self.cfg.vocab_size, size=r.prompt_len)
             self._prompt_cache[r.req_id] = p
         return p
 

@@ -49,6 +49,14 @@ class Backend(Protocol):
     so it never needs a mid-stream synchronization. Backends must drain
     themselves at mode-switch boundaries (the §5.3 step-boundary safe
     point); the scheduler additionally drains once at the end of a run.
+
+    Backends MAY additionally expose
+    ``mixed(prefills, decodes, merge, chunk_tokens) -> float`` (gated by
+    an optional ``supports_mixed()``): one launch covering the tick's
+    prefill chunks AND decode batch (§Perf D6). ``decodes`` includes
+    requests promoted out of this tick's final chunk; their ``prefilled``
+    field still holds the chunk's PRIOR length when the backend runs —
+    the scheduler advances it only after the launch returns.
     """
 
     def prefill(self, reqs: Sequence[Request], merge: int,
@@ -270,8 +278,19 @@ class DynamicScheduler:
         group_load = [0] * self.groups
         for r in self.running:
             group_load[r.engine_group // self.merge] += 1
+        fits = getattr(self.backend, "request_fits", None)
         for r in list(self.waiting):
             if r.state not in ("queued", "spec_dp"):
+                continue
+            if fits is not None and not fits(r, self.merge):
+                # over the per-request block cap under the CURRENT mode:
+                # block capacity B(m) grows with merge, so only reject
+                # outright if no valid mode could ever hold it —
+                # otherwise keep it queued for a future switch (the same
+                # wait-for-resources stance as pool exhaustion)
+                if not fits(r, self.plan.valid_merges()[-1]):
+                    r.state = "rejected"
+                    self.waiting.remove(r)
                 continue
             # pick least-loaded group with KV room
             order = sorted(range(self.groups), key=lambda g: group_load[g])
@@ -291,9 +310,15 @@ class DynamicScheduler:
         # ⑥ execution: Sarathi-style mixed step — chunked prefills
         # piggybacked with the decode batch (paper §1: chunked prefill and
         # continuous batching preserved), so decode cadence never starves
-        # behind admissions.
+        # behind admissions. Backends exposing ``mixed`` run the prefill
+        # chunks AND the decode batch as ONE compiled launch per tick
+        # (§Perf D6); others (simulation, recurrent archs) fall back to
+        # the sequential prefill->decode pair — token-identical by
+        # construction.
         progressed = False
         prefills = [r for r in admit if r.prefilled < r.prompt_len]
+        finished: List[Request] = []
+        chunk_of: Dict[str, int] = {}
         if prefills:
             chunks: Dict[int, List[Tuple[str, int]]] = {}
             for r in prefills:
@@ -301,53 +326,76 @@ class DynamicScheduler:
                     r.sched_t = self.now
                 chunk = min(self.cfg.prefill_chunk,
                             r.prompt_len - r.prefilled)
+                chunk_of[r.req_id] = chunk
                 chunks.setdefault(r.engine_group, []).append(
                     (r.req_id, chunk))
-                r.prefilled += chunk
             for g, items in chunks.items():
                 self._adaptor(g).append_slots_batch(
                     [rid for rid, _ in items], [c for _, c in items])
-            dt = self.backend.prefill(prefills, self.merge,
-                                      self.cfg.prefill_chunk)
-            self.now += dt
+            # promote final-chunk requests BEFORE execution: the decode
+            # batch of this very tick includes them (their first token
+            # comes out of the final prefill step), and ``prefilled``
+            # stays at the chunk's prior length for the backend to read
+            finished = [r for r in prefills
+                        if r.prefilled + chunk_of[r.req_id] >= r.prompt_len]
+            for r in finished:
+                r.state = "running" if r.state != "spec_dp" else "spec_dp"
+                self.waiting.remove(r)
+                self.running.append(r)
+                r.generated += 1
+                self._adaptor(r.engine_group).append_slots(r.req_id, 1)
+        mixed = getattr(self.backend, "mixed", None)
+        sup = getattr(self.backend, "supports_mixed", None)
+        use_mixed = bool(prefills) and bool(self.running) \
+            and mixed is not None and (sup is None or sup())
+        if prefills:
+            if use_mixed:
+                dt = mixed(prefills, self.running, self.merge,
+                           self.cfg.prefill_chunk)
+            else:
+                dt = self.backend.prefill(prefills, self.merge,
+                                          self.cfg.prefill_chunk)
             for r in prefills:
-                if r.prefilled >= r.prompt_len:
-                    r.state = "running" if r.state != "spec_dp" else "spec_dp"
-                    self.waiting.remove(r)
-                    self.running.append(r)
-                    # first token comes out of the final prefill step
-                    r.generated += 1
-                    self._adaptor(r.engine_group).append_slots(r.req_id, 1)
-                    r.first_token_t = self.now
-                    r.token_times.append(self.now)
-            self._log("prefill")
+                r.prefilled += chunk_of[r.req_id]
+            self.now += dt
+            for r in finished:
+                r.first_token_t = self.now
+                r.token_times.append(self.now)
+            if use_mixed:
+                self._decode_bookkeeping()
+            self._log("mixed" if use_mixed else "prefill")
             progressed = True
-        if self.running:
+        if self.running and not use_mixed:
             dt = self.backend.decode(self.running, self.merge)
             self.now += dt
-            done = []
-            alive: Dict[int, List[str]] = {}
-            for r in self.running:
-                r.generated += 1
-                r.token_times.append(self.now)
-                if not r.done:
-                    alive.setdefault(r.engine_group, []).append(r.req_id)
-                if r.done:
-                    r.finish_t = self.now
-                    r.state = "done"
-                    done.append(r)
-            # next token's slot, one vectorized allocation per adaptor
-            for g, rids in alive.items():
-                self._adaptor(g).append_slots_batch(rids, 1)
-            for r in done:
-                self.running.remove(r)
-                self._adaptor(r.engine_group).release(r.req_id)
+            self._decode_bookkeeping()
             self._log("decode")
-            # sequential/soft pending switch: retry after drain progress
-            if self.pending_merge is not None and not self._incompatible():
-                self._transition(self.pending_merge)
-            return True
+            progressed = True
         return progressed
+
+    def _decode_bookkeeping(self) -> None:
+        """Post-decode accounting shared by the mixed and sequential
+        paths: token counts, next-token slots, completions, and the
+        sequential/soft pending-switch retry after drain progress."""
+        done = []
+        alive: Dict[int, List[str]] = {}
+        for r in self.running:
+            r.generated += 1
+            r.token_times.append(self.now)
+            if not r.done:
+                alive.setdefault(r.engine_group, []).append(r.req_id)
+            if r.done:
+                r.finish_t = self.now
+                r.state = "done"
+                done.append(r)
+        # next token's slot, one vectorized allocation per adaptor
+        for g, rids in alive.items():
+            self._adaptor(g).append_slots_batch(rids, 1)
+        for r in done:
+            self.running.remove(r)
+            self._adaptor(r.engine_group).release(r.req_id)
+        if self.pending_merge is not None and not self._incompatible():
+            self._transition(self.pending_merge)
 
     def _log(self, phase: str) -> None:
         self.log.append(StepLog(

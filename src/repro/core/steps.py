@@ -74,6 +74,20 @@ def prefill_batch_spec():
     }
 
 
+def mixed_batch_spec():
+    """Unified mixed-phase step (§Perf D6): one compiled program packs
+    the prefill chunk rows (``p_*``) and the decode batch (``d_*``).
+    ``d_src_rows`` [B] holds, for decode rows whose request finished
+    prefill THIS step, the (group-local) prefill row producing its input
+    token (-1 otherwise) — the first generated token feeds the first
+    decode inside the same launch, never through the host."""
+    spec = {"p_" + k: v for k, v in prefill_batch_spec().items()}
+    spec.update({"d_" + k: v for k, v in decode_batch_spec().items()})
+    spec["p_last_pos"] = P(DP_AXES,)
+    spec["d_src_rows"] = P(DP_AXES,)
+    return spec
+
+
 # ---------------------------------------------------------------------------
 # serve step
 # ---------------------------------------------------------------------------
@@ -117,9 +131,62 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
     merge = mode.merge
     model.states_as_carry = True  # §Perf A2: in-place pool updates
 
-    from repro.models.transformer import gather_vocab, sample_tokens
+    from repro.models.transformer import (gather_vocab, sample_tokens,
+                                          tp_argmax)
 
     striped = geom.layout == "striped"
+    impl = {None: "auto", True: "force", False: "ref"}[use_kernel]
+
+    def mixed_step(params, states, batch):
+        """One launch per scheduler tick (§Perf D6): chunked prefill for
+        the admission rows, then decode for the running batch, over the
+        same donated state pytree. Token-identical to the sequential
+        prefill->decode launches — the math is the same two forwards,
+        compiled into one executable keyed by
+        (merge, batch_bucket, chunk_bucket, mb_bucket)."""
+        assert not striped and cfg.enc_dec is None, \
+            "mixed step covers paged attention archs only"
+        sts = _view_states(model, states, geom, merge, flat_to_view=True)
+        pb = PrefillBackend(
+            slots=batch["p_slots"], prior_len=batch["p_prior_len"],
+            block_table=batch["p_block_table"], chunked=True, impl=impl)
+        logits_p, sts, _ = model.forward(
+            params, ctx, mode="prefill", tokens=batch["p_tokens"],
+            positions=batch["p_positions"], backend=pb, states=sts,
+            window=window, last_pos=batch["p_last_pos"])
+        if sample is not None:
+            temp, top_k = sample
+            p_toks = sample_tokens(cfg, logits_p[:, -1], ctx,
+                                   temperature=temp, top_k=top_k,
+                                   seeds=batch.get("p_sample_seeds"))
+        else:
+            # logits-returning contract: route src rows via the greedy
+            # distributed argmax (the legacy host path is greedy-only)
+            p_toks = tp_argmax(cfg, logits_p[:, -1], ctx)
+        # decode rows promoted out of THIS step's prefill read their
+        # input token from the prefill output row, on device
+        src = batch["d_src_rows"]
+        d_in = jnp.where(src[:, None] >= 0,
+                         jnp.take(p_toks, jnp.maximum(src, 0),
+                                  axis=0)[:, None].astype(jnp.int32),
+                         batch["d_tokens"])
+        db = DecodeBackend(
+            slots=batch["d_slots"], block_table=batch["d_block_table"],
+            context_len=batch["d_context_len"], impl=impl)
+        logits_d, sts, _ = model.forward(
+            params, ctx, mode="decode", tokens=d_in,
+            positions=batch["d_positions"], backend=db, states=sts,
+            window=window)
+        new_states = _view_states(model, sts, geom, merge,
+                                  flat_to_view=False)
+        if sample is not None:
+            temp, top_k = sample
+            d_toks = sample_tokens(cfg, logits_d[:, -1], ctx,
+                                   temperature=temp, top_k=top_k,
+                                   seeds=batch.get("d_sample_seeds"))
+            return (p_toks, d_toks), new_states
+        return (gather_vocab(cfg, logits_p[:, -1], ctx),
+                gather_vocab(cfg, logits_d[:, -1], ctx)), new_states
 
     def step(params, states, batch):
         sts = _view_states(model, states, geom, merge, flat_to_view=True)
@@ -133,9 +200,7 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
         elif phase == "decode":
             backend = DecodeBackend(
                 slots=batch["slots"], block_table=batch["block_table"],
-                context_len=batch["context_len"],
-                impl={None: "auto", True: "force",
-                      False: "ref"}[use_kernel])
+                context_len=batch["context_len"], impl=impl)
         elif striped:
             from repro.models.striped import StripedPrefillBackend
             backend = StripedPrefillBackend(
@@ -143,7 +208,8 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
         else:
             backend = PrefillBackend(
                 slots=batch["slots"], prior_len=batch["prior_len"],
-                block_table=batch["block_table"], chunked=chunked)
+                block_table=batch["block_table"], chunked=chunked,
+                impl=impl)
         logits, new_sts, _ = model.forward(
             params, ctx, mode=phase, tokens=batch["tokens"],
             positions=batch["positions"], backend=backend, states=sts,
@@ -170,14 +236,15 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
                  *([None] * (leaf_ndim - 3)))
 
     def run(params, states, batch):
-        base = decode_batch_spec() if phase == "decode" \
-            else prefill_batch_spec()
+        base = {"decode": decode_batch_spec, "prefill": prefill_batch_spec,
+                "mixed": mixed_batch_spec}[phase]()
         bspecs = {k: base.get(k, P(DP_AXES, *([None] * (batch[k].ndim - 1))))
                   for k in batch}
         sspecs = jax.tree.map(lambda a: make_state_spec(a.ndim), states)
-        out_spec = P(DP_AXES,) if sample is not None else P(DP_AXES, None)
+        tok_spec = P(DP_AXES,) if sample is not None else P(DP_AXES, None)
+        out_spec = (tok_spec, tok_spec) if phase == "mixed" else tok_spec
         fn = _shard_map(
-            step, mesh=mesh,
+            mixed_step if phase == "mixed" else step, mesh=mesh,
             in_specs=(pspecs, sspecs, bspecs),
             out_specs=(out_spec, sspecs),
             **_SM_KW)

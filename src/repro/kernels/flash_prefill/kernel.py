@@ -100,3 +100,122 @@ def flash_prefill_kernel(q, k, v, *, window: Optional[int] = None,
         out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# paged flash-prefill: chunked prefill straight over the paged KV pool
+# ---------------------------------------------------------------------------
+#
+# The chunk's K/V rows are appended to the pool FIRST (fused chunk append,
+# kernels/paged_attention), so one kernel covers both attention terms of
+# chunked prefill: in-chunk causal AND attention over prior context, all
+# consumed through the scalar-prefetched block table. Query rows at
+# absolute positions prior_len[b] + i attend every pool position
+# kpos <= qpos (optionally windowed) — prior tokens and the causal chunk
+# prefix are the same sweep, no separate merge pass. Pages whose token
+# range falls entirely outside [qpos_min - window + 1, qpos_max] are
+# skipped via @pl.when, so per-chunk cost tracks live context
+# (mb-bucket-bounded), not the engine's worst-case table width.
+
+def _paged_kernel(tables_ref, prior_ref, q_ref, k_ref, v_ref, out_ref,
+                  m_ref, l_ref, acc_ref, *, page: int, blk_q: int, mb: int,
+                  window: Optional[int], softmax_scale: Optional[float]):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    prior = prior_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = j * page
+    q_lo = prior + i * blk_q          # absolute position of first q row
+    q_hi = q_lo + blk_q - 1
+    live = start <= q_hi              # causal: no keys beyond the q block
+    if window is not None:
+        live &= start + page > q_lo - window
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)           # [H, blk_q, hd]
+        k = k_ref[0].astype(jnp.float32)           # [page, KV, hd]
+        v = v_ref[0].astype(jnp.float32)
+        H, bq, hd = q.shape
+        KV = k.shape[1]
+        rep = H // KV
+        qf = q.reshape(KV, rep * bq, hd)
+        s = jax.lax.dot_general(
+            qf, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)     # [KV, rep*bq, page]
+        s = s * (softmax_scale if softmax_scale is not None else hd ** -0.5)
+        # flat row f = r*bq + qi within each kv group -> qi = f % bq
+        qpos = q_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (KV, rep * bq, page), 1) % bq
+        kpos = start + jax.lax.broadcasted_iota(
+            jnp.int32, (KV, rep * bq, page), 2)
+        mask = kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        sf = s.reshape(H * bq, page)
+        m_prev = m_ref[...]                         # [H*bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(sf, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sf - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.reshape(KV, rep * bq, page), v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)     # [KV, rep*bq, hd]
+        acc_ref[...] = alpha * acc_ref[...] + pv.reshape(H * bq, hd)
+        m_ref[...] = m_new
+
+    @pl.when(j == mb - 1)
+    def _fin():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0] = out.reshape(out_ref.shape[1:]).astype(out_ref.dtype)
+
+
+def paged_flash_prefill_kernel(q, k_pool, v_pool, block_table, prior_len, *,
+                               window: Optional[int] = None,
+                               softmax_scale: Optional[float] = None,
+                               blk_q: int = 128, interpret: bool = False):
+    """q [B,H,T,hd] (T a multiple of blk_q; absolute position of q[:, :, i]
+    is prior_len[b] + i); pools [nblk,page,KV,hd] already holding the
+    chunk's rows; block_table [B,MB] int32; prior_len [B] int32 ->
+    [B,H,T,hd]."""
+    B, H, T, hd = q.shape
+    nblk, page, KV, _ = k_pool.shape
+    MB = block_table.shape[1]
+    blk_q = min(blk_q, T)
+    n_q = T // blk_q
+
+    kern = functools.partial(_paged_kernel, page=page, blk_q=blk_q, mb=MB,
+                             window=window, softmax_scale=softmax_scale)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_table, prior_len
+            grid=(B, n_q, MB),
+            in_specs=[
+                pl.BlockSpec((1, H, blk_q, hd),
+                             lambda b, i, j, t, p: (b, 0, i, 0)),
+                pl.BlockSpec((1, page, KV, hd),
+                             lambda b, i, j, t, p: (t[b, j], 0, 0, 0)),
+                pl.BlockSpec((1, page, KV, hd),
+                             lambda b, i, j, t, p: (t[b, j], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, blk_q, hd),
+                                   lambda b, i, j, t, p: (b, 0, i, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H * blk_q, 1), jnp.float32),
+                pltpu.VMEM((H * blk_q, 1), jnp.float32),
+                pltpu.VMEM((H * blk_q, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, prior_len, q, k_pool, v_pool)

@@ -1,5 +1,20 @@
-"""jit'd wrapper: layout transform [B,T,H,hd]->[B,H,T,hd], GQA repeat,
-T padding to the block size, CPU interpret dispatch."""
+"""Flash-prefill dispatch layer.
+
+``flash_prefill`` is the dense (non-paged) causal kernel wrapper: layout
+transform [B,T,H,hd]->[B,H,T,hd], GQA repeat, T padding to the block
+size, CPU interpret dispatch.
+
+``paged_flash_prefill`` is the serving chunked-prefill op (docs/PERF.md
+§D6): fused multi-token chunk append (aliased row writes, never a
+full-pool scatter) followed by one paged flash pass whose K loop sweeps
+the scalar-prefetched block table — in-chunk causal attention and
+attention over prior pages are the same mb-bucket-bounded sweep.
+``impl`` follows the paged-decode tri-state (``kernel|interpret|ref``,
+resolved by ``kernels/paged_attention/ops.resolve_impl``): the jnp
+reference appends with the scatter oracle and attends via the gathered
+oracle; the kernel path never materializes the gathered context or a
+dense [B,H,Tq,Tk] score tensor.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,8 +23,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_prefill.kernel import flash_prefill_kernel
-from repro.kernels.flash_prefill.ref import flash_prefill_ref
+from repro.kernels.flash_prefill.kernel import (flash_prefill_kernel,
+                                                paged_flash_prefill_kernel)
+from repro.kernels.flash_prefill.ref import (flash_prefill_ref,
+                                             paged_flash_prefill_ref)
 
 
 def _interpret() -> bool:
@@ -39,4 +56,51 @@ def flash_prefill(q, k, v, *, window: Optional[int] = None, blk: int = 128):
     return jnp.moveaxis(out, 2, 1)
 
 
-__all__ = ["flash_prefill", "flash_prefill_ref"]
+def paged_flash_prefill(q, k_new, v_new, k_pool, v_pool, slots, block_table,
+                        prior_len, *, window: Optional[int] = None,
+                        softmax_scale: Optional[float] = None,
+                        blk_q: int = 128, impl: Optional[str] = None):
+    """Fused chunk append + paged flash-prefill attention.
+
+    q [B,T,H,hd] (row i at absolute position prior_len[b] + i);
+    k_new/v_new [B,T,KV,hd] the chunk's fresh K/V, written at ``slots``
+    [B,T] (negative => parked) before attending; pools [nblk,page,KV,hd]
+    (mode-viewed); block_table [B,MB] covers prior pages AND the chunk's
+    own pages; prior_len [B]. Returns (out [B,T,H,hd], k_pool, v_pool).
+
+    Called from inside the compiled serve step (no inner jit, same as
+    the decode ops — an extra jit boundary would break pool donation).
+    """
+    from repro.kernels.paged_attention.ops import resolve_impl
+    impl = resolve_impl(impl)
+    slots = slots.astype(jnp.int32)
+    if impl == "ref":
+        from repro.kernels.paged_attention.ref import paged_append_chunk_ref
+        k_pool, v_pool = paged_append_chunk_ref(
+            (k_pool, v_pool), (k_new, v_new), slots)
+        out = paged_flash_prefill_ref(q, k_pool, v_pool, block_table,
+                                      prior_len, window=window,
+                                      softmax_scale=softmax_scale)
+        return out, k_pool, v_pool
+    from repro.kernels.paged_attention.kernel import paged_append_chunk_kernel
+    interp = impl == "interpret"
+    k_pool, v_pool = paged_append_chunk_kernel(
+        (k_pool, v_pool), (k_new, v_new), slots, interpret=interp)
+    B, T, H, hd = q.shape
+    qt = jnp.moveaxis(q, 1, 2)                       # [B,H,T,hd]
+    blk_eff = min(blk_q, T)
+    pad = (-T) % blk_eff
+    if pad:
+        # padded q rows attend garbage positions past the chunk; their
+        # outputs are sliced off below (and masked rows keep l>0 via the
+        # guarded divide), so they never reach a real row
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = paged_flash_prefill_kernel(
+        qt, k_pool, v_pool, block_table.astype(jnp.int32),
+        prior_len.astype(jnp.int32), window=window,
+        softmax_scale=softmax_scale, blk_q=blk_eff, interpret=interp)
+    return jnp.moveaxis(out[:, :, :T], 2, 1), k_pool, v_pool
+
+
+__all__ = ["flash_prefill", "flash_prefill_ref", "paged_flash_prefill",
+           "paged_flash_prefill_ref"]

@@ -9,6 +9,36 @@ import jax.numpy as jnp
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
+def paged_flash_prefill_ref(q, k_pool, v_pool, block_table, prior_len, *,
+                            window: Optional[int] = None,
+                            softmax_scale: Optional[float] = None):
+    """Chunked-prefill oracle over the paged pool (chunk rows already
+    appended). q [B,T,H,hd] with q[:, i] at absolute position
+    prior_len[b] + i; pools [nblk,page,KV,hd]; block_table [B,MB];
+    prior_len [B] -> [B,T,H,hd]. One causal sweep over the pool covers
+    prior context and the in-chunk prefix alike."""
+    B, T, H, hd = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    MB = block_table.shape[1]
+    k = k_pool[jnp.maximum(block_table, 0)].reshape(B, MB * page, KV, hd)
+    v = v_pool[jnp.maximum(block_table, 0)].reshape(B, MB * page, KV, hd)
+    rep = H // KV
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = prior_len[:, None] + jnp.arange(T)[None, :]      # [B,T]
+    kpos = jnp.arange(MB * page)[None, None, :]             # [1,1,MBp]
+    mask = kpos <= qpos[:, :, None]
+    if window is not None:
+        mask &= kpos > qpos[:, :, None] - window
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def flash_prefill_ref(q, k, v, *, window: Optional[int] = None):
     """q [B,T,H,hd]; k/v [B,T,KV,hd]; causal (+ window) -> [B,T,H,hd]."""
     B, T, H, hd = q.shape

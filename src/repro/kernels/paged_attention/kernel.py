@@ -186,3 +186,58 @@ def paged_append_token_kernel(pools, vals, slots, *, interpret: bool = False):
         interpret=interpret,
     )(blk, off, *vals, *pools)
     return tuple(outs)
+
+
+def _append_chunk_kernel(blk_ref, off_ref, *refs, n: int):
+    # grid (B, T): one (1, 1, *w) row write per chunk token, targeted by
+    # the scalar-prefetched per-token (block, offset) pair.
+    val_refs, out_refs = refs[:n], refs[2 * n:]
+    for v_ref, o_ref in zip(val_refs, out_refs):
+        o_ref[0, 0] = v_ref[0, 0].astype(o_ref.dtype)
+
+
+def paged_append_chunk_kernel(pools, vals, slots, *, interpret: bool = False):
+    """Multi-token chunk append into paged pools: the prefill-side
+    generalization of ``paged_append_token_kernel`` (same aliased
+    row-write scheme, grid (B, T) instead of (B,)).
+
+    pools: tuple of [nblk, page, *w]; vals: matching tuple of [B, T, *w]
+    chunk rows; slots [B, T] int32 flat slots (negative => parked to the
+    reserved scratch row). Replaces the two full-pool ``paged_append``
+    scatters per layer with T aliased single-row writes per request —
+    chunk-proportional, never O(pool). The serving invariant (disjoint
+    block tables per live request, parked rows all targeting the
+    don't-care scratch row) rules out write hazards exactly as in the
+    single-token case."""
+    n = len(pools)
+    B, T = slots.shape
+    nblk, page = pools[0].shape[0], pools[0].shape[1]
+    slots = slots.astype(jnp.int32)
+    parked = slots < 0
+    blk = jnp.where(parked, nblk - 1, slots // page)
+    off = jnp.where(parked, page - 1, slots % page)
+
+    def val_spec(v):
+        return pl.BlockSpec((1, 1) + v.shape[2:],
+                            lambda b, t, bl, of: (b, t) + (0,) *
+                            (v.ndim - 2))
+
+    def row_spec(p):
+        return pl.BlockSpec((1, 1) + p.shape[2:],
+                            lambda b, t, bl, of: (bl[b, t], of[b, t]) +
+                            (0,) * (p.ndim - 2))
+
+    outs = pl.pallas_call(
+        functools.partial(_append_chunk_kernel, n=n),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # blk, off
+            grid=(B, T),
+            in_specs=[val_spec(v) for v in vals] +
+                     [row_spec(p) for p in pools],
+            out_specs=[row_spec(p) for p in pools],
+        ),
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in pools],
+        input_output_aliases={2 + n + i: i for i in range(n)},
+        interpret=interpret,
+    )(blk, off, *vals, *pools)
+    return tuple(outs)

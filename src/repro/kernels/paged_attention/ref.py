@@ -53,6 +53,23 @@ def paged_append_token_ref(pools, vals, slots):
     return tuple(out)
 
 
+def paged_append_chunk_ref(pools, vals, slots):
+    """Oracle for ``paged_append_chunk_kernel``: scatter each request's
+    chunk rows at their flat slots (negative slots park to the reserved
+    scratch row). pools: tuple [nblk,page,*w]; vals: tuple [B,T,*w];
+    slots [B,T]."""
+    out = []
+    flat_slots = slots.reshape(-1)
+    for pool, v in zip(pools, vals):
+        nblk, page = pool.shape[0], pool.shape[1]
+        flat = pool.reshape(nblk * page, *pool.shape[2:])
+        safe = jnp.where(flat_slots >= 0, flat_slots, nblk * page - 1)
+        flat = flat.at[safe].set(
+            v.reshape(-1, *v.shape[2:]).astype(pool.dtype))
+        out.append(flat.reshape(pool.shape))
+    return tuple(out)
+
+
 def paged_mla_attention_ref(q_cat: jax.Array, pool: jax.Array,
                             block_table: jax.Array, context_len: jax.Array,
                             *, R: int, window: Optional[int] = None,

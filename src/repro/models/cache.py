@@ -168,15 +168,30 @@ class PrefillBackend:
     attention over previously cached pages; writes the chunk's KV to pages.
 
     ``slots [B,T]`` flat write slots; ``prior_len [B]`` tokens already in
-    cache (0 for fresh prefill); ``block_table [B,mb]`` covers prior pages.
-    """
+    cache (0 for fresh prefill); ``block_table [B,mb]`` covers prior pages
+    (and, on the kernel path, the chunk's own pages).
+
+    ``impl`` follows the decode tri-state (``resolve_impl``): the kernel
+    path runs the fused chunk append + paged flash-prefill kernel
+    (§Perf D6) — chunk-proportional aliased row writes and an
+    mb-bucket-bounded online-softmax sweep of the block table; the
+    dense ``attention_with_lse``-over-``paged_gather`` math below
+    survives only as the jnp reference."""
     slots: jax.Array
     prior_len: jax.Array
     block_table: jax.Array
     chunked: bool = False
+    impl: Optional[str] = None
 
     def attend(self, state, q, k, v, *, positions, window=None):
+        from repro.kernels.paged_attention import ops as pa_ops
         k_pool, v_pool = state
+        if self.chunked and pa_ops.resolve_impl(self.impl) != "ref":
+            from repro.kernels.flash_prefill import ops as fp_ops
+            out, k_pool, v_pool = fp_ops.paged_flash_prefill(
+                q, k, v, k_pool, v_pool, self.slots, self.block_table,
+                self.prior_len, window=window, impl=self.impl)
+            return out, (k_pool, v_pool)
         k_pool = paged_append(k_pool, k, self.slots)
         v_pool = paged_append(v_pool, v, self.slots)
         hd = q.shape[-1]
@@ -184,7 +199,8 @@ class PrefillBackend:
         if not self.chunked:
             out = causal_attention(q, k, v, window=window)
             return out, (k_pool, v_pool)
-        # chunked: merge in-chunk causal with attention over prior pages
+        # chunked reference: merge in-chunk causal with attention over
+        # prior pages
         B, Tq = q.shape[0], q.shape[1]
         qpos = jnp.arange(Tq)[None, :, None] + self.prior_len[:, None, None]
         inmask = (jnp.arange(Tq)[None, None, :] <=

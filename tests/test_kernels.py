@@ -115,6 +115,68 @@ def test_paged_mla_attention_decode_kernel_vs_ref(B, H, R, Rr, page, nblk,
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,KV,w,page,nblk,MB", [
+    (3, 8, 2, 64, 4, 32, 8),
+    (2, 16, 1, 48, 8, 24, 2),        # MLA-ish: KV=1, odd width
+])
+def test_paged_append_chunk(B, T, KV, w, page, nblk, MB, dtype):
+    """The fused multi-token chunk append (grid (B,T), aliased row
+    writes) must match the scatter oracle, including a parked (slot<0)
+    row and chunk positions straddling block boundaries."""
+    from repro.kernels.paged_attention.kernel import paged_append_chunk_kernel
+    from repro.kernels.paged_attention.ref import paged_append_chunk_ref
+    ks = jax.random.split(key, 4)
+    kp = jax.random.normal(ks[0], (nblk, page, KV, w), dtype)
+    kn = jax.random.normal(ks[1], (B, T, KV, w), dtype)
+    bt = _disjoint_tables(ks[2], B, MB, nblk)
+    prior = jax.random.randint(ks[3], (B,), 0, MB * page - T + 1)
+    pos = prior[:, None] + jnp.arange(T)[None]
+    slots = (bt[jnp.arange(B)[:, None], pos // page] * page
+             + pos % page).astype(jnp.int32)
+    slots = slots.at[0, -1].set(-1)  # parked row -> scratch, never read
+    (ko,) = paged_append_chunk_kernel((kp,), (kn,), slots, interpret=True)
+    (kr,) = paged_append_chunk_ref((kp,), (kn,), slots)
+    np.testing.assert_array_equal(np.asarray(ko), np.asarray(kr))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,KV,hd,page,nblk,MB,window,priors", [
+    (3, 8, 8, 2, 64, 4, 32, 8, None, (0, 5, 13)),   # GQA, straddling
+    (2, 16, 4, 1, 64, 8, 32, 3, None, (0, 7)),      # MQA, fresh + prior
+    (2, 8, 4, 4, 32, 4, 24, 6, 6, (3, 9)),          # MHA + window
+    (2, 8, 4, 1, 48, 8, 16, 2, None, (0, 2)),       # MLA-ish odd width
+    (1, 12, 2, 2, 32, 4, 16, 4, None, (1,)),        # ragged T -> padding
+])
+def test_paged_flash_prefill(B, T, H, KV, hd, page, nblk, MB, window,
+                             priors, dtype):
+    """Paged flash-prefill (fused chunk append + one causal sweep over
+    the scalar-prefetched block table) vs the gathered oracle: GQA/MQA/
+    MLA-width heads, windowed, chunks straddling block boundaries, and
+    nonzero prior context."""
+    from repro.kernels.flash_prefill.ops import paged_flash_prefill
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (B, T, H, hd), dtype)
+    kn = jax.random.normal(ks[1], (B, T, KV, hd), dtype)
+    vn = jax.random.normal(ks[2], (B, T, KV, hd), dtype)
+    kp = jax.random.normal(ks[3], (nblk, page, KV, hd), dtype)
+    vp = jax.random.normal(ks[4], (nblk, page, KV, hd), dtype)
+    bt = _disjoint_tables(ks[5], B, MB, nblk)
+    prior = jnp.asarray(priors, jnp.int32)
+    pos = prior[:, None] + jnp.arange(T)[None]
+    slots = (bt[jnp.arange(B)[:, None], pos // page] * page
+             + pos % page).astype(jnp.int32)
+    oi, ki, vi = paged_flash_prefill(q, kn, vn, kp, vp, slots, bt, prior,
+                                     window=window, blk_q=8,
+                                     impl="interpret")
+    orf, krf, vrf = paged_flash_prefill(q, kn, vn, kp, vp, slots, bt,
+                                        prior, window=window, impl="ref")
+    np.testing.assert_allclose(np.asarray(oi, np.float32),
+                               np.asarray(orf, np.float32), **tols(dtype))
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(krf))
+    np.testing.assert_array_equal(np.asarray(vi), np.asarray(vrf))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,T,H,KV,hd,window,blk", [
     (2, 128, 4, 4, 64, None, 64),
     (2, 100, 4, 2, 64, None, 32),    # ragged T -> padding path

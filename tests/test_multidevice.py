@@ -65,3 +65,11 @@ def test_context_proportional_attention_across_merges():
     switches, with mb-bucketed decode executables (§Perf D5)."""
     out = run_script("check_context_attention.py")
     assert "CONTEXT ATTENTION OK" in out
+
+
+def test_mixed_prefill_step_across_merges():
+    """Unified mixed-phase step (chunked prefill + decode in one launch)
+    vs sequential launches: token identity across live merge switches
+    and kernel dispatch impls (§Perf D6)."""
+    out = run_script("check_prefill_attention.py")
+    assert "PREFILL ATTENTION OK" in out
