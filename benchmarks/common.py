@@ -23,7 +23,8 @@ PAPER_MODELS = {
     "Nemotron-8B": "paper-nemotron-8b",
 }
 
-SYSTEMS = ("static-DP", "static-TP", "shift-parallelism", "flying")
+SYSTEMS = ("static-DP", "static-TP", "shift-parallelism", "flying",
+           "flying-island")
 
 
 def build_sched(arch: str, system: str, *, strategy: str = HARD,
@@ -52,9 +53,12 @@ def build_sched(arch: str, system: str, *, strategy: str = HARD,
         # and it cannot serve MoE (paper footnote 5)
         if cfg.moe is not None:
             return None
-        policy = FlyingPolicy()
+        policy = FlyingPolicy(islands=False)
         penalty = 0.8
-    else:
+    elif system == "flying":
+        # the paper's uniform modes: fleet-wide merges, full HARD pauses
+        policy = FlyingPolicy(islands=False)
+    else:  # flying-island: per-island DP/TP coexistence, partial rebinds
         policy = FlyingPolicy()
     be = SimBackend(cost, switch_mode=switch,
                     dp_throughput_penalty=penalty)

@@ -34,7 +34,7 @@ def main() -> None:
 
     if args.smoke:
         from benchmarks import (decode_attention, prefill_attention,
-                                steady_state)
+                                steady_state, table1_priority)
         data = {}
         pdata = {}
         print("benchmark,metric,value,derived")
@@ -50,6 +50,14 @@ def main() -> None:
         for row in prefill_attention.run(smoke=True, out=pdata):
             print(row)
         print(f"prefill_attention,elapsed_s,{time.time() - t0:.1f},")
+        # heterogeneous-layout guard (simulation backend): priority TPOT
+        # within 1.2x static-TP while the bound island leaves background
+        # decode within 25% of its pre-bind rate and >= 2x the
+        # uniform-flying row's full pause
+        t0 = time.time()
+        for row in table1_priority.run(n_requests=400, guard=True):
+            print(row)
+        print(f"table1_priority,elapsed_s,{time.time() - t0:.1f},")
         # perf trajectory artifacts: future PRs diff against these files
         import jax
         meta = {"devices": len(jax.devices()),

@@ -39,7 +39,6 @@ def main():
         SchedulerConfig(strategy="hard", max_batch_per_group=2,
                         prefill_chunk=8),
         policy=FlyingPolicy())
-    sched.adaptors = engine.adaptors
 
     print(f"fleet: {plan.dp_engines} DP engines x {plan.engine_rows}x"
           f"{plan.tp_base} chips; modes {plan.valid_merges()}")

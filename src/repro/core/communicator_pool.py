@@ -7,9 +7,17 @@ The pool therefore eagerly builds, for every topologically valid mode
 
   - the mode Mesh (the "communicator group": which devices collective
     with which, over which axes), and
-  - the compiled step executables, keyed by
-    ``(merge, phase, batch_bucket, seq_bucket)`` (paper step 2's
+  - the compiled step executables, keyed by island SHAPE —
+    ``(island_merge, phase, variants..., n_engines)`` (paper step 2's
     ``Map<Tuple[int], Group>`` hash map).
+
+Heterogeneous fleet layouts (``modes.FleetLayout``) run one step
+program per ISLAND. Runners are keyed by the island's shape, not its
+position: the step is traced over an AbstractMesh of the shape, so
+every same-shape island — wherever it sits in the fleet — shares one
+runner and the key space stays linear (``modes.island_shapes``), the
+concrete device slice resolving from the island-committed params and
+states at call time.
 
 At runtime a mode switch is an O(1) dict lookup (paper: "retrieved in
 O(1) time"); nothing is created on the critical path. ``stats`` records
@@ -39,7 +47,9 @@ import jax
 
 from repro.configs.base import ArchConfig
 from repro.core.kv_adaptor import PoolGeometry
-from repro.core.modes import FlyingMode, ParallelPlan, mode_mesh
+from repro.core.modes import (FlyingMode, Island, ParallelPlan,
+                              island_abstract_mesh, island_mesh,
+                              island_mode, mode_mesh)
 from repro.core.steps import build_serve_step
 
 _donation_quieted = False
@@ -95,16 +105,38 @@ class CommunicatorPool:
             m: FlyingMode(plan, m) for m in plan.valid_merges()}
         self.meshes: Dict[int, jax.sharding.Mesh] = {
             m: mode_mesh(fm) for m, fm in self.modes.items()}
+        self._island_meshes: Dict[Island, jax.sharding.Mesh] = {}
         self._runners: Dict[Tuple, Callable] = {}
         self._compiled: Dict[Tuple, Any] = {}
         self.stats = PoolStats()
 
     # ------------------------------------------------------------------
-    def runner(self, merge: int, phase: str, *, sampled: bool = False,
+    def _as_island(self, island) -> Island:
+        """Accept an Island or (seed-era API) a bare fleet-wide merge."""
+        if isinstance(island, Island):
+            return island
+        return Island(0, self.plan.pods * self.plan.dp_engines, island)
+
+    def island_mesh(self, island: Island) -> jax.sharding.Mesh:
+        """Concrete mesh over one island's device slice (cached)."""
+        m = self._island_meshes.get(island)
+        if m is None:
+            m = island_mesh(self.plan, island)
+            self._island_meshes[island] = m
+        return m
+
+    def runner(self, island, phase: str, *, sampled: bool = False,
                donate: bool = False, batch_bucket: Optional[int] = None,
                seq_bucket: Optional[int] = None,
                mb_bucket: Optional[int] = None) -> Callable:
-        """Jitted step fn for (mode, phase, variant).
+        """Jitted step fn for (island shape, phase, variant).
+
+        ``island`` is an ``Island`` (or a bare merge, meaning the
+        degenerate whole-fleet island). The runner key is the island's
+        SHAPE — ``(merge, phase, variants..., n_engines)`` — so two
+        same-shape islands anywhere in the fleet share one runner: the
+        step is traced over an AbstractMesh and the concrete devices
+        resolve from the committed inputs.
 
         ``batch_bucket``/``seq_bucket``/``mb_bucket`` are ``bucket_pow2``
         extents the caller pads its host batch to (§4.3 step 2 key
@@ -115,29 +147,37 @@ class CommunicatorPool:
         tracks live context, even when the engine is configured for a
         long-context ``max_blocks``.
         """
-        key = (merge, phase, sampled, donate, batch_bucket, seq_bucket,
-               mb_bucket)
+        island = self._as_island(island)
+        amesh = island_abstract_mesh(self.plan, island.shape)
+        key = (island.merge, phase, sampled, donate, batch_bucket,
+               seq_bucket, mb_bucket, island.n_engines)
+        if amesh is None:  # pragma: no cover - pre-AbstractMesh jax
+            key = key + (island.start,)
         if key not in self._runners:
             if donate:
                 _quiet_unused_donation()
             run, _, _ = build_serve_step(
-                self.model, self.modes[merge], self.geom, phase=phase,
-                window=self.window, use_kernel=self.use_kernel,
+                self.model, island_mode(self.plan, island), self.geom,
+                phase=phase, window=self.window, use_kernel=self.use_kernel,
                 chunked=(phase == "prefill" and self.chunked),
-                sample=self.sample if sampled else None)
+                sample=self.sample if sampled else None,
+                mesh=amesh if amesh is not None
+                else self.island_mesh(island))
             self._runners[key] = jax.jit(
                 run, donate_argnums=(1,) if donate else ())
         return self._runners[key]
 
     # -- step 2: pre-initialization --------------------------------------
-    def precompile(self, merge: int, phase: str, abstract_args, *,
+    def precompile(self, island, phase: str, abstract_args, *,
                    sampled: bool = False, donate: bool = False) -> Any:
-        """Eagerly lower+compile one executable (startup phase)."""
-        key = self._key(merge, phase, abstract_args, sampled, donate)
+        """Eagerly lower+compile one executable (startup phase).
+        ``island`` is an Island or a bare whole-fleet merge."""
+        island = self._as_island(island)
+        key = self._key(island, phase, abstract_args, sampled, donate)
         if key in self._compiled:
             return self._compiled[key]
         t0 = time.perf_counter()
-        runner = self.runner(merge, phase, sampled=sampled, donate=donate,
+        runner = self.runner(island, phase, sampled=sampled, donate=donate,
                              batch_bucket=key[4], seq_bucket=key[5],
                              mb_bucket=key[6])
         lowered = runner.lower(*abstract_args)
@@ -147,12 +187,13 @@ class CommunicatorPool:
         self._compiled[key] = compiled
         return compiled
 
-    def get(self, merge: int, phase: str, abstract_args,
+    def get(self, island, phase: str, abstract_args,
             allow_compile: bool = True, *, sampled: bool = False,
             donate: bool = False) -> Any:
         """O(1) retrieval on the serving critical path."""
         t0 = time.perf_counter()
-        key = self._key(merge, phase, abstract_args, sampled, donate)
+        island = self._as_island(island)
+        key = self._key(island, phase, abstract_args, sampled, donate)
         hit = self._compiled.get(key)
         self.stats.lookups += 1
         self.stats.lookup_s += time.perf_counter() - t0
@@ -161,18 +202,18 @@ class CommunicatorPool:
         self.stats.misses += 1
         if not allow_compile:
             raise KeyError(f"executable {key} not pre-initialized")
-        return self.precompile(merge, phase, abstract_args,
+        return self.precompile(island, phase, abstract_args,
                                sampled=sampled, donate=donate)
 
-    @staticmethod
-    def _key(merge: int, phase: str, abstract_args,
+    def _key(self, island: Island, phase: str, abstract_args,
              sampled: bool = False, donate: bool = False) -> Tuple:
         """(merge, phase, variant, batch_bucket, seq_bucket, mb_bucket,
-        shapes) — the §4.3 hash-map key. Callers pad their host batches
-        to pow2 buckets BEFORE calling (the engine does), so the padded
-        token extents AND the block-table width ARE the bucket ids —
-        deriving them from the abstract shapes keeps precompile/get keys
-        identical to the runner keys the engine uses at serve time."""
+        n_engines, shapes) — the §4.3 hash-map key, island-shape scoped.
+        Callers pad their host batches to pow2 buckets BEFORE calling
+        (the engine does), so the padded token extents AND the
+        block-table width ARE the bucket ids — deriving them from the
+        abstract shapes keeps precompile/get keys identical to the
+        runner keys the engine uses at serve time."""
         batch = abstract_args[2]
         get = batch.get if hasattr(batch, "get") else (lambda k: None)
         # mixed-phase batches prefix their parts: the chunk bucket is the
@@ -188,7 +229,14 @@ class CommunicatorPool:
         mb = bt.shape[1] if bt is not None and bt.ndim > 1 else None
         shapes = tuple(jax.tree.leaves(jax.tree.map(
             lambda a: (tuple(a.shape), str(a.dtype)), batch)))
-        return (merge, phase, sampled, donate, bb, sb, mb, shapes)
+        key = (island.merge, phase, sampled, donate, bb, sb, mb,
+               island.n_engines, shapes)
+        if island_abstract_mesh(self.plan, island.shape) is None:
+            # pre-AbstractMesh fallback: executables are pinned to a
+            # concrete device slice — the cache must not share them
+            # between same-shape islands at different positions
+            key = key + (island.start,)  # pragma: no cover
+        return key
 
     def memory_overhead_bytes(self) -> int:
         """Analogue of the paper's ~2MB/group measurement: serialized

@@ -1,40 +1,53 @@
-"""FlyingEngine: real-execution runtime.
+"""FlyingEngine: real-execution runtime over a heterogeneous fleet.
 
 Binds the four substrate pieces on actual devices: canonical-layout
 weights (Model Weights Manager), invariant flat KV pools (KV Cache
-Adaptor), per-mode meshes + eagerly compiled executables (Communicator
+Adaptor), per-island-shape meshes + compiled executables (Communicator
 Pool), and per-engine allocators. Implements the scheduler Backend
 protocol, so the same DynamicScheduler drives simulation and real
 execution.
 
-Mode switch = (a) O(1) executable lookup, (b) zero-copy sharding
-reinterpretation of params + pools (asserted: same buffer pointers),
-(c) O(1) adaptor metadata update. Recurrent states (SSM/hybrid) are the
-one piece the paper's KV trick cannot virtualize — they are re-gathered
-host-side on switch (documented in DESIGN.md §5).
+The fleet runs a ``FleetLayout``: an ordered partition of the engine
+tiles into contiguous pow2-aligned islands, each with its OWN merge
+(``modes.FleetLayout``; a uniform mode is the single-island degenerate
+case). Every island owns a zero-copy *view* of the canonical params and
+of its slice of the state pools, plus its own async token ring, decode
+cache, and sync counters — per-island launches dispatch back-to-back,
+so JAX async dispatch overlaps islands the way it overlaps steps.
+
+``rebind(layout)`` is the partial-transition primitive: (a) O(1)
+executable lookup per island shape, (b) zero-copy re-assembly of
+param/state views for RESHAPED islands only (asserted: same buffer
+pointers), (c) O(1) adaptor metadata update. Islands present in both
+layouts are untouched — their in-flight windows stay open, their decode
+caches stay warm, their ``sync_stats.drains`` does not move. Recurrent
+states (SSM/hybrid) are the one piece the paper's KV trick cannot
+virtualize — reshaped islands rebuild them (documented in DESIGN.md §5).
 
 Zero-sync hot path (docs/PERF.md): steady-state decode performs no host
 synchronization and no per-token device->host transfer. Sampling is
 fused into the compiled step (device-resident ``[B]`` token ids feed
 straight back into the next step), the state pytree is donated so KV
 pools update in place, host batch prep is vectorized numpy over
-persistent per-mode buffers, and steps run ahead of the host inside a
-bounded in-flight window. Tokens surface only at drain points (mode
-switches, ``generated_tokens``) as batched transfers. ``sync_stats``
-counts every class of host crossing so benchmarks and CI can assert the
-path stays clean.
+persistent per-island buffers, and steps run ahead of the host inside a
+bounded per-island in-flight window. Tokens surface only at drain
+points (island rebinds, ``generated_tokens``) as batched transfers.
+``sync_stats`` counts every class of host crossing fleet-wide;
+``island_sync_stats`` scopes the same counters per island so tests can
+assert a rebind drained ONLY the islands it reshaped.
 
 Prefill is truly chunked (§Perf D6): long prompts stream through
 ``prefill_chunk``-sized slices with absolute positions and per-request
 prior lengths, and when prefill chunks co-reside with a decode batch
-the scheduler drives ``mixed()`` — one compiled launch covering both
-phases, with promoted requests' first tokens routed on device.
+the scheduler drives ``mixed()`` — one compiled launch per island
+covering both phases, with promoted requests' first tokens routed on
+device.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -43,14 +56,13 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ArchConfig
 from repro.core.communicator_pool import CommunicatorPool, bucket_pow2
 from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry,
                                    ragged_arange)
-from repro.core.modes import FlyingMode, ParallelPlan, mode_mesh
+from repro.core.modes import FleetLayout, Island, ParallelPlan
 from repro.core.task_pool import Request
 from repro.core.views import make_serving_ctx
-from repro.core.weights_manager import WeightsManager, _ptrs
+from repro.core.weights_manager import WeightsManager, shard_view
 from repro.models.model import Model
 
 
@@ -66,7 +78,7 @@ class SyncStats:
     host_argmax: int = 0      # per-token device->host reads (legacy path)
     d2h_batched: int = 0      # batched [B] token harvests (drain points)
     window_waits: int = 0     # bounded in-flight window completion waits
-    drains: int = 0           # explicit drain events (switches, readout)
+    drains: int = 0           # explicit drain events (rebinds, readout)
 
 
 class _DecodeCache:
@@ -92,6 +104,29 @@ class _DecodeCache:
         self.mb = mb
 
 
+class _IslandRT:
+    """Per-island runtime: zero-copy device views plus all the state the
+    hot path keeps warm between steps. Untouched by rebinds of OTHER
+    islands — the partial-drain contract rides on this isolation."""
+    __slots__ = ("island", "mesh", "params", "states", "B", "stats",
+                 "pending", "last_tok", "last_src", "last_key", "steady")
+
+    def __init__(self, island: Island, mesh, params, states, B: int):
+        self.island = island
+        self.mesh = mesh
+        self.params = params    # island view of the canonical weights
+        self.states = states    # island slice of the state pools
+        self.B = B              # island batch rows = n_engines * bpe
+        self.stats = SyncStats()
+        # async token ring: device arrays not yet harvested to the host
+        self.pending: List[Tuple[jax.Array, Tuple[Tuple[int, str], ...]]] \
+            = []
+        self.last_tok: Dict[str, Tuple[jax.Array, int]] = {}
+        self.last_src: Optional[jax.Array] = None
+        self.last_key = None
+        self.steady: Optional[_DecodeCache] = None
+
+
 class FlyingEngine:
     def __init__(self, model: Model, plan: ParallelPlan, geom: PoolGeometry,
                  params, *, batch_per_engine: int = 4,
@@ -101,7 +136,8 @@ class FlyingEngine:
                  fused_sampling: bool = True, donate_states: bool = True,
                  async_window: int = 2, temperature: float = 0.0,
                  top_k: int = 0, harvest_limit: int = 512,
-                 mixed_step: bool = True):
+                 mixed_step: bool = True,
+                 layout: Optional[FleetLayout] = None):
         self.model = model
         self.cfg = model.cfg
         self.plan = plan
@@ -113,7 +149,6 @@ class FlyingEngine:
         # scheduler's slot allocations, seq buckets from the chunks
         self.prefill_len = prefill_len
         self.check_zero_copy = check_zero_copy
-        self.merge = 1
         self.fused = fused_sampling
         self.donate = donate_states
         self.window = max(int(async_window), 0)
@@ -128,50 +163,91 @@ class FlyingEngine:
                                      use_kernel=use_kernel,
                                      sample=(temperature, top_k))
         self.wm = WeightsManager(self.cfg, plan)
+        # canonical placement: the fleet-wide merge=1 mesh; every island
+        # holds a zero-copy VIEW of these buffers
         self.mesh = self.pool.meshes[1]
         self.params = jax.device_put(params,
                                      self.wm.shardings(params, self.mesh))
         self.adaptors = [KVCacheAdaptor(geom)
                          for _ in range(plan.dp_engines * plan.pods)]
-        self.states = self._fresh_states()
+        self.layout = layout or FleetLayout.uniform(plan, 1)
+        assert self.layout.plan == plan
+        self.islands: List[_IslandRT] = [
+            self._make_rt(isl) for isl in self.layout.islands]
+        self._rt_of: Dict[Island, _IslandRT] = {
+            rt.island: rt for rt in self.islands}
+        for e, a in enumerate(self.adaptors):
+            a.switch_mode(self.layout.merge_of(e))
         self.switch_log: List[float] = []
         self.sync_stats = SyncStats()
         self._token_buf: Dict[str, List[int]] = {}
         self._prompt_cache: Dict[str, np.ndarray] = {}
-        # async token ring: device arrays not yet harvested to the host
-        self._pending: List[Tuple[jax.Array, Tuple[Tuple[int, str], ...]]] \
-            = []
-        self._last_tok: Dict[str, Tuple[jax.Array, int]] = {}
-        self._last_src: Optional[jax.Array] = None
-        self._last_key = None
-        self._steady: Optional[_DecodeCache] = None
         self._bt_scratch: Optional[np.ndarray] = None
         self._host_bufs: Dict[Tuple, Dict[str, np.ndarray]] = {}
         self._seed_iota: Dict[int, jax.Array] = {}
-        self._step_counter = 0
+        self._seed_cursor = 0
 
     # ------------------------------------------------------------------
     @property
     def n_engines(self) -> int:
         return self.plan.dp_engines * self.plan.pods
 
+    @property
+    def merge(self) -> int:
+        """Fleet-wide merge of the degenerate uniform layout (seed-era
+        API); heterogeneous layouts report their widest island."""
+        return self.layout.uniform_merge or self.layout.max_merge
+
+    @property
+    def states(self):
+        """Per-island state trees, in island order (a uniform fleet has
+        exactly one)."""
+        return [rt.states for rt in self.islands]
+
+    @property
+    def _steady(self) -> Optional[_DecodeCache]:
+        """Seed-era accessor: the decode cache of a uniform fleet."""
+        return self.islands[0].steady if len(self.islands) == 1 else None
+
+    def island_sync_stats(self, island: Island) -> SyncStats:
+        """Per-island host-crossing counters: the partial-rebind contract
+        surface (an untouched island's ``drains`` must not move)."""
+        return self._rt_of[island].stats
+
     def _global_batch(self) -> int:
         return self.n_engines * self.bpe
 
-    def _state_sharding(self, a):
+    def _resolve(self, island: Union[Island, int]) -> _IslandRT:
+        """Island handle -> runtime. A bare int merge (seed-era API)
+        addresses the degenerate uniform layout."""
+        if isinstance(island, Island):
+            rt = self._rt_of.get(island)
+            assert rt is not None, \
+                f"{island} not in live layout {self.layout.describe()}"
+            return rt
+        assert self.layout.uniform_merge == island, \
+            f"merge={island} vs live layout {self.layout.describe()}"
+        return self.islands[0]
+
+    # ------------------------------------------------------------------
+    # island views: zero-copy params/state assembly
+    # ------------------------------------------------------------------
+    def _state_sharding(self, a, mesh):
         spec = P(None, ("pod", "dp", "merge"), ("ed", "model"),
                  *([None] * (a.ndim - 3)))
-        return NamedSharding(self.mesh, spec)
+        return NamedSharding(mesh, spec)
 
-    def _fresh_states(self):
-        """Engine state layout [n, G1, G2, *per-device dims]; pools flat."""
+    def _fresh_states(self, isl: Island, mesh):
+        """Island state layout [n, G1=isl.n_engines, G2, *per-device
+        dims]; pools flat. Identical per-device content to the uniform
+        fleet layout — islands only re-scope the group axis."""
         cfg = self.cfg
-        ctx = make_serving_ctx(self.merge, self.plan.engine_rows,
+        ctx = make_serving_ctx(isl.merge, self.plan.engine_rows,
                                self.plan.tp_base,
                                cfg.moe.num_experts if cfg.moe else 0)
-        G1 = self.plan.pods * self.plan.dp_engines
+        G1 = isl.n_engines
         G2 = self.plan.engine_rows * self.plan.tp_base
-        bpg = self.bpe * self.merge
+        bpg = self.bpe * isl.merge
         enc_f = cfg.frontend.num_embeds if (cfg.frontend and cfg.enc_dec) \
             else 0
         groups = []
@@ -180,7 +256,7 @@ class FlyingEngine:
             for kind in kind_seq:
                 st = self.model.layer_state(
                     kind, ctx=ctx, batch=bpg, num_blocks=self.geom.num_blocks,
-                    page=self.geom.capacity(self.merge), enc_frames=enc_f,
+                    page=self.geom.capacity(isl.merge), enc_frames=enc_f,
                     make=jax.ShapeDtypeStruct)
                 st = dict(st)
                 if kind[0] in ("gqa", "gqa_win", "mla"):
@@ -192,55 +268,114 @@ class FlyingEngine:
                     for s in v) for k, v in st.items()})
             groups.append(tuple(per))
         return jax.tree.map(
-            lambda a: jax.device_put(a, self._state_sharding(a)), groups)
+            lambda a: jax.device_put(a, self._state_sharding(a, mesh)),
+            groups)
+
+    def _assemble_states(self, isl: Island, mesh,
+                         sources: Sequence[_IslandRT]):
+        """Re-scope state pools to a reshaped island from the per-device
+        shards the outgoing islands already hold — pure metadata, no
+        bytes move (pointer-asserted under check_zero_copy). Only valid
+        for paged (batch-invariant flat-pool) states; recurrent archs
+        rebuild instead."""
+        flats = [jax.tree_util.tree_flatten(rt.states) for rt in sources]
+        treedef = flats[0][1]
+        n_leaves = len(flats[0][0])
+        devs = set(mesh.devices.flat)
+        out_leaves = []
+        for li in range(n_leaves):
+            by_dev = {}
+            for leaves, _ in flats:
+                for s in leaves[li].addressable_shards:
+                    if s.device in devs:
+                        by_dev[s.device] = s.data
+            src_shape = flats[0][0][li].shape
+            shape = (src_shape[0], isl.n_engines) + tuple(src_shape[2:])
+            sharding = self._state_sharding(flats[0][0][li], mesh)
+            out_leaves.append(shard_view(
+                by_dev, sharding, shape,
+                check_zero_copy=self.check_zero_copy))
+        return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+    def _make_rt(self, isl: Island,
+                 sources: Optional[Sequence[_IslandRT]] = None) -> _IslandRT:
+        mesh = self.pool.island_mesh(isl)
+        params = self.wm.island_view(self.params, mesh,
+                                     check_zero_copy=self.check_zero_copy)
+        if sources is None:
+            states = self._fresh_states(isl, mesh)
+        else:
+            states = self._assemble_states(isl, mesh, sources)
+        return _IslandRT(isl, mesh, params, states, isl.n_engines * self.bpe)
 
     # ------------------------------------------------------------------
-    # the bind/release primitive
+    # the bind/release primitive: partial rebind
     # ------------------------------------------------------------------
-    def switch(self, old: int, new: int) -> float:
-        if old == new:
+    def rebind(self, layout: Union[FleetLayout, int]) -> float:
+        """Transition to another fleet layout, draining ONLY the islands
+        it reshapes. Untouched islands (same start/size/merge) keep
+        their async in-flight windows, decode caches, and device token
+        rings; reshaped islands hit the §5.3 step-boundary safe point,
+        then their param/state views re-assemble zero-copy from the
+        buffers the outgoing islands held."""
+        if isinstance(layout, int):
+            layout = FleetLayout.uniform(self.plan, layout)
+        assert layout.plan == self.plan
+        if layout == self.layout:
             return 0.0
         t0 = time.perf_counter()
-        # step boundary = safe point (§5.3): surface in-flight tokens
-        # before rebinding, then invalidate the device token ring — the
-        # wait is part of the honest switch cost, so it's inside the timer
-        self.drain()
-        self.merge = new
-        self.mesh = self.pool.meshes[new]
-        self._steady = None
-        # (b) zero-copy reinterpretation: params + paged pools
-        self.params = self.wm.reinterpret(
-            self.params, self.mesh, check_zero_copy=self.check_zero_copy)
-        recurrent = self.cfg.family in ("ssm", "hybrid")
-        if not recurrent:
-            if self.check_zero_copy:
-                before = jax.tree.leaves(jax.tree.map(_ptrs, self.states))
-            self.states = jax.tree.map(
-                lambda a: jax.device_put(a, self._state_sharding(a)),
-                self.states)
-            if self.check_zero_copy:
-                after = jax.tree.leaves(jax.tree.map(_ptrs, self.states))
-                assert before == after, "state reinterpretation moved bytes!"
-        else:
-            # SSM/hybrid: recurrent states are per-request; rebuild (the
-            # documented exception to pure zero-copy)
-            self.states = self._fresh_states()
-        for a in self.adaptors:
-            a.switch_mode(new)
+        new_set = set(layout.islands)
+        changed = [rt for rt in self.islands if rt.island not in new_set]
+        for rt in changed:
+            self._drain_island(rt)
+        # recurrent states are per-request and batch-dense, and enc-dec
+        # cross caches carry merge-dependent per-device shapes: reshaped
+        # islands rebuild those (the documented exception to zero-copy;
+        # only batch-invariant flat paged pools re-assemble)
+        rebuild = self.cfg.family in ("ssm", "hybrid") \
+            or self.cfg.enc_dec is not None
+        keep = self._rt_of
+        self.islands = [
+            keep.get(isl) or self._make_rt(
+                isl, sources=None if rebuild else changed)
+            for isl in layout.islands]
+        self._rt_of = {rt.island: rt for rt in self.islands}
+        self.layout = layout
+        for e, a in enumerate(self.adaptors):
+            a.switch_mode(layout.merge_of(e))
+        # staging buffers are keyed per island: drop dead islands' so
+        # layout churn doesn't grow host memory without bound
+        live = set(layout.islands)
+        self._host_bufs = {k: v for k, v in self._host_bufs.items()
+                           if k[1] in live}
         dt = time.perf_counter() - t0
         self.switch_log.append(dt)
         return dt
 
+    def switch(self, old: int, new: int) -> float:
+        """Seed-era uniform transition: rebind to the uniform layout of
+        ``new`` (a whole-fleet reshape — everything drains)."""
+        if old == new:
+            return 0.0
+        assert self.layout.uniform_merge == old, \
+            f"switch({old},...) vs live layout {self.layout.describe()}"
+        return self.rebind(FleetLayout.uniform(self.plan, new))
+
     # ------------------------------------------------------------------
     # batched execution over the scheduler's request lists
     # ------------------------------------------------------------------
-    def _rows(self, reqs: Sequence[Request]) -> Dict[str, int]:
-        """Assign each request a padded-batch row within its group."""
-        bpg = self.bpe * self.merge
+    def _rows(self, reqs: Sequence[Request],
+              isl: Island) -> Dict[str, int]:
+        """Assign each request a padded-batch row within its island's
+        group (requests record ABSOLUTE lead engines, stable across
+        rebinds)."""
+        bpg = self.bpe * isl.merge
         counters: Dict[int, int] = {}
         rows: Dict[str, int] = {}
         for r in reqs:
-            g = r.engine_group // self.merge
+            assert isl.start <= r.engine_group < isl.stop, \
+                (r.req_id, r.engine_group, isl)
+            g = (r.engine_group - isl.start) // isl.merge
             i = counters.get(g, 0)
             assert i < bpg, "group batch overflow"
             rows[r.req_id] = g * bpg + i
@@ -249,10 +384,12 @@ class FlyingEngine:
 
     def _bufs(self, key: Tuple) -> Dict[str, np.ndarray]:
         """Persistent preallocated host staging buffers, keyed by
-        (phase, merge, batch, mb_bucket[, seq]) — the block-table stage
+        (phase, island, batch, mb_bucket[, seq]) — the block-table stage
         is built at the bucketed width, so short-context batches upload
-        (and compile against) a narrow table (§Perf D5). Reused across
-        steps; a decode cache rebuild re-initializes the rows it owns."""
+        (and compile against) a narrow table (§Perf D5). Keyed per
+        ISLAND (not shape): two same-shape islands stage concurrently
+        within one tick and must not alias rows. Reused across steps; a
+        decode cache rebuild re-initializes the rows it owns."""
         b = self._host_bufs.get(key)
         if b is not None:
             return b
@@ -312,22 +449,22 @@ class FlyingEngine:
                                      out=self._bt_scratch[:, :mb])
 
     # -- device token ring ---------------------------------------------
-    def _tokens_in(self, reqs: Sequence[Request], rows: np.ndarray,
-                   key, host: np.ndarray) -> jax.Array:
+    def _tokens_in(self, rt: _IslandRT, reqs: Sequence[Request],
+                   rows: np.ndarray, key, host: np.ndarray) -> jax.Array:
         """Previous-token batch input [B,1] without any device->host
         read: rows whose last token is still device-resident are gathered
         on device from the producing step's output array; rows already
         harvested (post-drain) come from the host token buffer."""
         B = host.shape[0]
-        if key is not None and key == self._last_key \
-                and self._last_src is not None:
+        if key is not None and key == rt.last_key \
+                and rt.last_src is not None:
             # unchanged membership: the previous step's [B] output IS
             # this step's input — feed it straight back
-            return self._last_src.reshape(B, 1)
+            return rt.last_src.reshape(B, 1)
         host.fill(0)
         per_src: Dict[int, Tuple[jax.Array, List[int], List[int]]] = {}
         for r, row in zip(reqs, rows):
-            ent = self._last_tok.get(r.req_id)
+            ent = rt.last_tok.get(r.req_id)
             if ent is None:
                 buf = self._token_buf.get(r.req_id)
                 if buf:
@@ -343,47 +480,59 @@ class FlyingEngine:
                 src[jnp.asarray(np.asarray(srows))])
         return tok
 
-    def _note_tokens(self, key, toks_dev: jax.Array,
+    def _note_tokens(self, rt: _IslandRT, key, toks_dev: jax.Array,
                      row_reqs: Tuple[Tuple[int, str], ...]) -> None:
-        self._pending.append((toks_dev, row_reqs))
+        rt.pending.append((toks_dev, row_reqs))
         for row, rid in row_reqs:
-            self._last_tok[rid] = (toks_dev, row)
-        self._last_src = toks_dev
-        self._last_key = key
+            rt.last_tok[rid] = (toks_dev, row)
+        rt.last_src = toks_dev
+        rt.last_key = key
         if self.window == 0:
             # depth-0 window = fully synchronous dispatch (tokens still
             # stay on device; only completion is awaited)
             toks_dev.block_until_ready()
             self.sync_stats.window_waits += 1
-        elif len(self._pending) > self.window:
+            rt.stats.window_waits += 1
+        elif len(rt.pending) > self.window:
             # bounded in-flight window: wait for the step that left the
             # window to COMPLETE (no transfer — tokens stay on device)
-            self._pending[-self.window - 1][0].block_until_ready()
+            rt.pending[-self.window - 1][0].block_until_ready()
             self.sync_stats.window_waits += 1
-        if len(self._pending) >= self.harvest_limit:
-            self._harvest()
+            rt.stats.window_waits += 1
+        if len(rt.pending) >= self.harvest_limit:
+            self._harvest(rt)
 
-    def _harvest(self) -> None:
-        """Move pending device token arrays into the host token buffer
-        (one batched [B] transfer per step harvested, never per-token)."""
-        for toks_dev, row_reqs in self._pending:
+    def _harvest(self, rt: _IslandRT) -> None:
+        """Move one island's pending device token arrays into the host
+        token buffer (one batched [B] transfer per step harvested, never
+        per-token)."""
+        for toks_dev, row_reqs in rt.pending:
             arr = np.asarray(toks_dev)
             self.sync_stats.d2h_batched += 1
+            rt.stats.d2h_batched += 1
             for row, rid in row_reqs:
                 self._token_buf.setdefault(rid, []).append(int(arr[row]))
-        self._pending.clear()
-        self._last_tok.clear()
+        rt.pending.clear()
+        rt.last_tok.clear()
+
+    def _drain_island(self, rt: _IslandRT) -> None:
+        """Safe-point synchronization scoped to ONE island: surface its
+        in-flight tokens and drop its device-resident feeding state.
+        Called when a rebind reshapes the island and before host
+        readout; never on the steady-state path — and never for islands
+        a rebind leaves alone."""
+        if rt.pending:
+            self._harvest(rt)
+            self.sync_stats.drains += 1
+            rt.stats.drains += 1
+        rt.last_tok.clear()
+        rt.last_src = None
+        rt.last_key = None
 
     def drain(self) -> None:
-        """Safe-point synchronization: surface all in-flight tokens and
-        drop device-resident feeding state. Called at mode switches and
-        before host readout; never on the steady-state path."""
-        if self._pending:
-            self._harvest()
-            self.sync_stats.drains += 1
-        self._last_tok.clear()
-        self._last_src = None
-        self._last_key = None
+        """Fleet-wide safe point (scheduler end-of-run, host readout)."""
+        for rt in self.islands:
+            self._drain_island(rt)
 
     # -- sampling seeds -------------------------------------------------
     def _seeds(self, B: int) -> Optional[jax.Array]:
@@ -397,11 +546,18 @@ class FlyingEngine:
         if iota is None:
             iota = jnp.arange(B, dtype=jnp.uint32)
             self._seed_iota[B] = iota
-        base = (self._step_counter * B) & 0xFFFFFFFF
+        # a fleet-wide cursor advanced by each draw's OWN batch size:
+        # launches with different per-island batches still get disjoint
+        # seed ranges (a step-counter * B base collides across islands);
+        # for a uniform fleet the sequence is identical to the seed-era
+        # counter * global-B bases
+        base = self._seed_cursor
+        self._seed_cursor = (base + B) & 0xFFFFFFFF
         return iota + jnp.uint32(base)
 
     # ------------------------------------------------------------------
-    def _stage_prefill(self, reqs: Sequence[Request], mb_min: int = 1):
+    def _stage_prefill(self, rt: _IslandRT, reqs: Sequence[Request],
+                       mb_min: int = 1):
         """Host staging for one chunked-prefill launch (§Perf D6). Each
         request's chunk covers prompt positions
         ``[r.prefilled, min(entry.length, prompt_len))``: the scheduler
@@ -411,10 +567,11 @@ class FlyingEngine:
         through in ``prefill_chunk``-sized slices with true absolute
         positions, never truncated. Returns (batch, rows, final_mask,
         T, mb)."""
-        B = self._global_batch()
+        isl = rt.island
+        B = rt.B
         n = len(reqs)
         prompts = [self._prompt_tokens(r) for r in reqs]
-        rows_map = self._rows(reqs)
+        rows_map = self._rows(reqs, isl)
         rows = np.fromiter((rows_map[r.req_id] for r in reqs), np.int64, n)
         entries = [self.adaptors[r.engine_group].table[r.req_id]
                    for r in reqs]
@@ -437,12 +594,12 @@ class FlyingEngine:
             f"request needs {nblocks} blocks > max_blocks_per_req=" \
             f"{self.max_blocks}"
         mb = max(self._mb_bucket(nblocks), mb_min)
-        bufs = self._bufs(("prefill", self.merge, B, mb, T))
+        bufs = self._bufs(("prefill", isl, B, mb, T))
         toks, slots, btab = bufs["toks"], bufs["slots"], bufs["btab"]
         toks.fill(0)
         slots.fill(-1)
         btab.fill(0)
-        cap = self.geom.capacity(self.merge)
+        cap = self.geom.capacity(isl.merge)
         self._fill_block_tables(btab, rows, reqs)
         if int(chunk.sum()):
             rowcat = np.repeat(rows, chunk)
@@ -474,22 +631,22 @@ class FlyingEngine:
         }
         return batch, rows, final, T, mb
 
-    def prefill(self, reqs: Sequence[Request], merge: int,
+    def prefill(self, reqs: Sequence[Request], island: Union[Island, int],
                 chunk_tokens: int) -> float:
-        assert merge == self.merge
+        rt = self._resolve(island)
         t0 = time.perf_counter()
-        B = self._global_batch()
-        batch, rows, final, T, mb = self._stage_prefill(reqs)
+        B = rt.B
+        batch, rows, final, T, mb = self._stage_prefill(rt, reqs)
         seeds = self._seeds(B)
         if seeds is not None:
             batch["sample_seeds"] = seeds
         runner = self.pool.runner(
-            self.merge, "prefill", sampled=self.fused, donate=self.donate,
+            rt.island, "prefill", sampled=self.fused, donate=self.donate,
             batch_bucket=B, seq_bucket=T, mb_bucket=mb)
-        self._step_counter += 1
         self.sync_stats.steps += 1
+        rt.stats.steps += 1
         if self.fused:
-            toks_dev, self.states = runner(self.params, self.states, batch)
+            toks_dev, rt.states = runner(rt.params, rt.states, batch)
             # only FINAL chunks emit a token; mid-prompt chunks leave the
             # device token ring (and its decode feed-back key) untouched
             row_reqs = tuple((int(row), r.req_id)
@@ -497,15 +654,16 @@ class FlyingEngine:
             if row_reqs:
                 # prefill membership never matches a decode key: the next
                 # decode gathers these first tokens on device by row map
-                self._note_tokens(None, toks_dev, row_reqs)
+                self._note_tokens(rt, None, toks_dev, row_reqs)
         else:
-            logits, self.states = jax.block_until_ready(
-                runner(self.params, self.states, batch))
+            logits, rt.states = jax.block_until_ready(
+                runner(rt.params, rt.states, batch))
             for r, row, f in zip(reqs, rows, final):
                 if not f:
                     continue
                 tok = int(jnp.argmax(logits[row]))
                 self.sync_stats.host_argmax += 1
+                rt.stats.host_argmax += 1
                 self._token_buf.setdefault(r.req_id, []).append(tok)
         return time.perf_counter() - t0
 
@@ -531,20 +689,22 @@ class FlyingEngine:
                 and self.geom.layout != "striped")
 
     def mixed(self, prefills: Sequence[Request], decodes: Sequence[Request],
-              merge: int, chunk_tokens: int) -> float:
-        """One compiled launch for a Sarathi-style mixed step (§Perf D6):
-        prefill chunk rows and the decode batch share a single executable
-        keyed ``(merge, 'mixed', batch_bucket, chunk_bucket, mb_bucket)``.
-        ``decodes`` may include requests whose FINAL chunk is in
-        ``prefills`` this step (the scheduler promotes before launching);
-        their first-token input routes on device from the prefill output
-        rows via ``d_src_rows`` — token-identical to the sequential
-        prefill->decode pair, in one step launch."""
-        assert merge == self.merge
+              island: Union[Island, int], chunk_tokens: int) -> float:
+        """One compiled launch for a Sarathi-style mixed step (§Perf D6)
+        on ONE island: prefill chunk rows and the decode batch share a
+        single executable keyed
+        ``(island_merge, 'mixed', batch_bucket, chunk_bucket, mb_bucket,
+        n_engines)``. ``decodes`` may include requests whose FINAL chunk
+        is in ``prefills`` this step (the scheduler promotes before
+        launching); their first-token input routes on device from the
+        prefill output rows via ``d_src_rows`` — token-identical to the
+        sequential prefill->decode pair, in one step launch."""
+        rt = self._resolve(island)
+        isl = rt.island
         assert self.fused, "mixed step requires fused sampling"
         t0 = time.perf_counter()
-        B = self._global_batch()
-        cap = self.geom.capacity(self.merge)
+        B = rt.B
+        cap = self.geom.capacity(isl.merge)
         # shared mb bucket: the widest need of either phase, so both
         # block tables stage (and compile) at one width per runner key
         pre_blocks = max(len(self.adaptors[r.engine_group]
@@ -553,15 +713,15 @@ class FlyingEngine:
                       for r in decodes)
         mb = max(self._mb_bucket(pre_blocks),
                  self._mb_bucket(-(-int(dec_len) // cap)))
-        pbatch, prows, final, T, mb = self._stage_prefill(prefills,
+        pbatch, prows, final, T, mb = self._stage_prefill(rt, prefills,
                                                           mb_min=mb)
-        c = self._decode_cache(decodes, mb_min=mb)
+        c = self._decode_cache(rt, decodes, mb_min=mb)
         bufs, drows = c.bufs, c.rows
-        tokens = self._stage_decode(decodes, c)
+        tokens = self._stage_decode(rt, decodes, c)
         # on-device routing for rows promoted out of THIS step's prefill:
         # group-local prefill row index (both rows live on the same
         # engine-group shard)
-        bpg = self.bpe * self.merge
+        bpg = self.bpe * isl.merge
         src = np.full((B,), -1, np.int32)
         p_row_of = {r.req_id: int(row)
                     for r, row, f in zip(prefills, prows, final) if f}
@@ -581,30 +741,28 @@ class FlyingEngine:
         # two seed draws mirror the sequential two-launch assignment, so
         # stochastic sampling stays token-identical across the fusion
         p_seeds = self._seeds(B)
-        self._step_counter += 1
         d_seeds = self._seeds(B)
-        self._step_counter += 1
         if p_seeds is not None:
             batch["p_sample_seeds"] = p_seeds
             batch["d_sample_seeds"] = d_seeds
         runner = self.pool.runner(
-            self.merge, "mixed", sampled=True, donate=self.donate,
+            rt.island, "mixed", sampled=True, donate=self.donate,
             batch_bucket=B, seq_bucket=T, mb_bucket=mb)
-        self.sync_stats.steps += 1  # ONE launch for the whole tick
-        (p_toks, d_toks), self.states = runner(self.params, self.states,
-                                               batch)
+        self.sync_stats.steps += 1  # ONE launch for the island's tick
+        rt.stats.steps += 1
+        (p_toks, d_toks), rt.states = runner(rt.params, rt.states, batch)
         prow_reqs = tuple((int(row), r.req_id)
                           for row, r, f in zip(prows, prefills, final) if f)
         if prow_reqs:
-            self._note_tokens(None, p_toks, prow_reqs)
-        self._note_tokens(c.key, d_toks, c.row_reqs)
+            self._note_tokens(rt, None, p_toks, prow_reqs)
+        self._note_tokens(rt, c.key, d_toks, c.row_reqs)
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
-    def _decode_cache(self, reqs: Sequence[Request],
+    def _decode_cache(self, rt: _IslandRT, reqs: Sequence[Request],
                       mb_min: int = 1) -> _DecodeCache:
-        key = (self.merge, tuple(r.req_id for r in reqs))
-        c = self._steady
+        key = (rt.island, tuple(r.req_id for r in reqs))
+        c = rt.steady
         if c is not None and c.key == key:
             self._decode_advance(c)
             # crossing an mb bucket boundary (pow2 of the max live
@@ -615,22 +773,23 @@ class FlyingEngine:
                        mb_min)
             if need == c.mb:
                 return c
-        return self._decode_build(key, reqs, mb_min)
+        return self._decode_build(rt, key, reqs, mb_min)
 
-    def _decode_build(self, key, reqs: Sequence[Request],
+    def _decode_build(self, rt: _IslandRT, key, reqs: Sequence[Request],
                       mb_min: int = 1) -> _DecodeCache:
-        B = self._global_batch()
+        isl = rt.island
+        B = rt.B
         n = len(reqs)
-        rows_map = self._rows(reqs)
+        rows_map = self._rows(reqs, isl)
         rows = np.fromiter((rows_map[r.req_id] for r in reqs), np.int64, n)
         entries = [self.adaptors[r.engine_group].table[r.req_id]
                    for r in reqs]
-        cap = self.geom.capacity(self.merge)
+        cap = self.geom.capacity(isl.merge)
         nblk = np.fromiter((len(e.block_ids) for e in entries), np.int64, n)
         lengths = np.fromiter((e.length for e in entries), np.int64, n)
         mb = max(self._mb_bucket(-(-int(lengths.max()) // cap) if n else 1),
                  mb_min)
-        bufs = self._bufs(("decode", self.merge, B, mb))
+        bufs = self._bufs(("decode", isl, B, mb))
         # reset: rows not owned by this membership must stay inert
         bufs["slots"].fill(-1)
         bufs["btab"].fill(0)
@@ -640,7 +799,7 @@ class FlyingEngine:
         row_reqs = tuple((int(row), r.req_id) for row, r in zip(rows, reqs))
         c = _DecodeCache(key, rows, row_reqs, entries, lengths, nblk,
                          cap, bufs, mb)
-        self._steady = c
+        rt.steady = c
         return c
 
     def _decode_advance(self, c: _DecodeCache) -> None:
@@ -660,28 +819,29 @@ class FlyingEngine:
                 btab[row, : min(len(ids), c.mb)] = ids[: c.mb]
                 c.nblk[i] = len(e.block_ids)
 
-    def _stage_decode(self, reqs: Sequence[Request],
+    def _stage_decode(self, rt: _IslandRT, reqs: Sequence[Request],
                       c: _DecodeCache) -> jax.Array:
-        """Per-step decode staging over the cache's persistent buffers:
-        vectorized position/slot/context math plus the device-resident
-        previous-token gather. Shared by ``decode`` and ``mixed`` — the
-        mixed-vs-sequential token-identity contract rides on the two
-        paths staging identically."""
+        """Per-step decode staging over the island cache's persistent
+        buffers: vectorized position/slot/context math plus the
+        device-resident previous-token gather. Shared by ``decode`` and
+        ``mixed`` — the mixed-vs-sequential token-identity contract
+        rides on the two paths staging identically."""
         bufs, rows, cap = c.bufs, c.rows, c.cap
         p = c.lengths - 1
         bufs["pos"][rows, 0] = p
         bufs["slots"][rows] = \
             bufs["btab"][rows, p // cap].astype(np.int64) * cap + p % cap
         bufs["ctxl"][rows] = c.lengths
-        return self._tokens_in(reqs, rows, c.key, bufs["toks"])
+        return self._tokens_in(rt, reqs, rows, c.key, bufs["toks"])
 
-    def decode(self, reqs: Sequence[Request], merge: int) -> float:
-        assert merge == self.merge
+    def decode(self, reqs: Sequence[Request],
+               island: Union[Island, int]) -> float:
+        rt = self._resolve(island)
         t0 = time.perf_counter()
-        B = self._global_batch()
-        c = self._decode_cache(reqs)
+        B = rt.B
+        c = self._decode_cache(rt, reqs)
         bufs = c.bufs
-        tokens = self._stage_decode(reqs, c)
+        tokens = self._stage_decode(rt, reqs, c)
         batch = {
             "tokens": tokens,
             "positions": self._h2d(bufs["pos"]),
@@ -693,19 +853,20 @@ class FlyingEngine:
         if seeds is not None:
             batch["sample_seeds"] = seeds
         runner = self.pool.runner(
-            self.merge, "decode", sampled=self.fused, donate=self.donate,
+            rt.island, "decode", sampled=self.fused, donate=self.donate,
             batch_bucket=B, seq_bucket=1, mb_bucket=c.mb)
-        self._step_counter += 1
         self.sync_stats.steps += 1
+        rt.stats.steps += 1
         if self.fused:
-            toks_dev, self.states = runner(self.params, self.states, batch)
-            self._note_tokens(c.key, toks_dev, c.row_reqs)
+            toks_dev, rt.states = runner(rt.params, rt.states, batch)
+            self._note_tokens(rt, c.key, toks_dev, c.row_reqs)
         else:
-            logits, self.states = jax.block_until_ready(
-                runner(self.params, self.states, batch))
+            logits, rt.states = jax.block_until_ready(
+                runner(rt.params, rt.states, batch))
             for r, row in zip(reqs, c.rows):
                 tok = int(jnp.argmax(logits[row]))
                 self.sync_stats.host_argmax += 1
+                rt.stats.host_argmax += 1
                 self._token_buf.setdefault(r.req_id, []).append(tok)
         return time.perf_counter() - t0
 

@@ -1,71 +1,164 @@
-"""Workload-aware mode policy (paper §2.3 / §3: the three use cases).
+"""Workload-aware layout policy (paper §2.3 / §3: the three use cases).
 
-decide() returns the target merge for the next step:
-  UC2 (priority): any high-priority request present -> bind a TP group
-      wide enough for its latency SLO (paired with HARD preempt).
-  UC3 (long context): a queued request whose context exceeds the current
-      mode's per-request KV capacity -> merge until it fits (pooled KV).
-  UC1 (load): queue builds -> dissolve to DP (merge=1) to drain; idle ->
-      merge up for latency. Hysteresis avoids flapping.
+decide() returns the target FleetLayout for the next step:
+  UC2 (priority): any high-priority request present -> carve a MINIMAL
+      TP island wide enough for its latency SLO (paired with HARD
+      preempt scoped to that island) — the paper's Fig. 3 picture: the
+      rest of the fleet keeps serving DP traffic through the bind.
+  UC3 (long context): a queued request whose context exceeds every live
+      island's per-request KV capacity -> merge ONE island until it fits
+      (pooled KV); probes the least-loaded group, not group 0.
+  UC1 (load): queue builds -> dissolve islands to DP in place to drain;
+      idle -> merge the fleet wide for latency. Hysteresis avoids
+      flapping.
+
+``islands=False`` reproduces the seed-era uniform behavior (fleet-wide
+merges with full HARD pauses) — kept as the ``flying`` baseline row in
+benchmarks so table1 can quantify what partial rebinds buy.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro.core.modes import FleetLayout
 from repro.core.task_pool import PRIORITY_HIGH
 
 
 @dataclass
 class FlyingPolicy:
-    priority_merge: int = 0        # 0 -> widest
+    # 0 -> minimal TP binding: min(2, widest) engines per island (the
+    # smallest nontrivial merge already clears the priority SLO on the
+    # roofline, and a small island minimizes the background share the
+    # first bind reshapes); uniform mode keeps the seed-era min(4,
+    # widest) fleet-wide heuristic ("just enough for near-TP latency
+    # while keeping several DP groups").
+    priority_merge: int = 0
     dwell_s: float = 2.0           # min seconds between load-driven switches
+    islands: bool = True           # False: uniform fleet-wide modes only
 
     def __post_init__(self):
         self._last_switch_t = -1e9
-        self._last = 1
+        self._priority_bound = False
 
-    def decide(self, sched) -> int:
+    # ------------------------------------------------------------------
+    def _least_loaded_lead(self, sched):
+        """Least-loaded group lead (by running requests, then free
+        blocks): the right adaptor to probe for UC3 — a long-context
+        request only forces a merge when even the emptiest group cannot
+        hold it (the seed-era probe of group 0 merged the fleet while
+        another group had room)."""
+        load = {lead: 0 for isl in sched.layout.islands
+                for lead in isl.lead_engines()}
+        for r in sched.running:
+            if r.engine_group in load:
+                load[r.engine_group] += 1
+        return min(load, key=lambda g: (load[g],
+                                        -sched._adaptor(g).free_blocks()))
+
+    def _bind_island(self, sched, m: int) -> FleetLayout:
+        """Carve an m-engine TP island at the least-disruptive aligned
+        position: reuse an existing >=m binding when one is live (sticky
+        — re-carving every tick would flap), otherwise pick the aligned
+        region currently serving the fewest requests so the bind pauses
+        as little background as possible (carving engine 0 regardless
+        would reshape whatever happens to live there)."""
+        layout = sched.layout
+        bg_live = any(r.priority == 0 for r in sched.running) or \
+            any(r.priority == 0 for r in sched.waiting)
+        for isl in layout.islands:
+            if isl.merge < m:
+                continue
+            # reuse a live >=m binding (sticky — re-carving every tick
+            # would flap) UNLESS it spans the whole fleet while
+            # background traffic needs DP islands: an idle-time
+            # fleet-wide pre-bind must carve down, not absorb the fleet
+            if isl.n_engines < layout.total_engines or not bg_live:
+                return layout
+        occ = [0] * layout.total_engines
+        for r in sched.running + sched.waiting:
+            if r.engine_group >= 0:
+                isl = layout.island_of(r.engine_group)
+                for e in range(r.engine_group,
+                               min(r.engine_group + isl.merge, len(occ))):
+                    occ[e] += 1
+        start = min(range(0, layout.total_engines, m),
+                    key=lambda s: (sum(occ[s:s + m]), s))
+        return layout.carve(start, m, m)
+
+    def decide(self, sched) -> FleetLayout:
         plan = sched.plan
+        layout = sched.layout
         widest = plan.valid_merges()[-1]
-        cur = sched.merge
         arrived = sched.waiting + sched.pool.peek_arrived(sched.now)
         running = sched.running
 
-        # UC2: priority traffic -> TP for latency (immediate, no dwell).
-        # Bounded merge: the paper binds a SUBSET of engines per priority
-        # request (Fig. 3); with uniform modes we approximate by merging
-        # just enough for near-TP latency while keeping several DP groups
-        # for background traffic (DESIGN.md §2.5 simplification).
+        # UC2: priority traffic -> a TP binding for latency (immediate,
+        # no dwell). The paper binds a SUBSET of engines per priority
+        # request (Fig. 3): carve a minimal island of `m` engines into a
+        # TP group and leave the rest of the layout — and its in-flight
+        # requests — untouched. (islands=False approximates with a
+        # fleet-wide merge and a full HARD pause.)
         if any(r.priority == PRIORITY_HIGH and not r.done
                for r in arrived + running):
-            return self.priority_merge or min(4, widest)
+            self._priority_bound = True
+            if not self.islands:
+                return FleetLayout.uniform(
+                    plan, self.priority_merge or min(4, widest))
+            m = self.priority_merge or min(2, widest)
+            return self._bind_island(sched, m)
+        if self._priority_bound:
+            # Flag_ResetTP: the priority queue drained. Uniform modes
+            # must RELEASE the merge to restore DP throughput — paying
+            # the full fleet pause again on the next priority arrival.
+            # A bound island is free to hold: its DP neighbors never
+            # paused, and the next priority request binds with zero
+            # transition — so it stays warm until UC1 pressure below
+            # dissolves it.
+            self._priority_bound = False
+            if not self.islands:
+                self._last_switch_t = sched.now
+                return FleetLayout.uniform(plan, 1)
 
-        # UC3: long-context request that cannot fit at current mode
+        # UC3: long-context request that cannot fit at any live island
+        lead = self._least_loaded_lead(sched)
         for r in arrived:
             need = r.prompt_len + r.output_len
-            if not sched._adaptor(0).can_allocate(need):
-                m = cur
+            if not sched._adaptor(lead).can_allocate(need):
+                geom = sched.geom
+                m = 1
                 while m < widest and \
-                        sched.geom.capacity(m) * (sched.geom.num_blocks - 1) \
-                        < need:
+                        geom.capacity(m) * (geom.num_blocks - 1) < need:
                     m *= 2
-                if m > cur:
-                    return m
-                return max(min(cur * 2, widest), cur)
+                best = layout.max_merge
+                if best >= m:
+                    # a wide-enough island exists; if EVERY one of its
+                    # groups' pools is full, grow the binding (pool
+                    # pressure), else wait for the group with room
+                    if any(sched._adaptor(g).can_allocate(need)
+                           for isl in layout.islands if isl.merge >= m
+                           for g in isl.lead_engines()):
+                        return layout
+                    m = min(best * 2, widest)
+                if not self.islands:
+                    return FleetLayout.uniform(plan, m)
+                return self._bind_island(sched, m)
 
         # UC1: load adaptation with a time dwell (avoid flapping: each
-        # switch pauses/recomputes in-flight state)
+        # switch pauses/reshapes in-flight state on the islands it
+        # touches)
         if sched.now - self._last_switch_t < self.dwell_s:
-            return cur
+            return layout
         depth = len([r for r in arrived if r.state == "queued"])
-        target = cur
-        if depth >= max(2 * (plan.dp_engines // cur), 4):
-            target = 1
+        target = layout
+        if depth >= max(2 * layout.n_groups, 4):
+            # drain mode: dissolve TP islands to DP IN PLACE (already-DP
+            # islands keep their boundaries — and their windows)
+            target = layout.dissolved()
         elif depth == 0 and not running and not sched.paused:
             # fully idle: pre-bind a wide TP group so the next arrival
-            # gets TP latency (merging around live DP requests would
-            # pause them under uniform modes)
-            target = widest
-        if target != cur:
+            # gets TP latency (nothing is live, so the fleet-wide
+            # reshape pauses no one)
+            target = FleetLayout.uniform(plan, widest)
+        if target != layout:
             self._last_switch_t = sched.now
         return target

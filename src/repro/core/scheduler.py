@@ -1,15 +1,27 @@
-"""Dynamic Scheduler (paper §5, Algorithm 1).
+"""Dynamic Scheduler (paper §5, Algorithm 1) over heterogeneous fleets.
 
 One scheduling iteration = one step-aligned collective step across all
-engine groups (vLLM-v1-style DP coordination — the paper's control plane
+islands (vLLM-v1-style DP coordination — the paper's control plane
 heartbeat becomes the step boundary in JAX's single-controller model).
 The scheduler is execution-agnostic: a ``Backend`` either simulates step
 durations from the roofline cost model (benchmarks) or runs the real
 compiled executables (examples/tests).
 
-Mode switching strategies (paper §5.2, Fig. 7):
-  - SEQUENTIAL: drain every running request before switching (stragglers
-    idle the fleet).
+The fleet runs a ``FleetLayout`` (modes.py): an ordered partition of the
+engine tiles into islands, each with its own merge — the paper's Fig. 3
+picture, where a TP island serves a priority request while the rest of
+the fleet keeps serving DP traffic. A uniform mode is the single-island
+degenerate case. Worklists, admission, and execution are per island:
+every island with work gets its own (mixed/prefill/decode) launch each
+tick, dispatched back-to-back so an async backend overlaps them; the
+tick advances by the slowest island (step-aligned).
+
+Mode switching strategies (paper §5.2, Fig. 7) are PARTIAL: a
+transition's scope is ``layout.changed_engines`` — only requests whose
+group assignment (lead engine, merge) the new layout reshapes are
+incompatible; everything else keeps serving through the rebind.
+  - SEQUENTIAL: drain the reshaped engines' requests before switching
+    (stragglers idle only their island).
   - SOFT preempt: while draining, idle engines speculatively run the
     TP-designated request in DP mode; on switch its KV is dropped and
     re-prefilled under the TP layout (compute-bound, parallel), keeping
@@ -17,21 +29,21 @@ Mode switching strategies (paper §5.2, Fig. 7):
   - HARD preempt: switch at the next step boundary; incompatible running
     requests PAUSE — their blocks stay physically resident with their
     mode tag (KV Cache Adaptor §4.2) and resume without recomputation.
+    Requests outside the reshaped islands never pause.
 
-Invariants (paper §5.3): all engines in a TP step observe the same
-request order (single worklist), and transitions happen only at step
-boundaries (safe points) — deadlock-free by construction here, since
-collectives exist only inside per-mode compiled programs.
+Invariants (paper §5.3): all engines in a TP group observe the same
+request order (single worklist per island), and transitions happen only
+at step boundaries (safe points) — deadlock-free by construction here,
+since collectives exist only inside per-island compiled programs.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple, Union
 
 from repro.core.kv_adaptor import KVCacheAdaptor, PoolGeometry
-from repro.core.modes import ParallelPlan
-from repro.core.task_pool import (PRIORITY_HIGH, Request, TaskPool)
+from repro.core.modes import FleetLayout, Island, ParallelPlan
+from repro.core.task_pool import Request, TaskPool
 
 SEQUENTIAL = "sequential"
 SOFT = "soft"
@@ -46,31 +58,39 @@ class Backend(Protocol):
     in-flight window of compiled steps with sampling fused on device).
     Generated-token VALUES are observable only after ``drain`` — the
     scheduler's finish detection is count-based (``Request.generated``),
-    so it never needs a mid-stream synchronization. Backends must drain
-    themselves at mode-switch boundaries (the §5.3 step-boundary safe
-    point); the scheduler additionally drains once at the end of a run.
+    so it never needs a mid-stream synchronization. ``island`` arguments
+    are ``modes.Island`` handles from the live layout (backends may also
+    accept a bare merge for the degenerate uniform case). Backends must
+    drain the islands a ``rebind`` reshapes (the §5.3 step-boundary safe
+    point) — and ONLY those; the scheduler additionally drains once at
+    the end of a run.
 
     Backends MAY additionally expose
-    ``mixed(prefills, decodes, merge, chunk_tokens) -> float`` (gated by
-    an optional ``supports_mixed()``): one launch covering the tick's
-    prefill chunks AND decode batch (§Perf D6). ``decodes`` includes
-    requests promoted out of this tick's final chunk; their ``prefilled``
-    field still holds the chunk's PRIOR length when the backend runs —
-    the scheduler advances it only after the launch returns.
+    ``mixed(prefills, decodes, island, chunk_tokens) -> float`` (gated
+    by an optional ``supports_mixed()``): one launch covering an
+    island's prefill chunks AND decode batch (§Perf D6). ``decodes``
+    includes requests promoted out of this tick's final chunk; their
+    ``prefilled`` field still holds the chunk's PRIOR length when the
+    backend runs — the scheduler advances it only after the launch.
+
+    Backends exposing ``adaptors`` (the real engine does) have them
+    adopted by the scheduler at construction, so allocation state lives
+    in exactly one place.
     """
 
-    def prefill(self, reqs: Sequence[Request], merge: int,
+    def prefill(self, reqs: Sequence[Request], island,
                 chunk_tokens: int) -> float:
         """Run (or simulate) prefill of `chunk_tokens` for each req;
         returns step duration in seconds."""
 
-    def decode(self, reqs: Sequence[Request], merge: int) -> float:
+    def decode(self, reqs: Sequence[Request], island) -> float:
         """One decode token for every req; returns duration (dispatch
         time for asynchronous backends)."""
 
-    def switch(self, old: int, new: int) -> float:
-        """Mode transition cost (flying: executable lookup; static
-        baselines: restart). Implies a drain of in-flight steps."""
+    def rebind(self, layout: FleetLayout) -> float:
+        """Partial layout transition (flying: executable lookup + island
+        view re-assembly; static baselines: restart). Implies a drain of
+        the RESHAPED islands' in-flight steps only."""
 
     def drain(self) -> None:
         """Synchronize any in-flight asynchronous work so generated
@@ -92,15 +112,16 @@ class SchedulerConfig:
 @dataclass
 class StepLog:
     t: float
-    merge: int
+    merge: int                 # widest live island merge (uniform: THE merge)
     phase: str
     n_running: int
     n_queued: int
-    switched: bool = False
+    switched: bool = False     # a layout transition applied this tick
+    islands: Tuple[Tuple[int, int], ...] = ()   # live (n_engines, merge)s
 
 
 class DynamicScheduler:
-    """Algorithm 1 event loop over K DP engines."""
+    """Algorithm 1 event loop over the fleet's islands."""
 
     def __init__(self, plan: ParallelPlan, geom: PoolGeometry,
                  backend: Backend, cfg: SchedulerConfig,
@@ -110,27 +131,51 @@ class DynamicScheduler:
         self.backend = backend
         self.cfg = cfg
         self.pool = TaskPool()
-        self.merge = cfg.fixed_merge or 1
-        self.pending_merge: Optional[int] = None
+        self.layout = FleetLayout.uniform(plan, cfg.fixed_merge or 1)
+        self.pending_layout: Optional[FleetLayout] = None
         self.now = 0.0
+        # per-island completion clocks: islands run concurrently (the
+        # real engine overlaps their launches via async dispatch), so a
+        # slow TP island must not throttle its DP neighbors' token
+        # cadence. An island launches its next step only once its
+        # previous one has completed; the control-plane clock advances
+        # to the earliest busy island. Uniform layouts degenerate to the
+        # seed-era single step clock.
+        self._clock: Dict[Island, float] = {
+            isl: 0.0 for isl in self.layout.islands}
         self.waiting: List[Request] = []
-        self.running: List[Request] = []   # decoding under current mode
+        self.running: List[Request] = []   # decoding under current layout
         self.paused: List[Request] = []    # hard-preempted (other mode tag)
-        # one adaptor per engine-tile group; symmetric allocation
-        n_groups = plan.dp_engines
-        self.adaptors = [KVCacheAdaptor(geom) for _ in range(n_groups)]
+        # one adaptor per engine tile; adopt the backend's when it owns
+        # them (the real engine) so allocation state is never split
+        backend_ads = getattr(backend, "adaptors", None)
+        if backend_ads is not None:
+            self.adaptors = backend_ads
+        else:
+            self.adaptors = [KVCacheAdaptor(geom)
+                             for _ in range(plan.dp_engines * plan.pods)]
+            for e, a in enumerate(self.adaptors):
+                a.switch_mode(self.layout.merge_of(e))
         self.policy = policy
         self.log: List[StepLog] = []
         self.switches = 0
+        self._switched_tick = False
+        self._busy_islands: set = set()
 
     # ------------------------------------------------------------------
     @property
+    def merge(self) -> int:
+        """Fleet-wide merge of a uniform layout (seed-era API);
+        heterogeneous layouts report their widest island."""
+        return self.layout.uniform_merge or self.layout.max_merge
+
+    @property
     def groups(self) -> int:
-        return self.plan.dp_engines // self.merge
+        return self.layout.n_groups
 
     def _adaptor(self, lead_engine: int) -> KVCacheAdaptor:
         """Requests record their ABSOLUTE lead engine id (stable across
-        merges); merged groups share the lead engine's table."""
+        rebinds); merged groups share the lead engine's table."""
         return self.adaptors[lead_engine]
 
     # ------------------------------------------------------------------
@@ -157,8 +202,8 @@ class DynamicScheduler:
                     break
                 self.now = max(self.now, nxt)
         # async backends: surface in-flight generated tokens (the only
-        # other drain points are mode-switch safe boundaries, handled by
-        # the backend itself)
+        # other drain points are rebind safe boundaries, handled by the
+        # backend itself)
         drain = getattr(self.backend, "drain", None)
         if drain is not None:
             drain()
@@ -172,41 +217,86 @@ class DynamicScheduler:
         self.waiting.sort(key=lambda r: (-r.priority, r.arrival))
 
         # ③ Mode Determination (policy layer; Flag_SetTP / Flag_ResetTP)
-        target = self.merge
-        if self.cfg.fixed_merge is None and self.policy is not None:
-            target = self.policy.decide(self)
         switched = False
-        if target != self.merge:
-            switched = self._transition(target)
+        if self.cfg.fixed_merge is None and self.policy is not None:
+            target = self._as_layout(self.policy.decide(self))
+            if target != self.layout:
+                switched = self._transition(target)
 
         # ④/⑥ KV parameterization + execution
         progressed = self._execute_one_step()
-        if not progressed and self.paused and self.pending_merge is None:
-            # nothing runnable under the current mode but paused requests
-            # exist: bind back to their layout's mode and resume them
-            if self._transition(self._tag(self.paused[0])):
-                progressed = self._execute_one_step()
+        if self.paused and self.pending_layout is None:
+            # opportunistic resume: a paused request resumes as soon as
+            # every engine its group-restoring carve would reshape is
+            # IDLE — no running decodes, no admitted or mid-prefill
+            # work, no launch this tick (a priority request still
+            # prefilling toward its island must not look idle). The
+            # rest of the fleet keeps serving; residents of busy
+            # islands — and wide tags whose carve would reshape busy
+            # engines — wait for the work to drain first.
+            busy = {self.layout.island_of(r.engine_group)
+                    for r in self.running}
+            busy |= {self.layout.island_of(r.engine_group)
+                     for r in self.waiting if r.engine_group >= 0}
+            # islands that launched this tick, were mid-step, or are
+            # mid-rebind: a just-applied policy transition must not be
+            # un-done before its islands even start serving
+            busy |= self._busy_islands
+            if any(r.priority > 0 for r in self.waiting):
+                # queued priority traffic is DESTINED for the widest
+                # islands (admission's wide rule) — a just-carved TP
+                # island awaiting its first admission is not idle
+                maxm = self.layout.max_merge
+                busy |= {isl for isl in self.layout.islands
+                         if isl.merge == maxm}
+            busy_engines = frozenset(
+                e for isl in busy for e in isl.engines())
+            for r in self.paused:
+                target = self._resume_layout(r)
+                if self.layout.changed_engines(target) & busy_engines:
+                    continue
+                if self._transition(target):
+                    progressed = self._execute_one_step() or progressed
+                break
         if not (progressed or switched):
             return False
         return True
 
     # ------------------------------------------------------------------
-    def _incompatible(self) -> List[Request]:
-        """Requests whose KV layout is bound to the current mode: running
-        decodes + partially prefilled admissions."""
-        return list(self.running) + [r for r in self.waiting
-                                     if r.prefilled > 0]
+    def _as_layout(self, target: Union[FleetLayout, int]) -> FleetLayout:
+        if isinstance(target, FleetLayout):
+            return target
+        if target == self.layout.uniform_merge:
+            return self.layout
+        return FleetLayout.uniform(self.plan, target)
 
-    def _transition(self, target: int) -> bool:
+    def _resume_layout(self, r: Request) -> FleetLayout:
+        """The minimal transition that brings a paused request's group
+        back: carve its (lead, merge) island out of the live layout —
+        the rest of the fleet keeps its shape."""
+        m = self._tag(r)
+        return self.layout.carve(r.engine_group, m, m)
+
+    def _incompatible(self, target: FleetLayout) -> List[Request]:
+        """Requests whose KV layout the transition would reshape:
+        running decodes + partially prefilled admissions on engines
+        whose group assignment changes. Everything else rides through
+        the rebind untouched — the partial-transition contract."""
+        changed = self.layout.changed_engines(target)
+        bound = list(self.running) + [r for r in self.waiting
+                                      if r.prefilled > 0]
+        return [r for r in bound if r.engine_group in changed]
+
+    def _transition(self, target: FleetLayout) -> bool:
         strat = self.cfg.strategy
-        incompatible = self._incompatible()
+        incompatible = self._incompatible(target)
         if strat == SEQUENTIAL:
-            self.pending_merge = target
+            self.pending_layout = target
             if incompatible:
-                return False  # wait for full drain (stragglers idle)
+                return False  # wait for the reshaped islands to drain
             return self._apply_switch(target)
         if strat == SOFT:
-            self.pending_merge = target
+            self.pending_layout = target
             if incompatible:
                 # idle engines speculatively serve waiting TP requests in
                 # DP mode (they'll recompute later) — mark them
@@ -219,15 +309,15 @@ class DynamicScheduler:
                 if r.state == "spec_dp":
                     g = r.engine_group
                     if g >= 0:
-                        dropped = self._adaptor(g).drop_for_recompute(
-                            r.req_id)
+                        self._adaptor(g).drop_for_recompute(r.req_id)
                         r.prefilled = 0
                         r.state = "queued"
                         if r in self.running:
                             self.running.remove(r)
                             self.waiting.insert(0, r)
             return self._apply_switch(target)
-        # HARD: immediate switch at this (safe) step boundary
+        # HARD: immediate switch at this (safe) step boundary; only the
+        # reshaped islands' requests pause
         for r in incompatible:
             r.state = "paused"
             self.paused.append(r)
@@ -237,17 +327,34 @@ class DynamicScheduler:
                 self.waiting.remove(r)
         return self._apply_switch(target)
 
-    def _apply_switch(self, target: int) -> bool:
-        dt = self.backend.switch(self.merge, target)
-        self.now += dt
-        self.merge = target
-        self.pending_merge = None
+    def _apply_switch(self, target: FleetLayout) -> bool:
+        dt = self._backend_rebind(target)
+        # the rebind cost lands on the RESHAPED islands' clocks: an
+        # untouched island keeps serving straight through it (the real
+        # engine never even drains it). A reshaped island synchronizes
+        # with every outgoing island it overlaps (their in-flight steps
+        # must complete at the safe point) and then pays the transition.
+        old_clock = self._clock
+        clock: Dict[Island, float] = {}
+        for isl in target.islands:
+            prev = old_clock.get(isl)
+            if prev is not None:
+                clock[isl] = prev
+            else:
+                inherit = [t for o, t in old_clock.items()
+                           if o.start < isl.stop and isl.start < o.stop]
+                clock[isl] = max([self.now] + inherit) + dt
+        self._clock = clock
+        self.layout = target
+        self.pending_layout = None
         self.switches += 1
-        for a in self.adaptors:
-            a.switch_mode(target)
-        # resume paused requests whose layout matches the new mode — no
-        # recomputation needed (KV Cache Adaptor keeps the blocks valid)
-        back = [r for r in self.paused if self._tag(r) == target]
+        self._switched_tick = True  # consumed by the next StepLog entry
+        for e, a in enumerate(self.adaptors):
+            a.switch_mode(target.merge_of(e))
+        # resume paused requests whose group exists again under the new
+        # layout — no recomputation needed (KV Cache Adaptor keeps the
+        # blocks valid under the mode tag that wrote them)
+        back = [r for r in self.paused if self._group_restored(r, target)]
         for r in back:
             self.paused.remove(r)
             if r.prefilled < r.prompt_len:
@@ -258,14 +365,35 @@ class DynamicScheduler:
                 self.running.append(r)
         return True
 
+    def _backend_rebind(self, target: FleetLayout) -> float:
+        rebind = getattr(self.backend, "rebind", None)
+        if rebind is not None:
+            return rebind(target)
+        # legacy backends know only uniform switches
+        return self.backend.switch(self.merge,
+                                   target.uniform_merge or target.max_merge)
+
+    def _group_restored(self, r: Request, layout: FleetLayout) -> bool:
+        """A paused request resumes when its lead engine again leads a
+        group of exactly its mode tag's merge."""
+        g = r.engine_group
+        if g < 0:
+            return True
+        m = self._tag(r)
+        isl = layout.island_of(g)
+        return isl.merge == m and (g - isl.start) % m == 0
+
     def _tag(self, r: Request) -> int:
         g = r.engine_group
         if g < 0:
-            return self.merge
+            return self.layout.merge_of(0)
         entry = self._entry(r)
-        return entry.mode_tag if entry else self.merge
+        return entry.mode_tag if entry else self.layout.merge_of(g)
 
     def _entry(self, r: Request):
+        g = r.engine_group
+        if 0 <= g < len(self.adaptors) and r.req_id in self.adaptors[g].table:
+            return self.adaptors[g].table[r.req_id]
         for a in self.adaptors:
             if r.req_id in a.table:
                 return a.table[r.req_id]
@@ -273,119 +401,222 @@ class DynamicScheduler:
 
     # ------------------------------------------------------------------
     def _execute_one_step(self) -> bool:
-        # admissions: fill groups with queued requests needing prefill
+        layout = self.layout
+        eps = 1e-12
+        # islands whose previous step has completed may launch; the
+        # others are mid-step (the real engine's async dispatch overlap)
+        ready = {isl for isl in layout.islands
+                 if self._clock[isl] <= self.now + eps}
+        # admissions: fill READY island groups with queued requests
+        # needing prefill. Group affinity implements the paper's Fig. 3
+        # split: priority requests prefer the widest island (the TP
+        # binding the policy carved for them), background prefers the
+        # narrowest — so DP islands keep absorbing throughput traffic
+        # while a bound TP island serves the latency SLO. Placement is
+        # sticky: a mid-prefill request stays on the group whose adaptor
+        # holds its blocks.
         admit: List[Request] = []
-        group_load = [0] * self.groups
+        leads = [(isl, lead) for isl in layout.islands
+                 for lead in isl.lead_engines()]
+        group_load: Dict[int, int] = {lead: 0 for _, lead in leads}
         for r in self.running:
-            group_load[r.engine_group // self.merge] += 1
+            group_load[r.engine_group] += 1
+        mem_blocked: set = set()   # leads waiting on their own pool
+        reserved: Dict[int, int] = {}   # blocks promised this tick
         fits = getattr(self.backend, "request_fits", None)
+        widest = self.plan.valid_merges()[-1]
         for r in list(self.waiting):
             if r.state not in ("queued", "spec_dp"):
                 continue
-            if fits is not None and not fits(r, self.merge):
-                # over the per-request block cap under the CURRENT mode:
-                # block capacity B(m) grows with merge, so only reject
-                # outright if no valid mode could ever hold it —
-                # otherwise keep it queued for a future switch (the same
-                # wait-for-resources stance as pool exhaustion)
-                if not fits(r, self.plan.valid_merges()[-1]):
-                    r.state = "rejected"
-                    self.waiting.remove(r)
+            if r.engine_group >= 0 and r.prefilled > 0:
+                # sticky mid-prefill placement: the group's adaptor holds
+                # its blocks — but only take the next chunk when the
+                # REMAINING context still fits the pool (decode growth
+                # competes for blocks). KV pools are per engine, so a
+                # full pool blocks further admissions to THIS group only,
+                # never the rest of the fleet.
+                ad = self._adaptor(r.engine_group)
+                ent = ad.table.get(r.req_id)
+                have = ent.length if ent else 0
+                if ad.can_allocate(
+                        max(r.prompt_len + r.output_len - have, 0)):
+                    admit.append(r)
+                else:
+                    mem_blocked.add(r.engine_group)
                 continue
-            # pick least-loaded group with KV room
-            order = sorted(range(self.groups), key=lambda g: group_load[g])
+
+            if fits is not None and not fits(r, widest):
+                # over the per-request block cap under EVERY mode: no
+                # future layout could hold it — reject outright
+                r.state = "rejected"
+                self.waiting.remove(r)
+                continue
+            if fits is not None and not any(
+                    fits(r, isl.merge) for isl in layout.islands):
+                # block capacity B(m) grows with merge: too big for
+                # every LIVE island, but some valid mode could hold it —
+                # keep it queued for a future layout (the same
+                # wait-for-resources stance as pool exhaustion)
+                continue
+            wide = r.priority > 0 and layout.max_merge > 1
+            if wide:
+                # a TP binding exists for this latency class: place ONLY
+                # there — leaking onto a DP island because the bound
+                # island is mid-step (or mid-rebind) would pin the
+                # request to DP latency for its whole life. It stays
+                # queued the tick or two until its island's clock
+                # arrives.
+                cands = [il for il in leads
+                         if il[0].merge == layout.max_merge]
+            else:
+                cands = leads
+            order = sorted(
+                cands, key=lambda il: (
+                    -il[0].merge if r.priority > 0 else il[0].merge,
+                    group_load[il[1]], il[1]))
             placed = False
-            for g in order:
-                if group_load[g] >= self.cfg.max_batch_per_group:
+            for isl, lead in order:
+                if isl not in ready or lead in mem_blocked:
                     continue
-                ad = self._adaptor(g * self.merge)
-                if ad.can_allocate(r.prompt_len + r.output_len):
-                    r.engine_group = g * self.merge  # absolute lead engine
-                    group_load[g] += 1
+                if group_load[lead] >= self.cfg.max_batch_per_group:
+                    continue
+                if fits is not None and not fits(r, isl.merge):
+                    continue
+                # RESERVE the full-context block need: two prompts
+                # admitted to one group in the same tick must not both
+                # count the free pool (chunked prefill would exhaust it
+                # mid-stream and wedge both — neither ever decodes)
+                ad = self._adaptor(lead)
+                need = -(-(r.prompt_len + r.output_len) // ad.capacity)
+                if ad.free_blocks() - reserved.get(lead, 0) >= need:
+                    r.engine_group = lead  # absolute lead engine
+                    group_load[lead] += 1
+                    reserved[lead] = reserved.get(lead, 0) + need
                     admit.append(r)
                     placed = True
                     break
             if not placed:
-                break  # head-of-line blocking: wait for memory
+                if wide:
+                    continue  # wait for the TP island, don't block others
+                if ready:
+                    break  # head-of-line blocking: wait for room
         # ⑥ execution: Sarathi-style mixed step — chunked prefills
-        # piggybacked with the decode batch (paper §1: chunked prefill and
-        # continuous batching preserved), so decode cadence never starves
-        # behind admissions. Backends exposing ``mixed`` run the prefill
-        # chunks AND the decode batch as ONE compiled launch per tick
-        # (§Perf D6); others (simulation, recurrent archs) fall back to
-        # the sequential prefill->decode pair — token-identical by
-        # construction.
-        progressed = False
-        prefills = [r for r in admit if r.prefilled < r.prompt_len]
-        finished: List[Request] = []
-        chunk_of: Dict[str, int] = {}
-        if prefills:
-            chunks: Dict[int, List[Tuple[str, int]]] = {}
-            for r in prefills:
-                if r.sched_t is None:
-                    r.sched_t = self.now
-                chunk = min(self.cfg.prefill_chunk,
-                            r.prompt_len - r.prefilled)
-                chunk_of[r.req_id] = chunk
-                chunks.setdefault(r.engine_group, []).append(
-                    (r.req_id, chunk))
-            for g, items in chunks.items():
-                self._adaptor(g).append_slots_batch(
-                    [rid for rid, _ in items], [c for _, c in items])
-            # promote final-chunk requests BEFORE execution: the decode
-            # batch of this very tick includes them (their first token
-            # comes out of the final prefill step), and ``prefilled``
-            # stays at the chunk's prior length for the backend to read
-            finished = [r for r in prefills
-                        if r.prefilled + chunk_of[r.req_id] >= r.prompt_len]
-            for r in finished:
-                r.state = "running" if r.state != "spec_dp" else "spec_dp"
-                self.waiting.remove(r)
-                self.running.append(r)
-                r.generated += 1
-                self._adaptor(r.engine_group).append_slots(r.req_id, 1)
+        # piggybacked with the decode batch (paper §1: chunked prefill
+        # and continuous batching preserved), so decode cadence never
+        # starves behind admissions. One launch set per READY island,
+        # islands dispatched back-to-back and overlapped: each runs on
+        # its own completion clock, so a slow TP island never throttles
+        # its DP neighbors' token cadence. Backends exposing ``mixed``
+        # run an island's prefill chunks AND decode batch as ONE
+        # compiled launch (§Perf D6); others (simulation, recurrent
+        # archs) fall back to the sequential prefill->decode pair —
+        # token-identical by construction.
         mixed = getattr(self.backend, "mixed", None)
         sup = getattr(self.backend, "supports_mixed", None)
-        use_mixed = bool(prefills) and bool(self.running) \
-            and mixed is not None and (sup is None or sup())
-        if prefills:
-            if use_mixed:
-                dt = mixed(prefills, self.running, self.merge,
-                           self.cfg.prefill_chunk)
+        backend_mixed = mixed is not None and (sup is None or sup())
+        idx_of = {isl: i for i, isl in enumerate(layout.islands)}
+        pre_by = [[] for _ in layout.islands]
+        dec_by = [[] for _ in layout.islands]
+        for r in admit:
+            if r.prefilled < r.prompt_len:
+                pre_by[idx_of[layout.island_of(r.engine_group)]].append(r)
+        for r in self.running:
+            dec_by[idx_of[layout.island_of(r.engine_group)]].append(r)
+        launched = False
+        any_mixed = any_pre = any_dec = False
+        # islands busy as of THIS tick: mid-step/mid-rebind at tick
+        # start, or launched below (snapshotted here because the
+        # clock advance at the end of the tick hides both)
+        self._busy_islands = set(layout.islands) - ready
+        for isl, pre_i, dec_i in zip(layout.islands, pre_by, dec_by):
+            if isl not in ready or not (pre_i or dec_i):
+                continue
+            self._busy_islands.add(isl)
+            start = max(self._clock[isl], self.now)
+            finished: List[Request] = []
+            chunk_of: Dict[str, int] = {}
+            if pre_i:
+                chunks: Dict[int, List[Tuple[str, int]]] = {}
+                for r in pre_i:
+                    if r.sched_t is None:
+                        r.sched_t = self.now
+                    chunk = min(self.cfg.prefill_chunk,
+                                r.prompt_len - r.prefilled)
+                    chunk_of[r.req_id] = chunk
+                    chunks.setdefault(r.engine_group, []).append(
+                        (r.req_id, chunk))
+                for g, items in chunks.items():
+                    self._adaptor(g).append_slots_batch(
+                        [rid for rid, _ in items], [c for _, c in items])
+                # promote final-chunk requests BEFORE execution: the
+                # island's decode batch this tick includes them (their
+                # first token comes out of the final prefill step), and
+                # ``prefilled`` stays at the chunk's prior length for
+                # the backend to read
+                finished = [r for r in pre_i
+                            if r.prefilled + chunk_of[r.req_id]
+                            >= r.prompt_len]
+                for r in finished:
+                    r.state = "running" if r.state != "spec_dp" \
+                        else "spec_dp"
+                    self.waiting.remove(r)
+                    self.running.append(r)
+                    dec_i.append(r)
+                    r.generated += 1
+                    self._adaptor(r.engine_group).append_slots(r.req_id, 1)
+            dt = 0.0
+            if pre_i and dec_i and backend_mixed:
+                dt = mixed(pre_i, dec_i, isl, self.cfg.prefill_chunk)
+                any_mixed = True
             else:
-                dt = self.backend.prefill(prefills, self.merge,
-                                          self.cfg.prefill_chunk)
-            for r in prefills:
+                if pre_i:
+                    dt += self.backend.prefill(pre_i, isl,
+                                               self.cfg.prefill_chunk)
+                    any_pre = True
+                if dec_i:
+                    dt += self.backend.decode(dec_i, isl)
+                    any_dec = True
+            end = start + dt
+            self._clock[isl] = end
+            launched = True
+            for r in pre_i:
                 r.prefilled += chunk_of[r.req_id]
-            self.now += dt
             for r in finished:
-                r.first_token_t = self.now
-                r.token_times.append(self.now)
-            if use_mixed:
-                self._decode_bookkeeping()
-            self._log("mixed" if use_mixed else "prefill")
-            progressed = True
-        if self.running and not use_mixed:
-            dt = self.backend.decode(self.running, self.merge)
-            self.now += dt
-            self._decode_bookkeeping()
+                r.first_token_t = end
+                r.token_times.append(end)
+            if dec_i:
+                self._decode_bookkeeping(dec_i, end)
+        if any_mixed or any_pre:
+            self._log("mixed" if any_mixed else "prefill")
+        if any_dec:
             self._log("decode")
-            progressed = True
-        return progressed
+        if self.pending_layout is not None and \
+                not self._incompatible(self.pending_layout):
+            self._transition(self.pending_layout)
+        # advance the control-plane clock to the earliest mid-step
+        # island: the next scheduling decision happens when the fastest
+        # busy island completes (uniform layouts: exactly the seed-era
+        # += step-duration clock)
+        mids = [t for t in self._clock.values() if t > self.now + eps]
+        if mids:
+            self.now = min(mids)
+            return True
+        return launched
 
-    def _decode_bookkeeping(self) -> None:
-        """Post-decode accounting shared by the mixed and sequential
-        paths: token counts, next-token slots, completions, and the
-        sequential/soft pending-switch retry after drain progress."""
+    def _decode_bookkeeping(self, reqs: Sequence[Request],
+                            t: float) -> None:
+        """Post-decode accounting for one island's launch, at the
+        island's completion time: token counts, next-token slots,
+        completions."""
         done = []
         alive: Dict[int, List[str]] = {}
-        for r in self.running:
+        for r in reqs:
             r.generated += 1
-            r.token_times.append(self.now)
+            r.token_times.append(t)
             if not r.done:
                 alive.setdefault(r.engine_group, []).append(r.req_id)
             if r.done:
-                r.finish_t = self.now
+                r.finish_t = t
                 r.state = "done"
                 done.append(r)
         # next token's slot, one vectorized allocation per adaptor
@@ -394,11 +625,12 @@ class DynamicScheduler:
         for r in done:
             self.running.remove(r)
             self._adaptor(r.engine_group).release(r.req_id)
-        if self.pending_merge is not None and not self._incompatible():
-            self._transition(self.pending_merge)
 
     def _log(self, phase: str) -> None:
         self.log.append(StepLog(
             t=self.now, merge=self.merge, phase=phase,
             n_running=len(self.running),
-            n_queued=len(self.waiting) + self.pool.queue_depth(self.now)))
+            n_queued=len(self.waiting) + self.pool.queue_depth(self.now),
+            switched=self._switched_tick,
+            islands=self.layout.shapes()))
+        self._switched_tick = False

@@ -96,8 +96,14 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
                      phase: str, window: Optional[int] = None,
                      use_kernel: Optional[bool] = None,
                      chunked: bool = False,
-                     sample: Optional[Tuple[float, int]] = None):
+                     sample: Optional[Tuple[float, int]] = None,
+                     mesh=None):
     """Build the shard_map step fn for (arch, mode, phase).
+
+    ``mesh`` overrides the default ``mode_mesh(mode)``: island runners
+    pass an AbstractMesh of the island SHAPE, so one traced program
+    serves every same-shape island (the concrete device slice resolves
+    from the island-committed params/states at call time).
 
     ``use_kernel``: None dispatches decode attention by platform (Pallas
     kernel where compiled support exists, jnp reference elsewhere);
@@ -127,7 +133,8 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
     """
     cfg = model.cfg
     ctx = serving_ctx(mode, cfg)
-    mesh = mode_mesh(mode)
+    if mesh is None:
+        mesh = mode_mesh(mode)
     merge = mode.merge
     model.states_as_carry = True  # §Perf A2: in-place pool updates
 

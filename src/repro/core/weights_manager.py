@@ -200,6 +200,43 @@ class WeightsManager:
             assert before == after, "reinterpretation moved bytes!"
         return out
 
+    # -- per-island views (heterogeneous fleet layouts) ------------------
+    def island_view(self, params, isl_mesh, *,
+                    check_zero_copy: bool = False):
+        """Island-local view of the canonical params: the same logical
+        weights re-bound over ONE island's sub-mesh. Since the canonical
+        layout shards only ('ed','model') (replicated over the DP axes
+        the island subsets), every island device already holds exactly
+        the shard the island sharding asks for — assembly is pure
+        metadata over the resident buffers, asserted when requested."""
+        sh = self.shardings(params, isl_mesh)
+        return jax.tree.map(
+            lambda a, s: shard_view(a, s, check_zero_copy=check_zero_copy),
+            params, sh)
+
+
+def shard_view(a, sharding, shape: Optional[Tuple[int, ...]] = None, *,
+               check_zero_copy: bool = False):
+    """Assemble an array over a sub-mesh from the per-device shards of
+    arrays already resident on those devices — zero-copy (the paper's
+    reinterpretation trick, island-locally). ``a`` may be a single source
+    array or a dict ``{device: single-device shard}`` drawn from several
+    source arrays (a rebind regrouping islands)."""
+    if isinstance(a, dict):
+        by_dev = a
+    else:
+        by_dev = {s.device: s.data for s in a.addressable_shards}
+        if shape is None:
+            shape = tuple(a.shape)
+    devs = sharding.mesh.devices.flat
+    sds = [by_dev[d] for d in devs]
+    out = jax.make_array_from_single_device_arrays(
+        tuple(shape), sharding, sds)
+    if check_zero_copy:
+        before = tuple(sorted(s.unsafe_buffer_pointer() for s in sds))
+        assert _ptrs(out) == before, "island view moved bytes!"
+    return out
+
 
 def _ptrs(a):
     return tuple(sorted(s.data.unsafe_buffer_pointer()

@@ -63,7 +63,7 @@ def main():
                             prefill_chunk=8,
                             fixed_merge=args.fixed_merge or None),
             policy=None if args.fixed_merge else FlyingPolicy())
-        sched.adaptors = backend.adaptors
+        # (the scheduler adopts the engine's adaptors automatically)
         if args.fixed_merge and args.fixed_merge != 1:
             # static baseline: bind the engine (and shared adaptors) to
             # the pinned mode once at startup — the scheduler never

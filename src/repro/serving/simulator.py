@@ -81,15 +81,28 @@ class CostModel:
         return self.hw.startup_fixed + wbytes / self.hw.weight_load_bw
 
 
+def _merge_of(island) -> int:
+    """Backends accept an Island handle or (seed-era) a bare merge."""
+    return getattr(island, "merge", island)
+
+
 @dataclass
 class SimBackend:
-    """Scheduler Backend running on the cost model (no devices)."""
+    """Scheduler Backend running on the cost model (no devices).
+
+    Island-aware: each launch simulates ONE island's step from the
+    island's merge and its per-group batches, so heterogeneous layouts
+    (a TP island beside DP islands) cost exactly what the roofline says
+    each island costs — the scheduler overlaps islands by advancing the
+    tick to the slowest one."""
     cost: CostModel
     switch_mode: str = "flying"     # 'flying' | 'restart' | 'none'
     dp_throughput_penalty: float = 1.0  # shift-parallelism proxy uses <1
+    _layout: object = None          # last rebound layout (restart costing)
 
-    def prefill(self, reqs: Sequence[Request], merge: int,
+    def prefill(self, reqs: Sequence[Request], island,
                 chunk_tokens: int) -> float:
+        merge = _merge_of(island)
         groups: dict = {}
         for r in reqs:
             c = min(chunk_tokens, r.prompt_len)
@@ -97,7 +110,8 @@ class SimBackend:
         worst = max(groups.values())
         return self.cost.prefill_step(merge, worst)
 
-    def decode(self, reqs: Sequence[Request], merge: int) -> float:
+    def decode(self, reqs: Sequence[Request], island) -> float:
+        merge = _merge_of(island)
         groups: dict = {}
         ctx: dict = {}
         for r in reqs:
@@ -110,7 +124,23 @@ class SimBackend:
             worst = max(worst, t)
         return worst / self.dp_throughput_penalty
 
+    def rebind(self, layout) -> float:
+        """Partial layout transition: the reshaped islands re-bind live
+        (one O(1) lookup regardless of how many islands moved); static
+        baselines cold-restart the widest RESHAPED binding — islands
+        the transition leaves alone cost nothing."""
+        old, self._layout = self._layout, layout
+        if self.switch_mode == "flying":
+            return self.cost.flying_switch()
+        if self.switch_mode == "restart":
+            kept = set(old.islands) if old is not None else set()
+            reshaped = [i.merge for i in layout.islands if i not in kept]
+            m = max(reshaped) if reshaped else layout.max_merge
+            return self.cost.cold_restart(self.cost.tp(m))
+        return 0.0
+
     def switch(self, old: int, new: int) -> float:
+        """Seed-era uniform transition (kept for direct callers)."""
         if old == new:
             return 0.0
         if self.switch_mode == "flying":

@@ -35,7 +35,6 @@ def main():
             SchedulerConfig(strategy=strategy, max_batch_per_group=2,
                             prefill_chunk=8),
             policy=FlyingPolicy())
-        sched.adaptors = eng.adaptors  # share the allocation tables
         for i in range(10):
             sched.submit(Request(req_id=f"r{i}", arrival=i * 0.01,
                                  prompt_len=8, output_len=4,

@@ -113,7 +113,8 @@ def test_drain_is_idempotent_and_complete(driven):
     before = {k: list(v) for k, v in eng._token_buf.items()}
     eng.drain()
     assert {k: list(v) for k, v in eng._token_buf.items()} == before
-    assert not eng._pending and eng._last_src is None
+    assert all(not rt.pending and rt.last_src is None
+               for rt in eng.islands)
 
 
 def test_donated_steps_numerically_identical_to_undonated(setup):

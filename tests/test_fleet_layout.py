@@ -1,0 +1,309 @@
+"""Heterogeneous fleet layouts: FleetLayout validity/enumeration/algebra
+(modes.py) and the scheduler's partial transitions over islands — HARD
+preempt scoped to reshaped engines, per-island clocks, StepLog.switched,
+adaptor adoption, and the UC3 least-loaded probe — on the simulation
+backend."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.kv_adaptor import KVCacheAdaptor, PoolGeometry
+from repro.core.modes import (FleetLayout, Island, ParallelPlan,
+                              enumerate_layouts, island_mode, island_plan,
+                              island_shapes)
+from repro.core.policy import FlyingPolicy
+from repro.core.scheduler import HARD, DynamicScheduler, SchedulerConfig
+from repro.core.task_pool import PRIORITY_HIGH, Request
+from repro.serving.simulator import CostModel, SimBackend
+
+CFG = get_config("llama3-8b")
+PLAN = ParallelPlan(engine_rows=1, tp_base=16, data_rows=8)  # 8 engines
+
+
+# ---------------------------------------------------------------------------
+# FleetLayout validity + algebra
+# ---------------------------------------------------------------------------
+
+def test_uniform_is_single_island():
+    for m in PLAN.valid_merges():
+        lay = FleetLayout.uniform(PLAN, m)
+        assert len(lay.islands) == 1
+        assert lay.uniform_merge == m
+        assert lay.max_merge == m
+        assert lay.n_groups == PLAN.dp_engines // m
+
+
+def test_island_validity():
+    with pytest.raises(ValueError):
+        Island(0, 3, 1)          # size not pow2
+    with pytest.raises(ValueError):
+        Island(2, 4, 1)          # not buddy-aligned
+    with pytest.raises(ValueError):
+        Island(0, 2, 4)          # merge > size
+    with pytest.raises(ValueError):
+        FleetLayout(PLAN, (Island(0, 4, 1),))          # gap
+    with pytest.raises(ValueError):
+        FleetLayout(PLAN, (Island(0, 8, 1), Island(8, 8, 1)))  # overflow
+    with pytest.raises(ValueError):
+        FleetLayout(PLAN, (Island(4, 4, 1), Island(0, 4, 1)))  # unordered
+
+
+def test_carve_binds_and_splits_with_buddy_remainders():
+    lay = FleetLayout.uniform(PLAN, 1).carve(0, 4, 4)
+    assert lay.shapes() == ((4, 4), (4, 1))
+    # carving the middle of a uniform fleet leaves aligned pieces
+    lay2 = FleetLayout.uniform(PLAN, 1).carve(2, 2, 2)
+    assert [(i.start, i.n_engines, i.merge) for i in lay2.islands] == \
+        [(0, 2, 1), (2, 2, 2), (4, 4, 1)]
+    # remainder pieces keep the old merge where a whole group survives
+    lay3 = FleetLayout.uniform(PLAN, 2).carve(0, 4, 4)
+    assert lay3.shapes() == ((4, 4), (4, 2))
+    # ... and shrink it where the old group is broken
+    lay4 = FleetLayout.uniform(PLAN, 4).carve(0, 2, 2)
+    assert [(i.n_engines, i.merge) for i in lay4.islands] == \
+        [(2, 2), (2, 2), (4, 4)]
+
+
+def test_dissolved_in_place_preserves_dp_islands():
+    lay = FleetLayout.uniform(PLAN, 1).carve(0, 4, 4)
+    d = lay.dissolved()
+    assert d.shapes() == ((4, 1), (4, 1))
+    assert d.islands[1] is lay.islands[1]  # untouched island, same object
+    assert d.dissolved() == d
+
+
+def test_changed_engines_scopes_partial_rebinds():
+    u1 = FleetLayout.uniform(PLAN, 1)
+    bound = u1.carve(0, 4, 4)
+    assert sorted(u1.changed_engines(bound)) == [0, 1, 2, 3]
+    assert sorted(bound.changed_engines(u1)) == [0, 1, 2, 3]
+    # splitting a DP island moves no groups
+    split = FleetLayout.of(PLAN, [(4, 1), (4, 1)])
+    assert u1.changed_engines(split) == frozenset()
+    # same-merge boundary moves preserve groups too
+    a = FleetLayout.of(PLAN, [(2, 2), (2, 2), (4, 1)])
+    b = FleetLayout.of(PLAN, [(4, 2), (4, 1)])
+    assert a.changed_engines(b) == frozenset()
+    # reshaping island 1 leaves island 0's engines untouched
+    c = bound.carve(4, 4, 2)
+    assert sorted(bound.changed_engines(c)) == [4, 5, 6, 7]
+
+
+def test_enumerate_layouts_complete_and_valid():
+    p4 = ParallelPlan(engine_rows=1, tp_base=16, data_rows=4)
+    lays = enumerate_layouts(p4)
+    assert len(lays) == 12      # 3 uniform + L(2)^2 = 3 + 9 splits
+    assert len(set(lays)) == len(lays)
+    for m in p4.valid_merges():
+        assert FleetLayout.uniform(p4, m) in lays
+    for lay in lays:
+        covered = sorted(e for i in lay.islands for e in i.engines())
+        assert covered == list(range(p4.dp_engines))
+    # 8 engines: every buddy decomposition x merges
+    assert len(enumerate_layouts(PLAN)) == 148
+
+
+def test_island_shapes_key_space_is_linear():
+    shapes = island_shapes(PLAN)
+    # O(log^2): sum over pow2 sizes of (log2(size)+1) merge choices
+    assert shapes == ((1, 1), (2, 1), (2, 2), (4, 1), (4, 2), (4, 4),
+                      (8, 1), (8, 2), (8, 4), (8, 8))
+    for n, m in shapes:
+        mode = island_mode(PLAN, Island(0, n, m))
+        assert mode.dp == n // m
+        assert island_plan(PLAN, Island(0, n, m)).dp_engines == n
+
+
+# ---------------------------------------------------------------------------
+# scheduler: partial transitions over islands
+# ---------------------------------------------------------------------------
+
+def make_sched(policy=None, blocks=40000, plan=PLAN):
+    geom = PoolGeometry(CFG, plan, num_blocks=blocks, block_base=16)
+    be = SimBackend(CostModel(CFG, plan))
+    return DynamicScheduler(plan, geom, be, SchedulerConfig(strategy=HARD),
+                            policy=policy)
+
+
+def submit_bg(s, n=16, out=400):
+    for i in range(n):
+        s.submit(Request(req_id=f"bg{i}", arrival=0.0, prompt_len=128,
+                         output_len=out))
+
+
+def spin_up(s, ticks=40):
+    for _ in range(ticks):
+        s.step()
+    assert s.running
+
+
+def test_hard_preempt_scoped_to_reshaped_island():
+    s = make_sched()
+    submit_bg(s)
+    spin_up(s)
+    on_island = [r for r in s.running if r.engine_group < 2]
+    off_island = [r for r in s.running if r.engine_group >= 2]
+    assert on_island and off_island
+    gen_before = {r.req_id: r.generated for r in off_island}
+    s._transition(s.layout.carve(0, 2, 2))
+    # ONLY the reshaped engines' requests pause
+    assert sorted(r.req_id for r in s.paused) == \
+        sorted(r.req_id for r in on_island)
+    assert all(r.state == "running" for r in off_island)
+    for _ in range(10):
+        s.step()
+    for r in off_island:
+        assert r.generated > gen_before[r.req_id], \
+            "untouched island stalled through the rebind"
+
+
+def test_paused_island_requests_resume_on_unbind():
+    s = make_sched()
+    submit_bg(s, n=8, out=2000)
+    spin_up(s)
+    s._transition(s.layout.carve(0, 2, 2))
+    paused = list(s.paused)
+    assert paused
+    s._transition(s.layout.carve(0, 2, 1))
+    assert not s.paused
+    assert all(r.state == "running" for r in paused)
+    s.run()
+    assert all(r.state == "done" for r in s.pool.all.values())
+
+
+def test_split_of_dp_island_pauses_nothing():
+    s = make_sched()
+    submit_bg(s)
+    spin_up(s)
+    s._transition(FleetLayout.of(PLAN, [(4, 1), (4, 1)]))
+    assert not s.paused
+    assert len(s.running) > 0
+
+
+def test_priority_affinity_prefers_tp_island_background_avoids_it():
+    s = make_sched()
+    submit_bg(s, n=6)
+    spin_up(s, ticks=4)
+    s._transition(s.layout.carve(0, 2, 2))
+    s.submit(Request(req_id="prio", arrival=s.now, prompt_len=64,
+                     output_len=32, priority=PRIORITY_HIGH))
+    s.submit(Request(req_id="late_bg", arrival=s.now, prompt_len=64,
+                     output_len=32))
+    for _ in range(30):
+        s.step()
+    prio = s.pool.all["prio"]
+    late = s.pool.all["late_bg"]
+    assert prio.engine_group == 0, "priority request not on the TP island"
+    assert late.engine_group >= 2, "background admitted into the TP island"
+
+
+def test_steplog_switched_threaded_through():
+    s = make_sched(policy=FlyingPolicy())
+    # long outputs keep the DP fleet busy at the priority arrival, so
+    # the bind must CARVE an island (an idle fleet would have been
+    # pre-bound wide and reused sticky)
+    submit_bg(s, n=20, out=400)
+    s.submit(Request(req_id="p0", arrival=0.5, prompt_len=256,
+                     output_len=64, priority=PRIORITY_HIGH))
+    s.run()
+    flagged = [l for l in s.log if l.switched]
+    assert s.switches > 0
+    assert flagged, "no StepLog entry recorded a switch"
+    assert len(flagged) <= s.switches
+    assert any(len(l.islands) > 1 for l in s.log), \
+        "priority bind never produced a heterogeneous layout"
+
+
+def test_scheduler_adopts_backend_adaptors():
+    geom = PoolGeometry(CFG, PLAN, num_blocks=1000, block_base=16)
+
+    class EngineLike(SimBackend):
+        def __init__(self, cost):
+            super().__init__(cost)
+            self.adaptors = [KVCacheAdaptor(geom)
+                             for _ in range(PLAN.dp_engines)]
+
+    be = EngineLike(CostModel(CFG, PLAN))
+    s = DynamicScheduler(PLAN, geom, be, SchedulerConfig(strategy=HARD))
+    assert s.adaptors is be.adaptors
+    # backends without adaptors get scheduler-owned ones
+    s2 = make_sched()
+    assert isinstance(s2.adaptors, list) and len(s2.adaptors) == 8
+
+
+def test_priority_bind_neither_starves_nor_churns():
+    """Regression: under a sustained background stream, one priority
+    request binds a TP island; the requests it pauses must resume once
+    the island idles (no indefinite starvation), WITHOUT the resume
+    path flapping against the policy's bind (no transition churn), and
+    the priority request must land on the TP island — not leak onto a
+    DP island while the fresh binding is still mid-rebind."""
+    s = make_sched(policy=FlyingPolicy())
+    for i in range(400):
+        s.submit(Request(req_id=f"bg{i}", arrival=i * 0.08,
+                         prompt_len=256, output_len=200))
+    s.submit(Request(req_id="prio", arrival=0.5, prompt_len=256,
+                     output_len=64, priority=PRIORITY_HIGH))
+    s.run(t_end=30.0, max_steps=200_000)
+    prio = s.pool.all["prio"]
+    assert prio.state == "done"
+    # the TP island carves at the least-loaded aligned region; wherever
+    # it lands, the priority request must be served THERE (TP latency),
+    # not leaked onto a DP island while the fresh bind is mid-rebind
+    assert prio.engine_group % 2 == 0
+    import numpy as np
+    prio_tpot = (prio.finish_t - prio.first_token_t) / (prio.generated - 1)
+    bg_tpots = [(r.finish_t - r.first_token_t) / (r.generated - 1)
+                for r in s.pool.all.values()
+                if r.priority == 0 and r.state == "done"]
+    assert prio_tpot < 0.8 * float(np.median(bg_tpots)), \
+        f"priority TPOT {prio_tpot} not TP-island fast vs DP " \
+        f"{float(np.median(bg_tpots))}"
+    assert not s.paused, "paused background requests were starved"
+    assert s.switches <= 6, f"transition churn: {s.switches} switches"
+
+
+def test_coadmitted_long_prompts_cannot_oversubscribe_one_pool():
+    """Regression: two long prompts admitted in one tick must not both
+    count the same group's free blocks — un-reserved co-admission let
+    chunked prefill exhaust the pool mid-stream and wedge both requests
+    in a silent memory wait. With reservation they spread (or queue) and
+    every request completes."""
+    plan = ParallelPlan(engine_rows=1, tp_base=16, data_rows=2)
+    geom = PoolGeometry(CFG, plan, num_blocks=700, block_base=16)
+    be = SimBackend(CostModel(CFG, plan))
+    s = DynamicScheduler(plan, geom, be, SchedulerConfig(strategy=HARD))
+    # each needs ~563 of 699 usable blocks: one group holds ONE of them
+    for i in range(2):
+        s.submit(Request(req_id=f"big{i}", arrival=0.0, prompt_len=8000,
+                         output_len=1000))
+    s.run(max_steps=100_000)
+    for i in range(2):
+        assert s.pool.all[f"big{i}"].state == "done", \
+            (i, s.pool.all[f"big{i}"].state)
+    assert {s.pool.all["big0"].engine_group,
+            s.pool.all["big1"].engine_group} == {0, 1}, \
+        "co-admitted long prompts were not spread across groups"
+
+
+def test_uc3_probes_least_loaded_group_not_group_zero():
+    """A long-context request must not trigger a fleet merge while
+    another group still has room (the seed-era policy probed only
+    group 0's adaptor)."""
+    pol = FlyingPolicy()
+    s = make_sched(policy=pol, blocks=600)
+    # fill group 0's pool almost entirely
+    s.adaptors[0].allocate("hog", 16 * 560)
+    s.submit(Request(req_id="long", arrival=0.0, prompt_len=6000,
+                     output_len=16))
+    s.waiting.extend(s.pool.pull(0.0, 10))
+    target = pol.decide(s)
+    assert target == s.layout, \
+        "UC3 merged the fleet although a group had room"
+    # but when EVERY group is as full, the policy must merge one island
+    for a in s.adaptors[1:]:
+        a.allocate("hog", 16 * 560)
+    target = pol.decide(s)
+    assert target != s.layout
+    assert target.max_merge > 1
+    assert any(i.merge == 1 for i in target.islands), \
+        "UC3 should merge ONE island, not the whole fleet"

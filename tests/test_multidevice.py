@@ -73,3 +73,13 @@ def test_mixed_prefill_step_across_merges():
     and kernel dispatch impls (§Perf D6)."""
     out = run_script("check_prefill_attention.py")
     assert "PREFILL ATTENTION OK" in out
+
+
+def test_heterogeneous_island_serving():
+    """Partial rebind (§Perf D7): a priority TP island bound and
+    released beside live DP decode — the untouched island's in-flight
+    window survives both rebinds (sync_stats-asserted), token streams
+    match a drain-everything reference, and each island matches the
+    equivalent uniform fleet."""
+    out = run_script("check_island_serving.py")
+    assert "ISLAND SERVING OK" in out

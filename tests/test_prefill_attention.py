@@ -100,7 +100,6 @@ def run_sched(setup, *, mixed, use_kernel=None, temperature=0.0):
         PLAN, geom, eng,
         SchedulerConfig(strategy="hard", max_batch_per_group=2,
                         prefill_chunk=8))
-    sched.adaptors = eng.adaptors
     # staggered arrivals: "b" admits (and chunk-prefills) while "a"
     # decodes, so prefills and decodes co-reside in the same ticks
     sched.submit(Request(req_id="a", arrival=0.0, prompt_len=24,
@@ -152,7 +151,6 @@ def test_over_cap_request_rejected_not_crashed(setup):
         PLAN, geom, eng,
         SchedulerConfig(strategy="hard", max_batch_per_group=2,
                         prefill_chunk=8))
-    sched.adaptors = eng.adaptors
     sched.submit(Request(req_id="huge", arrival=0.0, prompt_len=100,
                          output_len=4))
     sched.submit(Request(req_id="ok", arrival=0.0, prompt_len=8,
