@@ -2,11 +2,21 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-smoke quickstart
+.PHONY: test test-md bench bench-smoke quickstart
 
 # tier-1 suite
 test:
 	$(PY) -m pytest -x -q
+
+# multi-device invariant scripts, run standalone under 8 emulated host
+# devices (each script also sets the flag itself, so they are directly
+# runnable; the env var here covers any future script that forgets)
+test-md:
+	@set -e; for s in tests/md_scripts/check_*.py; do \
+		echo "== $$s"; \
+		XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+			$(PY) $$s; \
+	done
 
 # full benchmark suite (simulation backend)
 bench:

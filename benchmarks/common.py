@@ -11,7 +11,8 @@ from repro.configs import get_config
 from repro.core.kv_adaptor import PoolGeometry
 from repro.core.modes import ParallelPlan
 from repro.core.policy import FlyingPolicy
-from repro.core.scheduler import (HARD, DynamicScheduler, SchedulerConfig)
+from repro.core.scheduler import (HARD, LIVE, DynamicScheduler,
+                                  SchedulerConfig)
 from repro.serving.metrics import Summary, summarize
 from repro.serving.simulator import CostModel, SimBackend
 from repro.serving.workload import WorkloadSpec, generate
@@ -24,7 +25,7 @@ PAPER_MODELS = {
 }
 
 SYSTEMS = ("static-DP", "static-TP", "shift-parallelism", "flying",
-           "flying-island")
+           "flying-island", "flying-live")
 
 
 def build_sched(arch: str, system: str, *, strategy: str = HARD,
@@ -37,7 +38,12 @@ def build_sched(arch: str, system: str, *, strategy: str = HARD,
                      / (plan.engine_rows * 16), 1)
         budget = 16e9 - cfg.num_params() * 2 / (plan.engine_rows * 16) - 1e9
         blocks = max(int(budget / kv_tok / 16), 2048)
-    geom = PoolGeometry(cfg, plan, num_blocks=blocks, block_base=16)
+    # flying-live pairs the LIVE transition strategy with the striped
+    # pool layout (Eq. 3 — and tag-readability — hold universally there,
+    # docs/PERF.md §D8); the other systems keep the paper's head layout
+    layout = "striped" if system == "flying-live" else "head"
+    geom = PoolGeometry(cfg, plan, num_blocks=blocks, block_base=16,
+                        layout=layout)
     cost = CostModel(cfg, plan)
     fixed = None
     policy = None
@@ -58,6 +64,11 @@ def build_sched(arch: str, system: str, *, strategy: str = HARD,
     elif system == "flying":
         # the paper's uniform modes: fleet-wide merges, full HARD pauses
         policy = FlyingPolicy(islands=False)
+    elif system == "flying-live":
+        # uniform modes WITHOUT the pause: in-flight requests ride
+        # merge-ups in place (zero paused, zero recomputed — §D8)
+        policy = FlyingPolicy(islands=False, live=True)
+        strategy = LIVE
     else:  # flying-island: per-island DP/TP coexistence, partial rebinds
         policy = FlyingPolicy()
     be = SimBackend(cost, switch_mode=switch,

@@ -58,6 +58,15 @@ def main() -> None:
         for row in table1_priority.run(n_requests=400, guard=True):
             print(row)
         print(f"table1_priority,elapsed_s,{time.time() - t0:.1f},")
+        # live-rebind guard (§D8, real execution in a subprocess so the
+        # emulated device count can take effect): zero paused / zero
+        # recomputed riders, token identity vs the no-switch reference,
+        # disruption <= 0.5x HARD
+        t0 = time.time()
+        from benchmarks import live_switch
+        for row in live_switch.run_subprocess():
+            print(row)
+        print(f"live_switch,elapsed_s,{time.time() - t0:.1f},")
         # perf trajectory artifacts: future PRs diff against these files
         import jax
         meta = {"devices": len(jax.devices()),

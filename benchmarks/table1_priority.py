@@ -71,7 +71,8 @@ def run(n_requests: int = 800, seed: int = 13, guard: bool = False):
         low_rate=(3.0, 5.0), burst_rate=(3.0, 5.0),  # paper: 3-5 req/s
         phase_seconds=30.0)
     out: Dict[str, Dict] = {}
-    for system in ("static-TP", "static-DP", "flying", "flying-island"):
+    for system in ("static-TP", "static-DP", "flying", "flying-island",
+                   "flying-live"):
         out[system] = run_workload("paper-llama3-70b", system, spec,
                                    strategy="hard")
         m, mp = out[system]["summary"], out[system]["priority"]
@@ -86,6 +87,11 @@ def run(n_requests: int = 800, seed: int = 13, guard: bool = False):
                             f"{m.mean_ttft * 1e3:.1f}"))
         rows.append(csv_row("table1", f"{tag}/peak_throughput_tok_s",
                             f"{m.peak_throughput:.0f}"))
+        ps = out[system]["sched"].preempt_stats
+        rows.append(csv_row("table1", f"{tag}/paused_requests",
+                            str(ps["paused"])))
+        rows.append(csv_row("table1", f"{tag}/recomputed_tokens",
+                            str(ps["recomputed_tokens"])))
     # bound-island phases: the in-flight background decode cohort while a
     # priority binding is held — island layouts keep it streaming (only
     # the reshaped engines' share pauses) where the uniform-flying

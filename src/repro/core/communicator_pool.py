@@ -128,7 +128,8 @@ class CommunicatorPool:
     def runner(self, island, phase: str, *, sampled: bool = False,
                donate: bool = False, batch_bucket: Optional[int] = None,
                seq_bucket: Optional[int] = None,
-               mb_bucket: Optional[int] = None) -> Callable:
+               mb_bucket: Optional[int] = None,
+               live: Optional[Tuple[int, ...]] = None) -> Callable:
         """Jitted step fn for (island shape, phase, variant).
 
         ``island`` is an ``Island`` (or a bare merge, meaning the
@@ -146,11 +147,16 @@ class CommunicatorPool:
         short contexts runs a narrow executable whose attention cost
         tracks live context, even when the engine is configured for a
         long-context ``max_blocks``.
+
+        ``live`` (§D8) selects the cross-layout read variant: the sorted
+        tag tuple of the block segments the batch may carry (the
+        per-tag table widths ride in the traced batch shapes). ``None``
+        is the unchanged single-view program.
         """
         island = self._as_island(island)
         amesh = island_abstract_mesh(self.plan, island.shape)
         key = (island.merge, phase, sampled, donate, batch_bucket,
-               seq_bucket, mb_bucket, island.n_engines)
+               seq_bucket, mb_bucket, island.n_engines, live)
         if amesh is None:  # pragma: no cover - pre-AbstractMesh jax
             key = key + (island.start,)
         if key not in self._runners:
@@ -160,7 +166,7 @@ class CommunicatorPool:
                 self.model, island_mode(self.plan, island), self.geom,
                 phase=phase, window=self.window, use_kernel=self.use_kernel,
                 chunked=(phase == "prefill" and self.chunked),
-                sample=self.sample if sampled else None,
+                sample=self.sample if sampled else None, live=live,
                 mesh=amesh if amesh is not None
                 else self.island_mesh(island))
             self._runners[key] = jax.jit(
@@ -169,7 +175,8 @@ class CommunicatorPool:
 
     # -- step 2: pre-initialization --------------------------------------
     def precompile(self, island, phase: str, abstract_args, *,
-                   sampled: bool = False, donate: bool = False) -> Any:
+                   sampled: bool = False, donate: bool = False,
+                   live: Optional[Tuple[int, ...]] = None) -> Any:
         """Eagerly lower+compile one executable (startup phase).
         ``island`` is an Island or a bare whole-fleet merge."""
         island = self._as_island(island)
@@ -179,7 +186,7 @@ class CommunicatorPool:
         t0 = time.perf_counter()
         runner = self.runner(island, phase, sampled=sampled, donate=donate,
                              batch_bucket=key[4], seq_bucket=key[5],
-                             mb_bucket=key[6])
+                             mb_bucket=key[6], live=live)
         lowered = runner.lower(*abstract_args)
         compiled = lowered.compile()
         self.stats.compiles += 1
@@ -227,8 +234,16 @@ class CommunicatorPool:
         bb = tok.shape[0] if tok is not None else None
         sb = tok.shape[1] if tok is not None and tok.ndim > 1 else None
         mb = bt.shape[1] if bt is not None and bt.ndim > 1 else None
-        shapes = tuple(jax.tree.leaves(jax.tree.map(
-            lambda a: (tuple(a.shape), str(a.dtype)), batch)))
+        if hasattr(batch, "items"):
+            # NAMED shapes: live-variant batches (§D8) differ by which
+            # per-tag tables they carry even when the leaf shapes
+            # coincide — anonymous leaves would collide executables
+            shapes = tuple(sorted(
+                (k, tuple(a.shape), str(a.dtype))
+                for k, a in batch.items()))
+        else:
+            shapes = tuple(jax.tree.leaves(jax.tree.map(
+                lambda a: (tuple(a.shape), str(a.dtype)), batch)))
         key = (island.merge, phase, sampled, donate, bb, sb, mb,
                island.n_engines, shapes)
         if island_abstract_mesh(self.plan, island.shape) is None:

@@ -58,7 +58,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.communicator_pool import CommunicatorPool, bucket_pow2
 from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry,
-                                   ragged_arange)
+                                   bind_fleet, ragged_arange)
 from repro.core.modes import FleetLayout, Island, ParallelPlan
 from repro.core.task_pool import Request
 from repro.core.views import make_serving_ctx
@@ -87,12 +87,17 @@ class _DecodeCache:
     is unchanged, per-step batch prep is a handful of whole-array numpy
     ops (lengths += 1, vectorized slot math) — no per-request Python.
     ``mb`` is the bucketed block-table width the staging buffers were
-    built for; crossing a bucket boundary rebuilds the cache (§Perf D5)."""
+    built for; crossing a bucket boundary rebuilds the cache (§Perf D5).
+    ``live`` (§D8) is the sorted tag tuple when any entry's KV spans
+    mode-tagged segments: the cache is then re-staged every step (the
+    per-tag tables shift as the live segment grows) but keeps its KEY,
+    so the device token ring's feed-back fast path — and the zero-sync
+    contract — survive the rebind the segments came from."""
     __slots__ = ("key", "rows", "row_reqs", "entries", "lengths", "nblk",
-                 "cap", "bufs", "mb")
+                 "cap", "bufs", "mb", "live")
 
     def __init__(self, key, rows, row_reqs, entries, lengths, nblk, cap,
-                 bufs, mb):
+                 bufs, mb, live=None):
         self.key = key
         self.rows = rows
         self.row_reqs = row_reqs
@@ -102,6 +107,7 @@ class _DecodeCache:
         self.cap = cap
         self.bufs = bufs
         self.mb = mb
+        self.live = live
 
 
 class _IslandRT:
@@ -176,8 +182,7 @@ class FlyingEngine:
             self._make_rt(isl) for isl in self.layout.islands]
         self._rt_of: Dict[Island, _IslandRT] = {
             rt.island: rt for rt in self.islands}
-        for e, a in enumerate(self.adaptors):
-            a.switch_mode(self.layout.merge_of(e))
+        bind_fleet(self.adaptors, self.layout)
         self.switch_log: List[float] = []
         self.sync_stats = SyncStats()
         self._token_buf: Dict[str, List[int]] = {}
@@ -341,8 +346,7 @@ class FlyingEngine:
             for isl in layout.islands]
         self._rt_of = {rt.island: rt for rt in self.islands}
         self.layout = layout
-        for e, a in enumerate(self.adaptors):
-            a.switch_mode(layout.merge_of(e))
+        bind_fleet(self.adaptors, layout)
         # staging buffers are keyed per island: drop dead islands' so
         # layout churn doesn't grow host memory without bound
         live = set(layout.islands)
@@ -594,21 +598,46 @@ class FlyingEngine:
             f"request needs {nblocks} blocks > max_blocks_per_req=" \
             f"{self.max_blocks}"
         mb = max(self._mb_bucket(nblocks), mb_min)
+        live = self._live_tags(entries, isl.merge)
         bufs = self._bufs(("prefill", isl, B, mb, T))
         toks, slots, btab = bufs["toks"], bufs["slots"], bufs["btab"]
         toks.fill(0)
         slots.fill(-1)
         btab.fill(0)
         cap = self.geom.capacity(isl.merge)
-        self._fill_block_tables(btab, rows, reqs)
+        if live is None:
+            self._fill_block_tables(btab, rows, reqs)
         if int(chunk.sum()):
-            rowcat = np.repeat(rows, chunk)
+            rowcat = np.repeat(np.arange(n), chunk)
             offcat = ragged_arange(chunk)
             poscat = np.repeat(prior, chunk) + offcat
-            toks[rowcat, offcat] = np.concatenate(
+            rcat = rows[rowcat]
+            toks[rcat, offcat] = np.concatenate(
                 [p[lo:hi] for p, lo, hi in zip(prompts, prior, end)])
-            blockcat = btab[rowcat, poscat // cap].astype(np.int64)
-            slots[rowcat, offcat] = blockcat * cap + poscat % cap
+            if live is None:
+                # seed-era vectorized slot math: single-segment entries,
+                # global positions index the staged table directly
+                blockcat = btab[rcat, poscat // cap].astype(np.int64)
+                slots[rcat, offcat] = blockcat * cap + poscat % cap
+            else:
+                # §D8: chunk write slots are SEGMENT-LOCAL against each
+                # entry's live segment — a rebind froze earlier
+                # segments, so global positions no longer index the
+                # concatenated table uniformly
+                segs_cur = [e.segments[-1] for e in entries]
+                for r, s in zip(reqs, segs_cur):
+                    assert s.tag == isl.merge, \
+                        (r.req_id, "chunk not under the island merge",
+                         s.tag, isl.merge)
+                seg_start = np.fromiter((s.start for s in segs_cur),
+                                        np.int64, n)
+                spos = poscat - np.repeat(seg_start, chunk)
+                maxb = max(len(s.ids) for s in segs_cur)
+                segtab = np.zeros((n, maxb), np.int64)
+                for i, s in enumerate(segs_cur):
+                    segtab[i, :len(s.ids)] = s.ids
+                slots[rcat, offcat] = segtab[rowcat, spos // cap] * cap \
+                    + spos % cap
         priorb = bufs["prior"]
         priorb.fill(0)
         priorb[rows] = prior
@@ -625,24 +654,32 @@ class FlyingEngine:
             "tokens": self._h2d(toks),
             "positions": self._h2d(posb),
             "slots": self._h2d(slots),
-            "block_table": self._h2d(btab),
-            "prior_len": self._h2d(priorb),
             "last_pos": self._h2d(lastp),
         }
-        return batch, rows, final, T, mb
+        if live is None:
+            batch["block_table"] = self._h2d(btab)
+            batch["prior_len"] = self._h2d(priorb)
+        else:
+            cur_start = np.fromiter(
+                (e.segments[-1].start for e in entries), np.int64, n)
+            lt = self._seg_arrays(isl, reqs, entries, rows, B, live,
+                                  (prior - cur_start).astype(np.int64))
+            for k, v in lt.items():
+                batch[k] = self._h2d(v)
+        return batch, rows, final, T, mb, live
 
     def prefill(self, reqs: Sequence[Request], island: Union[Island, int],
                 chunk_tokens: int) -> float:
         rt = self._resolve(island)
         t0 = time.perf_counter()
         B = rt.B
-        batch, rows, final, T, mb = self._stage_prefill(rt, reqs)
+        batch, rows, final, T, mb, live = self._stage_prefill(rt, reqs)
         seeds = self._seeds(B)
         if seeds is not None:
             batch["sample_seeds"] = seeds
         runner = self.pool.runner(
             rt.island, "prefill", sampled=self.fused, donate=self.donate,
-            batch_bucket=B, seq_bucket=T, mb_bucket=mb)
+            batch_bucket=B, seq_bucket=T, mb_bucket=mb, live=live)
         self.sync_stats.steps += 1
         rt.stats.steps += 1
         if self.fused:
@@ -679,6 +716,21 @@ class FlyingEngine:
         need = -(-(r.prompt_len + r.output_len) // cap)
         return need <= self.max_blocks
 
+    def live_readable(self) -> bool:
+        """Scheduler capability hook (§D8): can this backend carry
+        in-flight requests' KV across a rebind in place? The geometry
+        half (``PoolGeometry.live_readable`` per tag) is checked by the
+        scheduler; this half covers what the step programs implement —
+        the head-layout paged pool, no sliding window, non-recurrent,
+        non-enc-dec. Striped pools satisfy Eq. 3 universally but their
+        live read program is not implemented here (they fall back to
+        HARD/SOFT; the simulation backend models them as readable)."""
+        cfg = self.cfg
+        return (self.geom.layout == "head" and cfg.mla is None
+                and cfg.enc_dec is None
+                and cfg.family not in ("ssm", "hybrid")
+                and self.pool.window is None)
+
     def supports_mixed(self) -> bool:
         """Mixed steps cover the paged-attention serving path: recurrent
         states (SSM/hybrid) are batch-dense — a full-batch prefill pass
@@ -702,6 +754,14 @@ class FlyingEngine:
         rt = self._resolve(island)
         isl = rt.island
         assert self.fused, "mixed step requires fused sampling"
+        ents = [self.adaptors[r.engine_group].table[r.req_id]
+                for r in list(prefills) + list(decodes)]
+        if self._live_tags(ents, isl.merge) is not None:
+            # cross-tag segments in the tick (§D8): the fused program
+            # has no live variant — run the token-identical sequential
+            # prefill->decode pair for this transient phase instead
+            return (self.prefill(prefills, island, chunk_tokens)
+                    + self.decode(decodes, island))
         t0 = time.perf_counter()
         B = rt.B
         cap = self.geom.capacity(isl.merge)
@@ -713,8 +773,8 @@ class FlyingEngine:
                       for r in decodes)
         mb = max(self._mb_bucket(pre_blocks),
                  self._mb_bucket(-(-int(dec_len) // cap)))
-        pbatch, prows, final, T, mb = self._stage_prefill(rt, prefills,
-                                                          mb_min=mb)
+        pbatch, prows, final, T, mb, _ = self._stage_prefill(rt, prefills,
+                                                             mb_min=mb)
         c = self._decode_cache(rt, decodes, mb_min=mb)
         bufs, drows = c.bufs, c.rows
         tokens = self._stage_decode(rt, decodes, c)
@@ -759,16 +819,73 @@ class FlyingEngine:
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
+    # live cross-layout staging (§D8)
+    # ------------------------------------------------------------------
+    def _live_tags(self, entries, merge: int):
+        """Sorted tag tuple when any entry's KV spans segments beyond
+        the island's current merge; None selects the single-view fast
+        path (the seed-era staging, byte-identical)."""
+        tags = {s.tag for e in entries for s in e.segments}
+        if tags <= {merge}:
+            return None
+        tags.add(merge)
+        return tuple(sorted(tags))
+
+    def _seg_arrays(self, isl: Island, reqs: Sequence[Request], entries,
+                    rows: np.ndarray, B: int, tags, cur_len):
+        """Per-tag (block table, token count, owner offset) host arrays
+        for the live step. ``cur_len[i]`` is the current-tag segment's
+        token count contribution for entry i (decode: incl. the incoming
+        token; prefill: prior tokens only). Owner offsets are merge-axis
+        engine offsets of the tag-aligned group that wrote the segment —
+        buddy alignment makes them derivable from the request's lead
+        engine alone."""
+        m = isl.merge
+        out: Dict[str, np.ndarray] = {}
+        for t in tags:
+            per = []
+            for i, (r, e) in enumerate(zip(reqs, entries)):
+                segs = [j for j, s in enumerate(e.segments) if s.tag == t]
+                assert len(segs) <= 1, \
+                    (r.req_id, "duplicate tag segments", e.tags())
+                if not segs:
+                    per.append((i, [], 0, 0))
+                    continue
+                j = segs[0]
+                seg = e.segments[j]
+                ntok = cur_len[i] if t == m else e.seg_tokens(j)
+                g_lead = isl.start + ((r.engine_group - isl.start)
+                                      // m) * m
+                own = (r.engine_group // t) * t - g_lead
+                assert 0 <= own <= m - t, (r.req_id, t, own, m)
+                per.append((i, seg.ids, ntok, own))
+            mb_t = bucket_pow2(max([len(ids) for _, ids, _, _ in per] + [1]))
+            bt = np.zeros((B, mb_t), np.int32)
+            ln = np.zeros((B,), np.int32)
+            ow = np.zeros((B,), np.int32)
+            for i, ids, ntok, own in per:
+                row = rows[i]
+                bt[row, :len(ids)] = ids
+                ln[row] = ntok
+                ow[row] = own
+            out[f"lt_bt{t}"] = bt
+            out[f"lt_len{t}"] = ln
+            out[f"lt_own{t}"] = ow
+        return out
+
+    # ------------------------------------------------------------------
     def _decode_cache(self, rt: _IslandRT, reqs: Sequence[Request],
                       mb_min: int = 1) -> _DecodeCache:
         key = (rt.island, tuple(r.req_id for r in reqs))
         c = rt.steady
-        if c is not None and c.key == key:
+        if c is not None and c.key == key and c.live is None:
             self._decode_advance(c)
             # crossing an mb bucket boundary (pow2 of the max live
             # blocks, or a mixed step's shared-width floor) rebuilds the
             # cache against wider staging buffers; within a bucket the
-            # steady path is untouched
+            # steady path is untouched. Live (cross-tag) caches re-stage
+            # every step instead — their key is preserved so the device
+            # token ring still feeds back without a host round trip.
             need = max(self._mb_bucket(-(-int(c.lengths.max()) // c.cap)),
                        mb_min)
             if need == c.mb:
@@ -785,8 +902,12 @@ class FlyingEngine:
         entries = [self.adaptors[r.engine_group].table[r.req_id]
                    for r in reqs]
         cap = self.geom.capacity(isl.merge)
-        nblk = np.fromiter((len(e.block_ids) for e in entries), np.int64, n)
         lengths = np.fromiter((e.length for e in entries), np.int64, n)
+        live = self._live_tags(entries, isl.merge)
+        if live is not None:
+            return self._decode_build_live(rt, key, reqs, entries, rows,
+                                           lengths, live)
+        nblk = np.fromiter((len(e.block_ids) for e in entries), np.int64, n)
         mb = max(self._mb_bucket(-(-int(lengths.max()) // cap) if n else 1),
                  mb_min)
         bufs = self._bufs(("decode", isl, B, mb))
@@ -799,6 +920,49 @@ class FlyingEngine:
         row_reqs = tuple((int(row), r.req_id) for row, r in zip(rows, reqs))
         c = _DecodeCache(key, rows, row_reqs, entries, lengths, nblk,
                          cap, bufs, mb)
+        rt.steady = c
+        return c
+
+    def _decode_build_live(self, rt: _IslandRT, key, reqs, entries,
+                           rows: np.ndarray, lengths: np.ndarray,
+                           live) -> _DecodeCache:
+        """Stage a decode batch whose KV spans mode-tagged segments: the
+        incoming token's slot is segment-local against the CURRENT
+        segment (the scheduler retagged pending slots at the rebind),
+        and each tag gets its own (table, count, owner) row set. Fresh
+        arrays each step — the live phase lasts only until the riding
+        requests complete, and correctness beats incremental reuse
+        here."""
+        isl = rt.island
+        assert self.geom.layout == "head", \
+            "live cross-layout staging covers the head-layout pool"
+        B = rt.B
+        n = len(reqs)
+        cap = self.geom.capacity(isl.merge)
+        segs = [e.segments[-1] for e in entries]
+        for r, s in zip(reqs, segs):
+            assert s.tag == isl.merge, \
+                (r.req_id, "pending slot not retagged", s.tag, isl.merge)
+        seg_start = np.fromiter((s.start for s in segs), np.int64, n)
+        cur_len = (lengths - seg_start).astype(np.int64)
+        bufs = {
+            "toks": np.zeros((B, 1), np.int32),
+            "pos": np.zeros((B, 1), np.int32),
+            "slots": np.full((B,), -1, np.int32),
+        }
+        p = lengths - 1                     # absolute (rope) positions
+        p_loc = p - seg_start               # segment-local write offset
+        bufs["pos"][rows, 0] = p
+        slot_blk = np.fromiter(
+            (s.ids[int(pl) // cap] for s, pl in zip(segs, p_loc)),
+            np.int64, n)
+        bufs["slots"][rows] = slot_blk * cap + p_loc % cap
+        bufs.update(self._seg_arrays(isl, reqs, entries, rows, B, live,
+                                     cur_len))
+        row_reqs = tuple((int(row), r.req_id) for row, r in zip(rows, reqs))
+        nblk = np.fromiter((len(e.block_ids) for e in entries), np.int64, n)
+        c = _DecodeCache(key, rows, row_reqs, entries, lengths, nblk,
+                         cap, bufs, 0, live=live)
         rt.steady = c
         return c
 
@@ -827,11 +991,14 @@ class FlyingEngine:
         ``mixed`` — the mixed-vs-sequential token-identity contract
         rides on the two paths staging identically."""
         bufs, rows, cap = c.bufs, c.rows, c.cap
-        p = c.lengths - 1
-        bufs["pos"][rows, 0] = p
-        bufs["slots"][rows] = \
-            bufs["btab"][rows, p // cap].astype(np.int64) * cap + p % cap
-        bufs["ctxl"][rows] = c.lengths
+        if c.live is None:
+            p = c.lengths - 1
+            bufs["pos"][rows, 0] = p
+            bufs["slots"][rows] = \
+                bufs["btab"][rows, p // cap].astype(np.int64) * cap + p % cap
+            bufs["ctxl"][rows] = c.lengths
+        # live caches staged positions/slots at build time (segment-local
+        # slot math); only the token feed-back remains per step
         return self._tokens_in(rt, reqs, rows, c.key, bufs["toks"])
 
     def decode(self, reqs: Sequence[Request],
@@ -846,15 +1013,22 @@ class FlyingEngine:
             "tokens": tokens,
             "positions": self._h2d(bufs["pos"]),
             "slots": self._h2d(bufs["slots"]),
-            "block_table": self._h2d(bufs["btab"]),
-            "context_len": self._h2d(bufs["ctxl"]),
         }
+        if c.live is None:
+            batch["block_table"] = self._h2d(bufs["btab"])
+            batch["context_len"] = self._h2d(bufs["ctxl"])
+        else:
+            # no total context length: the live program masks entirely
+            # from the per-tag segment counts
+            for k in bufs:
+                if k.startswith("lt_"):
+                    batch[k] = self._h2d(bufs[k])
         seeds = self._seeds(B)
         if seeds is not None:
             batch["sample_seeds"] = seeds
         runner = self.pool.runner(
             rt.island, "decode", sampled=self.fused, donate=self.donate,
-            batch_bucket=B, seq_bucket=1, mb_bucket=c.mb)
+            batch_bucket=B, seq_bucket=1, mb_bucket=c.mb, live=c.live)
         self.sync_stats.steps += 1
         rt.stats.steps += 1
         if self.fused:

@@ -10,15 +10,33 @@ stored FLAT ``[num_blocks, block_elems]``; each compiled mode *views*
 them ``[num_blocks, B(m), kvh_dev/m, hd]`` — a metadata reshape, no
 reallocation, no migration.
 
-The host side is the ``LogicalTable``: request -> (mode_tag, block_ids,
-length). Blocks are only ever read under the mode that wrote them
-(Soft-Preempt recomputes, Hard-Preempt suspends DP state untouched — the
-same guarantee the paper relies on). Allocation is a free-list over
-physical block ids shared by all modes.
+The host side is the ``LogicalTable``: request -> ordered *segments* of
+``(mode_tag, block_ids)``. Each segment's blocks are written under one
+mode and FROZEN when the request crosses a rebind: new tokens append
+into a fresh segment under the current mode's capacity. The per-segment
+contract (§4.2 extended, docs/PERF.md §D8): a block is *written* only
+under the mode that opened its segment, but it may be *read* under any
+later mode by a TP group that contains the segment's owner group — each
+owner computes partial attention over the head slice it physically
+holds and the serve step LSE-combines partials across the group. That
+is what lets the LIVE transition strategy carry running decodes across
+a rebind with zero pauses and zero recomputation; Hard-Preempt
+(suspend, blocks resident) and Soft-Preempt (recompute) remain the
+fallbacks for architectures whose layout is not tag-readable
+(``PoolGeometry.live_readable``).
+
+Allocation is a free-list over physical block ids PER ENGINE. When
+engines are bound into a TP group (``bind_group``), a group allocation
+takes ids that are free on EVERY member — the same id then addresses
+the written block on each member's pool — and releases return each
+segment's ids to the adaptors that owned them at write time, so blocks
+held by another engine's in-flight (or paused) requests are never
+clobbered by the merged group's writes.
 
 Arch caveats (DESIGN.md §5): MLA's compressed cache and MQA's single KV
 head cannot head-shard, so their view (and capacity) is mode-invariant —
-``capacity_scales`` reports whether Eq. 3 applies.
+``capacity_scales`` reports whether Eq. 3 applies, ``live_readable``
+whether cross-tag reads are possible at all.
 """
 from __future__ import annotations
 
@@ -105,6 +123,29 @@ class PoolGeometry:
             return True
         return self.head_split(merge) == merge
 
+    def live_readable(self, merge: int) -> bool:
+        """Whether KV written under OTHER tags can be read in place by a
+        merge-m group (per-segment partial attention + LSE combine,
+        docs/PERF.md §D8). Head layout needs clean nested head sharding:
+        both q and kv heads must divide the engine tile exactly and
+        split ``merge`` further ways (capacity_scales' regime) — MLA's
+        compressed cache and MQA's single KV head never qualify, so
+        those keep the HARD/SOFT fallbacks. Striped pools satisfy Eq. 3
+        universally (tokens carry ALL heads); real-execution backends
+        additionally gate on what their step programs implement."""
+        if self.layout == "striped":
+            return True
+        cfg = self.cfg
+        if cfg.mla is not None or cfg.num_kv_heads <= 0:
+            return False
+        st = self.storage_tp
+        kv, H = cfg.num_kv_heads, cfg.num_heads
+        if kv % st or H % st:
+            return False
+        if not self.capacity_scales(merge):
+            return False
+        return (kv // st) % merge == 0 and (H // st) % merge == 0
+
     def view_shape(self, merge: int) -> Tuple[int, ...]:
         """Logical per-device pool view for a compiled mode."""
         cfg = self.cfg
@@ -146,85 +187,276 @@ def ragged_arange(lens: np.ndarray) -> np.ndarray:
 
 
 @dataclass
+class Segment:
+    """One mode's contiguous run of a request's tokens.
+
+    ``start`` is the first global token position the segment covers;
+    its token count is ``entry.length - start`` for the live (last)
+    segment and ``next_segment.start - start`` for frozen ones. The
+    last block of a frozen segment may be partially filled — crossing a
+    rebind freezes it; new tokens go to a fresh segment under the new
+    capacity. ``owners`` are the adaptors whose physical pools hold the
+    segment's blocks (the TP-group members at write time) — releases
+    return ids to exactly these."""
+    tag: int
+    start: int
+    ids: List[int] = field(default_factory=list)
+    owners: Tuple["KVCacheAdaptor", ...] = ()
+
+
+@dataclass
 class RequestKV:
-    mode_tag: int                  # merge the blocks were written under
-    block_ids: List[int] = field(default_factory=list)
-    length: int = 0                # tokens currently cached
+    mode_tag: int                  # tag of the CURRENT (write) segment
+    segments: List[Segment] = field(default_factory=list)
+    length: int = 0                # tokens currently cached (all segments)
     _ids_np: Optional[np.ndarray] = field(default=None, repr=False,
                                           compare=False)
 
+    @property
+    def block_ids(self) -> List[int]:
+        """All block ids in segment (write) order — the seed-era flat
+        view; position math over it is only valid single-segment."""
+        return [b for s in self.segments for b in s.ids]
+
+    @property
+    def max_tag(self) -> int:
+        return max((s.tag for s in self.segments), default=self.mode_tag)
+
+    def tags(self) -> Tuple[int, ...]:
+        return tuple(s.tag for s in self.segments)
+
+    def seg_tokens(self, i: int) -> int:
+        """Token count of segment i (frozen segments end where the next
+        one starts)."""
+        segs = self.segments
+        end = segs[i + 1].start if i + 1 < len(segs) else self.length
+        return end - segs[i].start
+
     def ids_np(self) -> np.ndarray:
-        """Cached int32 view of block_ids (rebuilt only on growth) —
-        the vectorized batch builders index this without re-converting
-        the Python list every step."""
-        if self._ids_np is None or len(self._ids_np) != len(self.block_ids):
-            self._ids_np = np.asarray(self.block_ids, np.int32)
+        """Cached int32 view of the concatenated block ids (rebuilt only
+        on growth) — the vectorized batch builders index this without
+        re-converting the Python lists every step."""
+        n = sum(len(s.ids) for s in self.segments)
+        if self._ids_np is None or len(self._ids_np) != n:
+            if n:
+                self._ids_np = np.concatenate(
+                    [np.asarray(s.ids, np.int32) for s in self.segments
+                     if s.ids])
+            else:
+                self._ids_np = np.empty((0,), np.int32)
         return self._ids_np
 
 
 class KVCacheAdaptor:
     """Constant-time metadata remapping across DP/TP layouts (paper §4.2.2).
 
-    One physical free list; per-request logical entries carry the mode tag
-    and effective block capacity. ``switch_mode`` is O(1): it only changes
-    the capacity used for FUTURE allocations.
+    One physical free list PER ENGINE; per-request logical entries carry
+    ordered (mode_tag, block_ids) segments. ``switch_mode`` is O(1): it
+    only changes the capacity used for FUTURE allocations (a fresh
+    segment opens on the next append). ``bind_group`` scopes allocation
+    to a TP group: ids are taken only when free on every member and
+    handed back to the members that owned them at write time.
     """
 
     def __init__(self, geom: PoolGeometry):
         self.geom = geom
-        # last block reserved as the parked-write scratch slot
+        # last block reserved as the parked-write scratch slot. ``free``
+        # is a candidate stack that may hold STALE entries (ids another
+        # group member allocated); ``_free_set`` is the truth — pops
+        # validate against it lazily, so cross-member removal never
+        # rewrites the list.
         self.free: List[int] = list(range(geom.num_blocks - 1))
+        self._free_set = set(self.free)
         self.table: Dict[str, RequestKV] = {}
         self.merge = 1
+        self.group: Tuple["KVCacheAdaptor", ...] = (self,)
+        # ids free on EVERY group member, maintained incrementally (one
+        # shared set object per group; None while ungrouped). Exact and
+        # O(members) per block take/return — never re-intersected on the
+        # admission path.
+        self._group_free_set: Optional[set] = None
 
     # -- O(1) mode switch --------------------------------------------------
     def switch_mode(self, merge: int) -> None:
         self.merge = merge
+
+    def bind_group(self, members: Sequence["KVCacheAdaptor"]) -> None:
+        """Set the TP-group allocation domain: future takes draw ids free
+        on EVERY member (each member's pool physically receives the
+        group's writes at that id). All members of one group must be
+        bound with the same list (``bind_fleet`` does) so they share one
+        group-free set object."""
+        self.group = tuple(members) if members else (self,)
+        self._group_free_set = None
 
     @property
     def capacity(self) -> int:
         return self.geom.capacity(self.merge)
 
     # -- allocation ----------------------------------------------------------
-    def free_blocks(self) -> int:
-        return len(self.free)
+    def _group_free(self) -> set:
+        """The shared ids-free-on-every-member set (computed once per
+        rebind, maintained incrementally by takes/returns)."""
+        if self._group_free_set is None:
+            shared = set.intersection(*(a._free_set for a in self.group))
+            for a in self.group:
+                a._group_free_set = shared
+        return self._group_free_set
 
-    def can_allocate(self, n_tokens: int, merge: Optional[int] = None) -> bool:
-        cap = self.geom.capacity(merge if merge is not None else self.merge)
-        return len(self.free) >= -(-n_tokens // cap)
+    def free_blocks(self) -> int:
+        """Blocks allocatable by THIS adaptor's group: free here AND on
+        every bound member."""
+        if len(self.group) <= 1:
+            return len(self._free_set)
+        return len(self._group_free())
+
+    def can_allocate(self, n_tokens: int, merge: Optional[int] = None,
+                     req_id: Optional[str] = None) -> bool:
+        """Mirror of ``allocate``'s need math: counts the blocks (and the
+        free space in the last partial block) a ``req_id``'s live
+        segment already holds, so resumed/chunked requests are admitted
+        exactly when ``allocate`` would succeed."""
+        m = merge if merge is not None else self.merge
+        cap = self.geom.capacity(m)
+        have = 0
+        seg_tok = n_tokens
+        if req_id is not None:
+            e = self.table.get(req_id)
+            if e and e.segments and e.segments[-1].tag == m:
+                seg = e.segments[-1]
+                have = len(seg.ids)
+                seg_tok = (e.length - seg.start) + n_tokens
+        need = -(-seg_tok // cap) - have
+        return self.free_blocks() >= max(need, 0)
+
+    def _take_blocks(self, n: int) -> List[int]:
+        """Pop n ids free on every group member; remove them from every
+        member's free set. Raises MemoryError without side effects when
+        fewer than n are group-free."""
+        if n <= 0:
+            return []
+        grouped = len(self.group) > 1
+        usable = self._group_free() if grouped else self._free_set
+        if len(usable) < n:
+            raise MemoryError("KV pool exhausted"
+                              + (" across TP group" if grouped else ""))
+        got: List[int] = []
+        skipped: List[int] = []
+        while self.free and len(got) < n:
+            b = self.free.pop()
+            if b not in self._free_set:
+                continue                     # stale entry: lazily dropped
+            if b in usable:
+                got.append(b)
+            else:
+                skipped.append(b)
+        self.free.extend(reversed(skipped))
+        assert len(got) == n, "free stack lost track of the free set"
+        self._free_set.difference_update(got)
+        if grouped:
+            usable.difference_update(got)
+            for a in self.group:
+                if a is not self:
+                    a._free_set.difference_update(got)
+        return got
+
+    def _give_back(self, ids: Sequence[int]) -> None:
+        for b in ids:
+            if b not in self._free_set:
+                self._free_set.add(b)
+                self.free.append(b)
+                if len(self.group) > 1:
+                    shared = self._group_free()
+                    if all(b in a._free_set for a in self.group):
+                        shared.add(b)
+        # candidate-stack compaction: stale entries accumulate under
+        # cross-member churn; rebuild deterministically when they
+        # dominate (sorted -> identical pop order for adaptors that saw
+        # identical op sequences)
+        if len(self.free) > 2 * len(self._free_set) + 64:
+            self.free = sorted(self._free_set)
 
     def allocate(self, req_id: str, n_tokens: int) -> RequestKV:
-        """Alg. 1 step 4: KVCacheMgr.Allocate(req, B_req, H_req)."""
+        """Alg. 1 step 4: KVCacheMgr.Allocate(req, B_req, H_req). Appends
+        always target the CURRENT mode's segment — a tag change freezes
+        the old segment in place (its blocks stay readable via the
+        per-segment contract) and opens a new one."""
         cap = self.capacity
         entry = self.table.get(req_id)
         if entry is None:
             entry = RequestKV(mode_tag=self.merge)
             self.table[req_id] = entry
-        assert entry.mode_tag == self.merge, \
-            "blocks must be read under the mode that wrote them"
-        need = -(-(entry.length + n_tokens) // cap) - len(entry.block_ids)
-        if need > len(self.free):
-            raise MemoryError(f"KV pool exhausted for {req_id}")
-        for _ in range(max(need, 0)):
-            entry.block_ids.append(self.free.pop())
+        seg = entry.segments[-1] if entry.segments else None
+        if seg is None or seg.tag != self.merge:
+            seg = Segment(tag=self.merge, start=entry.length,
+                          owners=self.group)
+            entry.segments.append(seg)
+            entry.mode_tag = self.merge
+        seg_tok = entry.length - seg.start
+        need = -(-(seg_tok + n_tokens) // cap) - len(seg.ids)
+        if need > 0:
+            try:
+                new = self._take_blocks(need)
+            except MemoryError:
+                raise MemoryError(f"KV pool exhausted for {req_id}")
+            seg.ids.extend(new)
+            entry._ids_np = None
         return entry
 
     def append_slots(self, req_id: str, n_tokens: int) -> np.ndarray:
         """Flat device slots for the next n_tokens (allocating as needed).
-        Slot = block_id * capacity + offset, matching the mode view."""
+        Slot = block_id * capacity + segment-local offset, matching the
+        current mode's view (writes only ever target the live segment)."""
         entry = self.allocate(req_id, n_tokens)
+        seg = entry.segments[-1]
         cap = self.capacity
-        pos = entry.length + np.arange(n_tokens)
-        blocks = entry.ids_np()[pos // cap]
-        slots = blocks.astype(np.int64) * cap + pos % cap
+        pos = (entry.length - seg.start) + np.arange(n_tokens)
+        ids = np.asarray(seg.ids, np.int64)
+        slots = ids[pos // cap] * cap + pos % cap
         entry.length += n_tokens
         return slots.astype(np.int32)
 
+    def retag_tail(self, req_id: str) -> None:
+        """Re-issue the request's single pending (allocated, not yet
+        written) token slot under the CURRENT mode: roll the last token
+        back out of the frozen segment (freeing a block that becomes
+        surplus) and append it to a fresh current-tag segment. Called by
+        the scheduler for requests riding a LIVE rebind — their next
+        decode write must land under the new view. Raises MemoryError if
+        the new segment's first block cannot be taken."""
+        entry = self.table.get(req_id)
+        if not entry or not entry.segments:
+            return
+        seg = entry.segments[-1]
+        if seg.tag == self.merge:
+            return
+        assert entry.length > seg.start, "no pending token to retag"
+        entry.length -= 1
+        cap_old = self.geom.capacity(seg.tag)
+        seg_tok = entry.length - seg.start
+        need = -(-seg_tok // cap_old)
+        owners = seg.owners or (self,)
+        while len(seg.ids) > need:
+            b = seg.ids.pop()
+            for a in owners:
+                a._give_back((b,))
+        if seg_tok == 0 and not seg.ids:
+            entry.segments.pop()
+            if entry.segments:
+                entry.mode_tag = entry.segments[-1].tag
+        entry._ids_np = None
+        self.append_slots(req_id, 1)
+
     def block_table(self, req_id: str, max_blocks: int) -> np.ndarray:
         ids = self.table[req_id].ids_np()
+        if len(ids) > max_blocks:
+            raise ValueError(
+                f"request {req_id} holds {len(ids)} blocks > block-table "
+                f"width {max_blocks}; attention would silently drop the "
+                f"context tail (clamp belongs in the engine's admission "
+                f"gate, not here)")
         out = np.zeros((max_blocks,), np.int32)
-        k = min(len(ids), max_blocks)
-        out[:k] = ids[:k]
+        out[:len(ids)] = ids
         return out
 
     # -- vectorized batch builders (§Perf D3) -----------------------------
@@ -241,7 +473,9 @@ class KVCacheAdaptor:
         buffer (rows are fully overwritten). One vectorized scatter over
         the flattened (request, block) index space — the same
         padded-table trick as ``append_slots_batch`` — instead of a
-        Python loop per request."""
+        Python loop per request. Raises ValueError (naming the request)
+        if any block list exceeds the table width: truncation silently
+        drops the context tail."""
         n = len(req_ids)
         if out is None:
             out = np.zeros((n, max_blocks), np.int32)
@@ -250,12 +484,18 @@ class KVCacheAdaptor:
         tab = self.table
         ids = [tab[r].ids_np() for r in req_ids]
         lens = np.fromiter((len(a) for a in ids), np.int64, n)
+        over = lens > max_blocks
+        if over.any():
+            i = int(np.argmax(over))
+            raise ValueError(
+                f"request {req_ids[i]} holds {int(lens[i])} blocks > "
+                f"block-table width {max_blocks}; attention would "
+                f"silently drop the context tail")
         if n and int(lens.sum()):
             rowcat = np.repeat(np.arange(n), lens)
             offcat = ragged_arange(lens)
-            keep = offcat < max_blocks
             cat = np.concatenate(ids)
-            out[rowcat[keep], offcat[keep]] = cat[keep]
+            out[rowcat, offcat] = cat
         return out[:n]
 
     def append_slots_batch(self, req_ids: Sequence[str],
@@ -265,8 +505,8 @@ class KVCacheAdaptor:
         request, allocating blocks as needed. Row i equals the
         per-request ``append_slots(req_ids[i], n_tokens[i])`` under the
         same allocation order; the slot math is a single vectorized pass
-        over the flattened (request, offset) index space instead of a
-        Python loop per request."""
+        over the flattened (request, offset) index space — segment-local
+        positions against each entry's live segment."""
         n = len(req_ids)
         if np.isscalar(n_tokens):
             lens = np.full((n,), int(n_tokens), np.int64)
@@ -274,19 +514,22 @@ class KVCacheAdaptor:
             lens = np.asarray(n_tokens, np.int64)
         entries = [self.allocate(rid, int(t))
                    for rid, t in zip(req_ids, lens)]
+        segs = [e.segments[-1] for e in entries]
         cap = self.capacity
         T = int(lens.max()) if n else 0
         out = np.full((n, T), -1, np.int64)
         total = int(lens.sum())
         if total:
-            starts = np.fromiter((e.length for e in entries), np.int64, n)
+            starts = np.fromiter(
+                (e.length - s.start for e, s in zip(entries, segs)),
+                np.int64, n)
             rowcat = np.repeat(np.arange(n), lens)
             offcat = ragged_arange(lens)
             poscat = np.repeat(starts, lens) + offcat
-            maxb = max(len(e.block_ids) for e in entries)
+            maxb = max(len(s.ids) for s in segs)
             btab = np.zeros((n, maxb), np.int64)
-            for i, e in enumerate(entries):
-                btab[i, : len(e.block_ids)] = e.ids_np()
+            for i, s in enumerate(segs):
+                btab[i, : len(s.ids)] = s.ids
             blockcat = btab[rowcat, poscat // cap]
             out[rowcat, offcat] = blockcat * cap + poscat % cap
         for e, t in zip(entries, lens):
@@ -296,15 +539,19 @@ class KVCacheAdaptor:
     def release(self, req_id: str) -> None:
         entry = self.table.pop(req_id, None)
         if entry:
-            self.free.extend(entry.block_ids)
+            for seg in entry.segments:
+                for a in (seg.owners or (self,)):
+                    a._give_back(seg.ids)
 
     def drop_for_recompute(self, req_id: str) -> int:
-        """Soft-Preempt: discard DP-layout blocks; the request re-prefills
-        under the TP layout. Returns tokens to recompute."""
+        """Soft-Preempt: discard the request's blocks; it re-prefills
+        under the new layout. Returns tokens to recompute."""
         entry = self.table.pop(req_id, None)
         if not entry:
             return 0
-        self.free.extend(entry.block_ids)
+        for seg in entry.segments:
+            for a in (seg.owners or (self,)):
+                a._give_back(seg.ids)
         return entry.length
 
     # -- capacity accounting (paper §6.4 Table 2) -----------------------------
@@ -315,3 +562,15 @@ class KVCacheAdaptor:
         # merging m engines gives the request m engines' pools: blocks are
         # symmetric per device, so the request sees num_blocks * B(m)
         return (self.geom.num_blocks - 1) * cap
+
+
+def bind_fleet(adaptors: Sequence[KVCacheAdaptor], layout) -> None:
+    """Wire every engine's adaptor to its layout group: switch the
+    allocation capacity AND the group allocation domain (shared helper
+    for the engine and the scheduler-owned adaptor path)."""
+    for isl in layout.islands:
+        for lead in isl.lead_engines():
+            members = [adaptors[e] for e in range(lead, lead + isl.merge)]
+            for a in members:
+                a.switch_mode(isl.merge)
+                a.bind_group(members)

@@ -35,6 +35,11 @@ class FlyingPolicy:
     priority_merge: int = 0
     dwell_s: float = 2.0           # min seconds between load-driven switches
     islands: bool = True           # False: uniform fleet-wide modes only
+    # paired with the LIVE transition strategy (§D8): merge-UP rebinds
+    # carry running decodes across for free, so the idle-time latency
+    # pre-bind no longer needs the fleet to be empty — only merge-downs
+    # (dissolve) still pause, and those keep the usual pressure gates.
+    live: bool = False
 
     def __post_init__(self):
         self._last_switch_t = -1e9
@@ -50,8 +55,10 @@ class FlyingPolicy:
         load = {lead: 0 for isl in sched.layout.islands
                 for lead in isl.lead_engines()}
         for r in sched.running:
-            if r.engine_group in load:
-                load[r.engine_group] += 1
+            if r.engine_group < 0:
+                continue
+            isl = sched.layout.island_of(r.engine_group)
+            load[isl.group_of(r.engine_group)[0]] += 1
         return min(load, key=lambda g: (load[g],
                                         -sched._adaptor(g).free_blocks()))
 
@@ -78,8 +85,8 @@ class FlyingPolicy:
         for r in sched.running + sched.waiting:
             if r.engine_group >= 0:
                 isl = layout.island_of(r.engine_group)
-                for e in range(r.engine_group,
-                               min(r.engine_group + isl.merge, len(occ))):
+                lead, gm = isl.group_of(r.engine_group)
+                for e in range(lead, min(lead + gm, len(occ))):
                     occ[e] += 1
         start = min(range(0, layout.total_engines, m),
                     key=lambda s: (sum(occ[s:s + m]), s))
@@ -145,20 +152,33 @@ class FlyingPolicy:
 
         # UC1: load adaptation with a time dwell (avoid flapping: each
         # switch pauses/reshapes in-flight state on the islands it
-        # touches)
-        if sched.now - self._last_switch_t < self.dwell_s:
-            return layout
+        # touches). Merge-UPS under the LIVE strategy carry in-flight
+        # decodes across for free (§D8), so they skip the dwell;
+        # merge-downs (dissolve) still pause their tagged requests and
+        # keep the full hysteresis.
         depth = len([r for r in arrived if r.state == "queued"])
         target = layout
         if depth >= max(2 * layout.n_groups, 4):
             # drain mode: dissolve TP islands to DP IN PLACE (already-DP
             # islands keep their boundaries — and their windows)
             target = layout.dissolved()
-        elif depth == 0 and not running and not sched.paused:
+        elif depth == 0 and not running and not sched.paused \
+                and not self.live:
             # fully idle: pre-bind a wide TP group so the next arrival
             # gets TP latency (nothing is live, so the fleet-wide
-            # reshape pauses no one)
+            # reshape pauses no one). Under LIVE the pre-bind is
+            # pointless: binding up WHEN the latency request arrives is
+            # free (in-flight work rides across), while an anticipatory
+            # wide bind tags everything admitted meanwhile with a wide
+            # mode that the next dissolve must pause.
             target = FleetLayout.uniform(plan, widest)
-        if target != layout:
-            self._last_switch_t = sched.now
+        if target == layout:
+            return layout
+        up = all(target.island_of(e).group_of(e)[1]
+                 >= layout.island_of(e).group_of(e)[1]
+                 for e in layout.changed_engines(target))
+        if sched.now - self._last_switch_t < self.dwell_s \
+                and not (self.live and up):
+            return layout
+        self._last_switch_t = sched.now
         return target

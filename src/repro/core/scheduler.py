@@ -30,6 +30,15 @@ incompatible; everything else keeps serving through the rebind.
     requests PAUSE — their blocks stay physically resident with their
     mode tag (KV Cache Adaptor §4.2) and resume without recomputation.
     Requests outside the reshaped islands never pause.
+  - LIVE (docs/PERF.md §D8): the §4.2 claim made whole — requests whose
+    KV is tag-readable under the new layout (merge-up into a group
+    containing every segment's owner group, on a live-readable
+    architecture) are NOT incompatible at all: they keep decoding
+    straight through the rebind, their frozen segments read in place by
+    per-segment partial attention + an LSE combine, their pending write
+    slot retagged to the new mode. Merge-downs and non-readable
+    architectures (MLA/MQA head layouts, recurrent states, sliding
+    windows) degrade per request to the HARD behavior.
 
 Invariants (paper §5.3): all engines in a TP group observe the same
 request order (single worklist per island), and transitions happen only
@@ -41,13 +50,14 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple, Union
 
-from repro.core.kv_adaptor import KVCacheAdaptor, PoolGeometry
+from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry, bind_fleet)
 from repro.core.modes import FleetLayout, Island, ParallelPlan
 from repro.core.task_pool import Request, TaskPool
 
 SEQUENTIAL = "sequential"
 SOFT = "soft"
 HARD = "hard"
+LIVE = "live"
 
 
 class Backend(Protocol):
@@ -154,13 +164,17 @@ class DynamicScheduler:
         else:
             self.adaptors = [KVCacheAdaptor(geom)
                              for _ in range(plan.dp_engines * plan.pods)]
-            for e, a in enumerate(self.adaptors):
-                a.switch_mode(self.layout.merge_of(e))
+            bind_fleet(self.adaptors, self.layout)
         self.policy = policy
         self.log: List[StepLog] = []
         self.switches = 0
         self._switched_tick = False
         self._busy_islands: set = set()
+        # disruption accounting (§D8 acceptance): how many requests each
+        # transition class touched. LIVE's whole point is that its
+        # rebinds add nothing here.
+        self.preempt_stats = {"paused": 0, "recomputed_tokens": 0,
+                              "live_riders": 0}
 
     # ------------------------------------------------------------------
     @property
@@ -185,6 +199,7 @@ class DynamicScheduler:
     def run(self, until_drained: bool = True, max_steps: int = 2_000_000,
             t_end: Optional[float] = None) -> None:
         steps = 0
+        seen_wedges: set = set()
         while steps < max_steps:
             steps += 1
             progressed = self.step()
@@ -193,13 +208,45 @@ class DynamicScheduler:
             if not progressed:
                 nxt = self.pool.next_arrival()
                 if nxt is None:
-                    if until_drained and not (self.waiting or self.running
-                                              or self.paused):
-                        break
                     if not (self.waiting or self.running or self.paused):
                         break
-                    # nothing runnable but work exists -> should not happen
-                    break
+                    if not until_drained:
+                        break  # caller accepts undrained work
+                    # cycle guard: two paused requests whose resume
+                    # carves conflict can ping-pong (each forced resume
+                    # re-pauses the other). Revisiting an already-seen
+                    # (paused set, layout) state means no net progress —
+                    # raise instead of livelocking to max_steps.
+                    state = (frozenset(r.req_id for r in self.paused),
+                             self.layout.shapes())
+                    if state in seen_wedges:
+                        raise RuntimeError(
+                            f"scheduler wedged in a resume cycle: "
+                            f"{len(self.paused)} paused requests' carves "
+                            f"conflict (layout {self.layout.describe()})")
+                    seen_wedges.add(state)
+                    # nothing runnable but work exists: a paused request
+                    # can be stranded when its opportunistic resume stays
+                    # blocked forever (e.g. no future arrivals ever make
+                    # the busy-island gate open). Force the minimal
+                    # resume transition directly; if even that cannot
+                    # make progress the scheduler is genuinely wedged —
+                    # surface it instead of silently returning with
+                    # requests stranded in 'paused'.
+                    forced = False
+                    for r in list(self.paused):
+                        if self._transition(self._resume_layout(r)) \
+                                and r not in self.paused:
+                            forced = True
+                            break
+                    if not forced:
+                        raise RuntimeError(
+                            f"scheduler wedged with no runnable work: "
+                            f"{len(self.waiting)} waiting, "
+                            f"{len(self.running)} running, "
+                            f"{len(self.paused)} paused "
+                            f"(layout {self.layout.describe()})")
+                    continue
                 self.now = max(self.now, nxt)
         # async backends: surface in-flight generated tokens (the only
         # other drain points are rebind safe boundaries, handled by the
@@ -272,24 +319,80 @@ class DynamicScheduler:
 
     def _resume_layout(self, r: Request) -> FleetLayout:
         """The minimal transition that brings a paused request's group
-        back: carve its (lead, merge) island out of the live layout —
-        the rest of the fleet keeps its shape."""
+        back: carve the island of its widest tag's OWNER group out of
+        the live layout — the rest of the fleet keeps its shape. (The
+        owner lead is the tag-aligned engine at or below the request's
+        recorded lead: a live-ridden request's lead need not be aligned
+        to tags it acquired later.)"""
         m = self._tag(r)
-        return self.layout.carve(r.engine_group, m, m)
+        start = (r.engine_group // m) * m if r.engine_group >= 0 else 0
+        return self.layout.carve(start, m, m)
+
+    def _live_ok(self, r: Request, target: FleetLayout) -> bool:
+        """Can this request's KV keep being read in place under
+        ``target`` (§D8)? Requires (a) a backend whose step programs
+        implement cross-tag reads, (b) the new group to CONTAIN every
+        segment's owner group — with buddy alignment that reduces to
+        new_merge >= max segment tag (aligned pow2 groups around one
+        engine nest) — and (c) a tag-readable geometry for every tag
+        involved."""
+        blr = getattr(self.backend, "live_readable", None)
+        if callable(blr) and not blr():
+            return False
+        g = r.engine_group
+        if g < 0:
+            return True          # not placed: nothing to carry
+        entry = self._entry(r)
+        if entry is None or not entry.segments:
+            return True
+        m_new = target.island_of(g).group_of(g)[1]
+        if entry.max_tag > m_new:
+            return False         # merge-down: owners outside the group
+        return all(self.geom.live_readable(t)
+                   for t in set(entry.tags()) | {m_new})
 
     def _incompatible(self, target: FleetLayout) -> List[Request]:
         """Requests whose KV layout the transition would reshape:
         running decodes + partially prefilled admissions on engines
         whose group assignment changes. Everything else rides through
-        the rebind untouched — the partial-transition contract."""
+        the rebind untouched — the partial-transition contract. Under
+        LIVE, tag-readable requests drop out of the set entirely (for a
+        readable architecture a merge-up returns EMPTY): their frozen
+        segments stay readable in place, so the rebind owes them
+        nothing — no pause, no recompute."""
         changed = self.layout.changed_engines(target)
         bound = list(self.running) + [r for r in self.waiting
                                       if r.prefilled > 0]
-        return [r for r in bound if r.engine_group in changed]
+        hit = [r for r in bound if r.engine_group in changed]
+        if self.cfg.strategy == LIVE:
+            return [r for r in hit if not self._live_ok(r, target)]
+        return hit
 
     def _transition(self, target: FleetLayout) -> bool:
         strat = self.cfg.strategy
         incompatible = self._incompatible(target)
+        if strat == LIVE:
+            # riders: running decodes on reshaped engines that stay
+            # compatible by reading their segments in place. Their one
+            # pending (allocated, unwritten) slot must re-issue under
+            # the new mode's view before the next launch.
+            changed = self.layout.changed_engines(target)
+            riders = [r for r in self.running
+                      if r.engine_group in changed
+                      and r not in incompatible]
+            for r in incompatible:   # non-readable stragglers: HARD
+                r.state = "paused"
+                self.paused.append(r)
+                self.preempt_stats["paused"] += 1
+                if r in self.running:
+                    self.running.remove(r)
+                if r in self.waiting:
+                    self.waiting.remove(r)
+            ok = self._apply_switch(target)
+            self.preempt_stats["live_riders"] += len(riders)
+            for r in riders:
+                self._retag_or_recompute(r)
+            return ok
         if strat == SEQUENTIAL:
             self.pending_layout = target
             if incompatible:
@@ -309,7 +412,8 @@ class DynamicScheduler:
                 if r.state == "spec_dp":
                     g = r.engine_group
                     if g >= 0:
-                        self._adaptor(g).drop_for_recompute(r.req_id)
+                        self.preempt_stats["recomputed_tokens"] += \
+                            self._adaptor(g).drop_for_recompute(r.req_id)
                         r.prefilled = 0
                         r.state = "queued"
                         if r in self.running:
@@ -321,11 +425,29 @@ class DynamicScheduler:
         for r in incompatible:
             r.state = "paused"
             self.paused.append(r)
+            self.preempt_stats["paused"] += 1
             if r in self.running:
                 self.running.remove(r)
             if r in self.waiting:
                 self.waiting.remove(r)
         return self._apply_switch(target)
+
+    def _retag_or_recompute(self, r: Request) -> None:
+        """Re-issue a rider's pending slot under the (new) current mode;
+        if even one group-free block cannot be taken, degrade that one
+        request to the SOFT behavior (drop + re-prefill) rather than
+        wedging the rebind."""
+        ad = self._adaptor(r.engine_group)
+        try:
+            ad.retag_tail(r.req_id)
+        except MemoryError:
+            self.preempt_stats["recomputed_tokens"] += \
+                ad.drop_for_recompute(r.req_id)
+            r.prefilled = 0
+            r.state = "queued"
+            if r in self.running:
+                self.running.remove(r)
+                self.waiting.insert(0, r)
 
     def _apply_switch(self, target: FleetLayout) -> bool:
         dt = self._backend_rebind(target)
@@ -349,11 +471,13 @@ class DynamicScheduler:
         self.pending_layout = None
         self.switches += 1
         self._switched_tick = True  # consumed by the next StepLog entry
-        for e, a in enumerate(self.adaptors):
-            a.switch_mode(target.merge_of(e))
+        bind_fleet(self.adaptors, target)
         # resume paused requests whose group exists again under the new
         # layout — no recomputation needed (KV Cache Adaptor keeps the
-        # blocks valid under the mode tag that wrote them)
+        # blocks valid under the mode tags that wrote them). Under LIVE
+        # a WIDER group also qualifies (its step programs read the old
+        # segments in place); the pending slot then re-issues under the
+        # group's mode.
         back = [r for r in self.paused if self._group_restored(r, target)]
         for r in back:
             self.paused.remove(r)
@@ -363,6 +487,8 @@ class DynamicScheduler:
             else:
                 r.state = "running"
                 self.running.append(r)
+                if self.cfg.strategy == LIVE:
+                    self._retag_or_recompute(r)
         return True
 
     def _backend_rebind(self, target: FleetLayout) -> float:
@@ -374,21 +500,29 @@ class DynamicScheduler:
                                    target.uniform_merge or target.max_merge)
 
     def _group_restored(self, r: Request, layout: FleetLayout) -> bool:
-        """A paused request resumes when its lead engine again leads a
-        group of exactly its mode tag's merge."""
+        """A paused request resumes when its engine's group can read its
+        KV again: exactly its widest tag's merge with its lead leading
+        (the HARD contract) — or, under LIVE on a readable architecture,
+        any group at least that wide (cross-tag reads make the wider
+        group equivalent)."""
         g = r.engine_group
         if g < 0:
             return True
         m = self._tag(r)
         isl = layout.island_of(g)
+        if self.cfg.strategy == LIVE and self._live_ok(r, layout):
+            return isl.group_of(g)[1] >= m
         return isl.merge == m and (g - isl.start) % m == 0
 
     def _tag(self, r: Request) -> int:
+        """The merge a request's KV needs to be readable: the widest
+        segment tag (owner groups nest, so the widest owner group
+        contains them all)."""
         g = r.engine_group
         if g < 0:
             return self.layout.merge_of(0)
         entry = self._entry(r)
-        return entry.mode_tag if entry else self.layout.merge_of(g)
+        return entry.max_tag if entry else self.layout.merge_of(g)
 
     def _entry(self, r: Request):
         g = r.engine_group
@@ -420,7 +554,10 @@ class DynamicScheduler:
                  for lead in isl.lead_engines()]
         group_load: Dict[int, int] = {lead: 0 for _, lead in leads}
         for r in self.running:
-            group_load[r.engine_group] += 1
+            # live riders keep their ADMISSION lead, which need not lead
+            # their current (wider) group — account them where they run
+            isl_r = layout.island_of(r.engine_group)
+            group_load[isl_r.group_of(r.engine_group)[0]] += 1
         mem_blocked: set = set()   # leads waiting on their own pool
         reserved: Dict[int, int] = {}   # blocks promised this tick
         fits = getattr(self.backend, "request_fits", None)
@@ -439,7 +576,8 @@ class DynamicScheduler:
                 ent = ad.table.get(r.req_id)
                 have = ent.length if ent else 0
                 if ad.can_allocate(
-                        max(r.prompt_len + r.output_len - have, 0)):
+                        max(r.prompt_len + r.output_len - have, 0),
+                        req_id=r.req_id):
                     admit.append(r)
                 else:
                     mem_blocked.add(r.engine_group)

@@ -97,8 +97,19 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
                      use_kernel: Optional[bool] = None,
                      chunked: bool = False,
                      sample: Optional[Tuple[float, int]] = None,
+                     live: Optional[Tuple[int, ...]] = None,
                      mesh=None):
     """Build the shard_map step fn for (arch, mode, phase).
+
+    ``live`` (docs/PERF.md §D8) compiles the cross-layout read variant:
+    a sorted tuple of the mode tags whose block segments the batch may
+    contain (always including the current merge). The batch then
+    carries, per tag t, ``lt_bt{t}`` [B, mb_t] segment block tables,
+    ``lt_len{t}`` [B] segment token counts, and ``lt_own{t}`` [B]
+    merge-axis owner offsets; attention runs per-segment partial sweeps
+    plus one LSE-combine collective over the merge axis instead of the
+    single-view sweep. ``live=None`` (or the single current tag) is the
+    unchanged fast path.
 
     ``mesh`` overrides the default ``mode_mesh(mode)``: island runners
     pass an AbstractMesh of the island SHAPE, so one traced program
@@ -143,6 +154,22 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
 
     striped = geom.layout == "striped"
     impl = {None: "auto", True: "force", False: "ref"}[use_kernel]
+
+    if live is not None:
+        assert phase in ("decode", "prefill"), \
+            "live cross-layout reads cover the paged decode/prefill " \
+            "steps (mixed ticks fall back to the sequential pair)"
+        assert not striped and cfg.enc_dec is None and cfg.mla is None, \
+            "live reads need the head-layout paged pool"
+        assert window is None, "live reads do not support sliding windows"
+        assert merge in live and all(t <= merge for t in live), live
+        for t in live:
+            assert geom.live_readable(t) and geom.live_readable(merge), \
+                (t, merge, "architecture is not tag-readable (§D8)")
+
+    def live_segs(batch):
+        return tuple((t, batch[f"lt_bt{t}"], batch[f"lt_len{t}"],
+                      batch[f"lt_own{t}"]) for t in live)
 
     def mixed_step(params, states, batch):
         """One launch per scheduler tick (§Perf D6): chunked prefill for
@@ -197,7 +224,17 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
 
     def step(params, states, batch):
         sts = _view_states(model, states, geom, merge, flat_to_view=True)
-        if phase == "decode" and striped:
+        if live is not None and phase == "decode":
+            from repro.models.cache import LiveDecodeBackend
+            backend = LiveDecodeBackend(
+                ctx=ctx, slots=batch["slots"], segs=live_segs(batch),
+                merge=merge, block_base=geom.block_base, impl=impl)
+        elif live is not None:
+            from repro.models.cache import LivePrefillBackend
+            backend = LivePrefillBackend(
+                ctx=ctx, slots=batch["slots"], segs=live_segs(batch),
+                merge=merge, block_base=geom.block_base, impl=impl)
+        elif phase == "decode" and striped:
             from repro.models.striped import StripedDecodeBackend
             backend = StripedDecodeBackend(
                 ctx=ctx, block_table=batch["block_table"],

@@ -26,7 +26,7 @@ and the GSPMD training path.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -117,6 +117,12 @@ class TPContext:
     def local_units(self, n: int) -> int:
         return n // self.compute_shards(n)
 
+    def stored_units(self, n: int) -> int:
+        """Units of an n-unit dim in this device's STORAGE shard (the
+        merge-1-equivalent frame): what the live cross-layout read path
+        computes in before slicing back to the mode's compute shard."""
+        return n // self.stored_shards(n)
+
     # ---- the view primitive (paper Eq. 1) ------------------------------
     def activate(self, w: jax.Array, dim: int, n: int) -> jax.Array:
         """Produce this device's compute slice of a weight whose ``dim``
@@ -203,25 +209,30 @@ class TPContext:
         return self._rank_over(self.tp_axes) if self.tp_axes else 0
 
     def lse_merge(self, acc: jax.Array, l: jax.Array, m: jax.Array,
-                  wire_dtype=None):
-        """Merge online-softmax partials across sequence stripes:
-        acc [..,H,D] fp32 unnormalized, l [..,H] denominators, m [..,H]
-        maxima -> full attention output [..,H,D]. ``wire_dtype`` (e.g.
-        bf16) halves the psum bytes (§Perf C1): with w <= 1 the summand
-        is max-normalized, so bf16's 8-bit exponent loses only mantissa
-        bits relative to the f32 result."""
-        if not self.tp_axes or self.tp == 1:
+                  wire_dtype=None, axes: Optional[Tuple[str, ...]] = None):
+        """Merge online-softmax partials across devices: acc [..,H,D]
+        fp32 unnormalized, l [..,H] denominators, m [..,H] maxima ->
+        full attention output [..,H,D]. ``axes`` defaults to the full TP
+        group (striped/context-parallel merge); the live cross-layout
+        read path passes ``view_axes`` only — partials for the SAME
+        stored head live across the merge axis, while other
+        ('ed','model') positions hold different heads entirely.
+        ``wire_dtype`` (e.g. bf16) halves the psum bytes (§Perf C1):
+        with w <= 1 the summand is max-normalized, so bf16's 8-bit
+        exponent loses only mantissa bits relative to the f32 result."""
+        axes = self.tp_axes if axes is None else axes
+        if not axes or self.tp == 1:
             return acc / jnp.maximum(l[..., None], 1e-30)
-        m_g = lax.pmax(m, self.tp_axes)
+        m_g = lax.pmax(m, axes)
         w = jnp.exp(m - m_g)
         num_in = acc * w[..., None]
         if wire_dtype is not None:
             num_in = num_in.astype(wire_dtype)
-        num = lax.psum(num_in, self.tp_axes)
+        num = lax.psum(num_in, axes)
         if wire_dtype is not None:
             num = lax.optimization_barrier(num)  # keep the wire narrow
         num = num.astype(jnp.float32)
-        den = lax.psum(l * w, self.tp_axes)
+        den = lax.psum(l * w, axes)
         return num / jnp.maximum(den[..., None], 1e-30)
 
     # ---- collectives ----------------------------------------------------

@@ -117,9 +117,15 @@ def flash_prefill_kernel(q, k, v, *, window: Optional[int] = None,
 # skipped via @pl.when, so per-chunk cost tracks live context
 # (mb-bucket-bounded), not the engine's worst-case table width.
 
-def _paged_kernel(tables_ref, prior_ref, q_ref, k_ref, v_ref, out_ref,
-                  m_ref, l_ref, acc_ref, *, page: int, blk_q: int, mb: int,
-                  window: Optional[int], softmax_scale: Optional[float]):
+def _paged_kernel(tables_ref, prior_ref, q_ref, k_ref, v_ref,
+                  *out_and_scratch, page: int, blk_q: int, mb: int,
+                  window: Optional[int], softmax_scale: Optional[float],
+                  prior_only: bool, return_lse: bool):
+    if return_lse:
+        out_ref, lse_ref, m_ref, l_ref, acc_ref = out_and_scratch
+    else:
+        out_ref, m_ref, l_ref, acc_ref = out_and_scratch
+        lse_ref = None
     b = pl.program_id(0)
     i = pl.program_id(1)
     j = pl.program_id(2)
@@ -134,7 +140,14 @@ def _paged_kernel(tables_ref, prior_ref, q_ref, k_ref, v_ref, out_ref,
     start = j * page
     q_lo = prior + i * blk_q          # absolute position of first q row
     q_hi = q_lo + blk_q - 1
-    live = start <= q_hi              # causal: no keys beyond the q block
+    if prior_only:
+        # frozen-segment sweep (§D8 live reads): every chunk row attends
+        # exactly the segment's [0, prior) tokens — no causal coupling
+        # between the segment-local key positions and the (current-
+        # segment-relative) query positions
+        live = start < prior
+    else:
+        live = start <= q_hi          # causal: no keys beyond the q block
     if window is not None:
         live &= start + page > q_lo - window
 
@@ -156,7 +169,10 @@ def _paged_kernel(tables_ref, prior_ref, q_ref, k_ref, v_ref, out_ref,
             jnp.int32, (KV, rep * bq, page), 1) % bq
         kpos = start + jax.lax.broadcasted_iota(
             jnp.int32, (KV, rep * bq, page), 2)
-        mask = kpos <= qpos
+        if prior_only:
+            mask = kpos < prior
+        else:
+            mask = kpos <= qpos
         if window is not None:
             mask &= kpos > qpos - window
         s = jnp.where(mask, s, NEG_INF)
@@ -177,16 +193,30 @@ def _paged_kernel(tables_ref, prior_ref, q_ref, k_ref, v_ref, out_ref,
     def _fin():
         out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
         out_ref[0] = out.reshape(out_ref.shape[1:]).astype(out_ref.dtype)
+        if lse_ref is not None:
+            l = l_ref[...]
+            lse = jnp.where(l > 0.0,
+                            m_ref[...] + jnp.log(jnp.maximum(l, 1e-30)),
+                            NEG_INF)
+            lse_ref[0] = lse.reshape(lse_ref.shape[1:])
 
 
 def paged_flash_prefill_kernel(q, k_pool, v_pool, block_table, prior_len, *,
                                window: Optional[int] = None,
                                softmax_scale: Optional[float] = None,
-                               blk_q: int = 128, interpret: bool = False):
+                               blk_q: int = 128, prior_only: bool = False,
+                               return_lse: bool = False,
+                               interpret: bool = False):
     """q [B,H,T,hd] (T a multiple of blk_q; absolute position of q[:, :, i]
     is prior_len[b] + i); pools [nblk,page,KV,hd] already holding the
     chunk's rows; block_table [B,MB] int32; prior_len [B] int32 ->
-    [B,H,T,hd]."""
+    [B,H,T,hd].
+
+    ``prior_only`` sweeps a FROZEN block segment (§D8 live reads): every
+    query row attends exactly the segment's first ``prior_len[b]``
+    tokens, with no causal term — the segment belongs entirely to the
+    past. ``return_lse`` adds the per-(head, row) log-sum-exp
+    [B,H,T] fp32 for LSE-merging this sweep with other segments'."""
     B, H, T, hd = q.shape
     nblk, page, KV, _ = k_pool.shape
     MB = block_table.shape[1]
@@ -194,8 +224,18 @@ def paged_flash_prefill_kernel(q, k_pool, v_pool, block_table, prior_len, *,
     n_q = T // blk_q
 
     kern = functools.partial(_paged_kernel, page=page, blk_q=blk_q, mb=MB,
-                             window=window, softmax_scale=softmax_scale)
-    return pl.pallas_call(
+                             window=window, softmax_scale=softmax_scale,
+                             prior_only=prior_only, return_lse=return_lse)
+    out_specs = pl.BlockSpec((1, H, blk_q, hd),
+                             lambda b, i, j, t, p: (b, 0, i, 0))
+    out_shape = jax.ShapeDtypeStruct((B, H, T, hd), q.dtype)
+    if return_lse:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, H * blk_q),
+                                  lambda b, i, j, t, p: (b, i))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B, n_q * H * blk_q), jnp.float32)]
+    out = pl.pallas_call(
         kern,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,  # block_table, prior_len
@@ -208,14 +248,19 @@ def paged_flash_prefill_kernel(q, k_pool, v_pool, block_table, prior_len, *,
                 pl.BlockSpec((1, page, KV, hd),
                              lambda b, i, j, t, p: (t[b, j], 0, 0, 0)),
             ],
-            out_specs=pl.BlockSpec((1, H, blk_q, hd),
-                                   lambda b, i, j, t, p: (b, 0, i, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((H * blk_q, 1), jnp.float32),
                 pltpu.VMEM((H * blk_q, 1), jnp.float32),
                 pltpu.VMEM((H * blk_q, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, H, T, hd), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(block_table, prior_len, q, k_pool, v_pool)
+    if return_lse:
+        # [B, n_q*H*blk_q] laid out (q_block, head, row) -> [B, H, T]
+        lse = out[1].reshape(B, n_q, H, blk_q)
+        lse = jnp.moveaxis(lse, 2, 1).reshape(B, H, T)
+        return out[0], lse
+    return out

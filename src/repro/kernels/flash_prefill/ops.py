@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.kernels.flash_prefill.kernel import (flash_prefill_kernel,
                                                 paged_flash_prefill_kernel)
 from repro.kernels.flash_prefill.ref import (flash_prefill_ref,
-                                             paged_flash_prefill_ref)
+                                             paged_flash_prefill_ref,
+                                             paged_prefill_sweep_with_lse_ref)
 
 
 def _interpret() -> bool:
@@ -102,5 +103,42 @@ def paged_flash_prefill(q, k_new, v_new, k_pool, v_pool, slots, block_table,
     return jnp.moveaxis(out[:, :, :T], 2, 1), k_pool, v_pool
 
 
+def paged_prefill_sweep_with_lse(q, k_pool, v_pool, block_table, prior_len,
+                                 *, prior_only: bool = False,
+                                 window: Optional[int] = None,
+                                 softmax_scale: Optional[float] = None,
+                                 blk_q: int = 128,
+                                 impl: Optional[str] = None):
+    """Partial chunked-prefill attention over ONE block segment with LSE
+    (§D8 live cross-layout reads). q [B,T,H,hd]; the segment's pages in
+    ``block_table``; ``prior_len`` [B] = tokens of the segment each
+    chunk row may attend (for ``prior_only`` segments: the frozen
+    segment's token count; otherwise the causal current-segment sweep).
+    Returns (out [B,T,H,hd] fp32, lse [B,H,T] fp32); rows/heads with
+    nothing to attend get lse = -inf so an LSE merge ignores them. No
+    append — the live backend writes the chunk separately under the
+    current view."""
+    from repro.kernels.paged_attention.ops import resolve_impl
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return paged_prefill_sweep_with_lse_ref(
+            q, k_pool, v_pool, block_table, prior_len,
+            prior_only=prior_only, window=window,
+            softmax_scale=softmax_scale)
+    B, T, H, hd = q.shape
+    qt = jnp.moveaxis(q, 1, 2).astype(jnp.float32)   # [B,H,T,hd]
+    blk_eff = min(blk_q, T)
+    pad = (-T) % blk_eff
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out, lse = paged_flash_prefill_kernel(
+        qt, k_pool, v_pool, block_table.astype(jnp.int32),
+        prior_len.astype(jnp.int32), window=window,
+        softmax_scale=softmax_scale, blk_q=blk_eff, prior_only=prior_only,
+        return_lse=True, interpret=(impl == "interpret"))
+    return (jnp.moveaxis(out[:, :, :T], 2, 1).astype(jnp.float32),
+            lse[:, :, :T])
+
+
 __all__ = ["flash_prefill", "flash_prefill_ref", "paged_flash_prefill",
-           "paged_flash_prefill_ref"]
+           "paged_flash_prefill_ref", "paged_prefill_sweep_with_lse"]

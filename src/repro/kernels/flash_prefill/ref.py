@@ -39,6 +39,50 @@ def paged_flash_prefill_ref(q, k_pool, v_pool, block_table, prior_len, *,
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_prefill_sweep_with_lse_ref(q, k_pool, v_pool, block_table,
+                                     prior_len, *, prior_only: bool = False,
+                                     window: Optional[int] = None,
+                                     softmax_scale: Optional[float] = None):
+    """Oracle for the LSE-returning prefill sweeps (§D8 live reads).
+    Returns (out [B,T,H,hd] fp32, lse [B,H,T] fp32). ``prior_only``
+    makes every chunk row attend exactly the segment's first
+    ``prior_len[b]`` tokens with no causal term (a frozen old-tag
+    segment lies entirely in the past); otherwise the mask is the
+    causal chunked-prefill sweep. Rows with nothing to attend get
+    lse = NEG_INF and a zero output."""
+    B, T, H, hd = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    MB = block_table.shape[1]
+    k = k_pool[jnp.maximum(block_table, 0)].reshape(B, MB * page, KV, hd)
+    v = v_pool[jnp.maximum(block_table, 0)].reshape(B, MB * page, KV, hd)
+    rep = H // KV
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    qg = q.reshape(B, T, KV, rep, hd)
+    s = jnp.einsum("btgrd,bkgd->bgrtk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = s.reshape(B, H, T, MB * page)
+    qpos = prior_len[:, None] + jnp.arange(T)[None, :]      # [B,T]
+    kpos = jnp.arange(MB * page)[None, None, :]             # [1,1,MBp]
+    if prior_only:
+        mask = jnp.broadcast_to(kpos < prior_len[:, None, None],
+                                (B, T, MB * page))
+    else:
+        mask = kpos <= qpos[:, :, None]
+    if window is not None:
+        mask &= kpos > qpos[:, :, None] - window
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(mask[:, None], jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bgrtk,bkgd->btgrd",
+                     p.reshape(B, KV, rep, T, -1),
+                     v.astype(jnp.float32)).reshape(B, T, H, hd)
+    out = out / jnp.maximum(jnp.moveaxis(l, 1, -1)[..., None]
+                            .reshape(B, T, H, 1), 1e-30)
+    lse = jnp.where(l > 0.0, m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+    return out, lse
+
+
 def flash_prefill_ref(q, k, v, *, window: Optional[int] = None):
     """q [B,T,H,hd]; k/v [B,T,KV,hd]; causal (+ window) -> [B,T,H,hd]."""
     B, T, H, hd = q.shape

@@ -29,9 +29,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 
 
-def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, out_ref,
-            m_ref, l_ref, acc_ref, *, page: int, window: Optional[int],
-            mb: int, softmax_scale: Optional[float]):
+def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, *out_and_scratch,
+            page: int, window: Optional[int], mb: int,
+            softmax_scale: Optional[float], return_lse: bool):
+    if return_lse:
+        out_ref, lse_ref, m_ref, l_ref, acc_ref = out_and_scratch
+    else:
+        out_ref, m_ref, l_ref, acc_ref = out_and_scratch
+        lse_ref = None
     b = pl.program_id(0)
     j = pl.program_id(1)
     ctx = ctx_ref[b]
@@ -81,23 +86,41 @@ def _kernel(tables_ref, ctx_ref, q_ref, k_ref, v_ref, out_ref,
     def _fin():
         out_ref[0] = (acc_ref[...] /
                       jnp.maximum(l_ref[...], 1e-30)).astype(out_ref.dtype)
+        if lse_ref is not None:
+            l = l_ref[...]
+            lse = jnp.where(l > 0.0,
+                            m_ref[...] + jnp.log(jnp.maximum(l, 1e-30)),
+                            NEG_INF)
+            lse_ref[0] = lse.reshape(lse_ref.shape[1:])
 
 
 def paged_attention_kernel(q, k_pool, v_pool, block_table, context_len, *,
                            window: Optional[int] = None,
                            softmax_scale: Optional[float] = None,
+                           return_lse: bool = False,
                            interpret: bool = False):
     """q [B,H,hd]; pools [nblk,page,KV,hd]; block_table [B,MB] int32;
     context_len [B] int32 -> [B,H,hd]. ``softmax_scale`` overrides the
-    default 1/sqrt(hd) (absorbed-MLA callers pre-scale q and pass 1.0)."""
+    default 1/sqrt(hd) (absorbed-MLA callers pre-scale q and pass 1.0).
+    ``return_lse`` additionally returns the per-head log-sum-exp [B,H]
+    (fp32; NEG_INF for rows with no live keys) so callers can LSE-merge
+    this sweep with partials over other block segments (§D8)."""
     B, H, hd = q.shape
     nblk, page, KV, _ = k_pool.shape
     MB = block_table.shape[1]
 
     grid = (B, MB)
     kern = functools.partial(_kernel, page=page, window=window, mb=MB,
-                             softmax_scale=softmax_scale)
+                             softmax_scale=softmax_scale,
+                             return_lse=return_lse)
     flat_k = k_pool  # [nblk, page, KV, hd]
+
+    out_specs = pl.BlockSpec((1, H, hd), lambda b, j, t, c: (b, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, H, hd), q.dtype)
+    if return_lse:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, H), lambda b, j, t, c: (b, 0))]
+        out_shape = [out_shape, jax.ShapeDtypeStruct((B, H), jnp.float32)]
 
     out = pl.pallas_call(
         kern,
@@ -111,16 +134,18 @@ def paged_attention_kernel(q, k_pool, v_pool, block_table, context_len, *,
                 pl.BlockSpec((1, page, KV, hd),
                              lambda b, j, t, c: (t[b, j], 0, 0, 0)),
             ],
-            out_specs=pl.BlockSpec((1, H, hd), lambda b, j, t, c: (b, 0, 0)),
+            out_specs=out_specs,
             scratch_shapes=[
                 pltpu.VMEM((H, 1), jnp.float32),
                 pltpu.VMEM((H, 1), jnp.float32),
                 pltpu.VMEM((H, hd), jnp.float32),
             ],
         ),
-        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(block_table, context_len, q, flat_k, v_pool)
+    if return_lse:
+        return out[0], out[1]
     return out
 
 

@@ -34,6 +34,7 @@ from repro.kernels.paged_attention.kernel import (paged_append_token_kernel,
                                                   paged_attention_kernel)
 from repro.kernels.paged_attention.ref import (paged_append_token_ref,
                                                paged_attention_ref,
+                                               paged_attention_with_lse_ref,
                                                paged_mla_attention_ref)
 
 IMPLS = ("kernel", "interpret", "ref")
@@ -70,6 +71,28 @@ def paged_attention(q, k_pool, v_pool, block_table, context_len, *,
         q, k_pool, v_pool, block_table.astype(jnp.int32),
         context_len.astype(jnp.int32), window=window,
         softmax_scale=softmax_scale, interpret=(impl == "interpret"))
+
+
+def paged_attention_with_lse(q, k_pool, v_pool, block_table, context_len, *,
+                             window: Optional[int] = None,
+                             softmax_scale: Optional[float] = None,
+                             impl: Optional[str] = None):
+    """Partial paged decode attention over ONE block segment: returns
+    (out [B,H,hd] fp32, lse [B,H] fp32) so the live cross-layout read
+    path (§D8) can merge sweeps over differently-tagged segments — and
+    across TP ranks — with a flash-style LSE combine. Rows with
+    ``context_len == 0`` contribute nothing (lse = -inf)."""
+    impl = resolve_impl(impl)
+    if impl == "ref":
+        return paged_attention_with_lse_ref(
+            q, k_pool, v_pool, block_table, context_len, window=window,
+            softmax_scale=softmax_scale)
+    out, lse = paged_attention_kernel(
+        q.astype(jnp.float32), k_pool, v_pool,
+        block_table.astype(jnp.int32), context_len.astype(jnp.int32),
+        window=window, softmax_scale=softmax_scale, return_lse=True,
+        interpret=(impl == "interpret"))
+    return out.astype(jnp.float32), lse
 
 
 def paged_attention_decode(q, k_new, v_new, k_pool, v_pool, slots,
@@ -136,5 +159,5 @@ def paged_mla_attention_decode(q_cat, entry_new, pool, slots, block_table,
 
 
 __all__ = ["paged_attention", "paged_attention_decode",
-           "paged_mla_attention_decode", "paged_attention_ref",
-           "resolve_impl"]
+           "paged_attention_with_lse", "paged_mla_attention_decode",
+           "paged_attention_ref", "resolve_impl"]

@@ -39,6 +39,42 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_attention_with_lse_ref(q, k_pool, v_pool, block_table,
+                                 context_len, *,
+                                 window: Optional[int] = None,
+                                 softmax_scale: Optional[float] = None):
+    """Like ``paged_attention_ref`` but returns (out [B,H,hd] fp32,
+    lse [B,H] fp32) for LSE-merging with other block segments (§D8).
+    Grouped GQA math — never materializes repeated copies of the
+    gathered context. Rows with no live keys get lse = NEG_INF, out 0."""
+    B, H, hd = q.shape
+    page, KV = k_pool.shape[1], k_pool.shape[2]
+    k = k_pool[jnp.maximum(block_table, 0)]
+    v = v_pool[jnp.maximum(block_table, 0)]
+    MB = block_table.shape[1]
+    k = k.reshape(B, MB * page, KV, hd)
+    v = v.reshape(B, MB * page, KV, hd)
+    rep = H // KV
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    qg = q.reshape(B, KV, rep, hd)
+    s = jnp.einsum("bgrd,btgd->bgrt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = s.reshape(B, H, MB * page)
+    pos = jnp.arange(MB * page)[None, None, :]
+    mask = pos < context_len[:, None, None]
+    if window is not None:
+        mask &= pos >= context_len[:, None, None] - window
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bgrt,btgd->bgrd", p.reshape(B, KV, rep, -1),
+                     v.astype(jnp.float32)).reshape(B, H, hd)
+    out = out / jnp.maximum(l[..., None], 1e-30)
+    lse = jnp.where(l > 0.0, m + jnp.log(jnp.maximum(l, 1e-30)), NEG_INF)
+    return out, lse
+
+
 def paged_append_token_ref(pools, vals, slots):
     """Oracle for ``paged_append_token_kernel``: write each request's
     new-token row at its flat slot (negative slots park to the reserved

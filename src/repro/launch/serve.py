@@ -25,7 +25,7 @@ def main():
     ap.add_argument("--real", action="store_true")
     ap.add_argument("--requests", type=int, default=500)
     ap.add_argument("--strategy", default="hard",
-                    choices=["hard", "soft", "sequential"])
+                    choices=["hard", "soft", "sequential", "live"])
     ap.add_argument("--fixed-merge", type=int, default=0,
                     help="pin the mode (static baseline); 0 = dynamic")
     ap.add_argument("--switch", default="flying",
@@ -108,6 +108,7 @@ def main():
     print(f"  median TPOT   : {m.median_tpot * 1e3:9.2f} ms")
     print(f"  peak tput     : {m.peak_throughput:9.0f} tok/s")
     print(f"  mode switches : {sched.switches}")
+    print(f"  preempts      : {sched.preempt_stats}")
 
 
 if __name__ == "__main__":

@@ -289,3 +289,221 @@ class DecodeBackend:
                             self.slots[:, None])
         ctx = paged_gather(pool, self.block_table)
         return ctx, self.context_len, (pool,)
+
+
+# ---------------------------------------------------------------------------
+# live cross-layout backends (docs/PERF.md §D8)
+# ---------------------------------------------------------------------------
+#
+# A request riding a LIVE rebind holds block SEGMENTS written under
+# earlier merges. A tag-t segment's per-device head slices physically
+# live on the t engines of its owner group (a buddy-aligned subset of
+# the current group), under the tag-t pool view [nb, B_base*t, kvh/t,
+# hd]. The live backends therefore compute attention in the STORED head
+# frame (the full storage-shard head set; ``gqa_attention`` skips the
+# merge-view weight slice when ``backend.stored_frame``): each device
+# sweeps every segment it owns — under that segment's view, for the
+# stored-head sub-slice its old view rank held — producing partial
+# (out, lse) pairs; partials merge locally across segments, then across
+# the merge axis with one flash-style LSE collective
+# (``TPContext.lse_merge(axes=view_axes)``), and the merged stored-frame
+# output is sliced back to the current mode's local heads for the
+# unchanged output projection. New tokens are always written under the
+# CURRENT view (the host retags pending slots at rebind), so writes
+# never cross layouts — only reads do. No block moves, no reallocation.
+
+def _seg_scatter(out_t, lse_t, v_old, ok, H_st, head_axis):
+    """Scatter one segment sweep's (out, lse) — computed for the Hq_t
+    stored-head sub-slice at per-row offset ``v_old*Hq_t`` — into the
+    full stored-head frame. Absent heads get a zero output and -inf lse
+    so the LSE merges ignore them."""
+    Hq_t = out_t.shape[head_axis]
+    jpos = jnp.arange(H_st)[None, :] - v_old[:, None] * Hq_t     # [B,H_st]
+    okj = ok[:, None] & (jpos >= 0) & (jpos < Hq_t)
+    src = jnp.clip(jpos, 0, Hq_t - 1)
+    if head_axis == 1:        # decode: out [B,Hq,hd], lse [B,Hq]
+        o = jnp.take_along_axis(out_t, src[:, :, None], axis=1)
+        o = jnp.where(okj[:, :, None], o, 0.0)
+        l = jnp.take_along_axis(lse_t, src, axis=1)
+        l = jnp.where(okj, l, NEG_INF)
+    else:                     # prefill: out [B,T,Hq,hd], lse [B,Hq,T]
+        o = jnp.take_along_axis(out_t, src[:, None, :, None], axis=2)
+        o = jnp.where(okj[:, None, :, None], o, 0.0)
+        l = jnp.take_along_axis(lse_t, src[:, :, None], axis=1)
+        l = jnp.where(okj[:, :, None], l, NEG_INF)
+    return o, l
+
+
+def _merge_sweeps(outs_lses):
+    """Local (out, lse) -> (m, weights, l) combine across segment
+    sweeps, ready for the cross-rank ``lse_merge``. Each normalized
+    sweep is an (acc=out, l=1, m=lse) partial; heads absent from every
+    local sweep keep m = -inf and weight out to zero in the
+    collective."""
+    ms = jnp.stack([l for _, l in outs_lses])              # [S,...]
+    m = jnp.max(ms, axis=0)
+    ws = jnp.exp(ms - m[None])
+    ws = jnp.where(ms <= NEG_INF / 2, 0.0, ws)
+    l = jnp.sum(ws, axis=0)
+    return m, ws, l
+
+
+@dataclass(frozen=True)
+class LiveDecodeBackend:
+    """Decode over a request set whose KV spans mode-tagged segments.
+
+    ``segs``: one static entry per tag — (tag, block_table [B, mb_t],
+    seg_len [B], owner [B]) where ``seg_len`` is the segment's token
+    count per row (0 = row has no such segment) and ``owner`` the
+    merge-axis index where the segment's owner group starts within the
+    current group. The current tag's entry carries the live segment
+    (its count INCLUDES the new token, appended before the sweep) —
+    all masking derives from the per-tag counts, so no separate total
+    context length is carried."""
+    ctx: "TPContext"
+    slots: jax.Array          # [B] current-view write slot of the new token
+    segs: Tuple[Tuple[int, jax.Array, jax.Array, jax.Array], ...]
+    merge: int                # current mode (the state view's tag)
+    block_base: int           # B_base: tokens/block at merge=1
+    window: Optional[int] = None
+    impl: Optional[str] = None
+    stored_frame = True       # gqa_attention: project q/k/v un-view-sliced
+
+    def attend(self, state, q, k, v, *, positions, window=None):
+        from repro.kernels.paged_attention import ops as pa_ops
+        assert (window or self.window) is None, \
+            "live cross-layout reads do not support sliding windows " \
+            "(absolute positions are lost in segment-local sweeps)"
+        k_pool, v_pool = state                  # current-tag view
+        B = q.shape[0]
+        H_st, hd = q.shape[2], q.shape[3]
+        KV_st = k.shape[2]
+        m = self.merge
+        nb = k_pool.shape[0]
+        v_idx = self.ctx.view_rank()
+        scale = hd ** -0.5
+
+        # write the new token under the CURRENT view: this device's
+        # current-mode head slice of the stored-frame projection
+        kv_loc = KV_st // m
+        k_new = lax.dynamic_slice_in_dim(k[:, 0], v_idx * kv_loc, kv_loc, 1)
+        v_new = lax.dynamic_slice_in_dim(v[:, 0], v_idx * kv_loc, kv_loc, 1)
+        if pa_ops.resolve_impl(self.impl) == "ref":
+            k_pool = paged_append(k_pool, k_new[:, None], self.slots[:, None])
+            v_pool = paged_append(v_pool, v_new[:, None], self.slots[:, None])
+        else:
+            from repro.kernels.paged_attention.kernel import \
+                paged_append_token_kernel
+            interp = pa_ops.resolve_impl(self.impl) == "interpret"
+            k_pool, v_pool = paged_append_token_kernel(
+                (k_pool, v_pool), (k_new, v_new), self.slots,
+                interpret=interp)
+
+        flat_k = k_pool.reshape(nb, -1)
+        flat_v = v_pool.reshape(nb, -1)
+        q_st = q[:, 0]                           # [B, H_st, hd]
+        partials = []
+        for tag, bt_t, len_t, own_t in self.segs:
+            cap_t = self.block_base * tag
+            kvh_t = KV_st // tag
+            Hq_t = H_st // tag
+            view_k = flat_k.reshape(nb, cap_t, kvh_t, hd)
+            view_v = flat_v.reshape(nb, cap_t, kvh_t, hd)
+            ok = (own_t <= v_idx) & (v_idx < own_t + tag)       # [B]
+            eff = jnp.where(ok, len_t, 0).astype(jnp.int32)
+            v_old = jnp.clip(v_idx - own_t, 0, tag - 1)
+            idx = v_old[:, None] * Hq_t + jnp.arange(Hq_t)[None, :]
+            q_sub = jnp.take_along_axis(q_st, idx[:, :, None], axis=1)
+            out_t, lse_t = pa_ops.paged_attention_with_lse(
+                q_sub, view_k, view_v, bt_t, eff, softmax_scale=scale,
+                impl=self.impl)
+            partials.append(_seg_scatter(out_t, lse_t, v_old,
+                                         ok & (len_t > 0), H_st, 1))
+        m_loc, ws, l_loc = _merge_sweeps(partials)
+        acc = sum(o * w[..., None] for (o, _), w in zip(partials, ws))
+        out_full = self.ctx.lse_merge(acc, l_loc, m_loc,
+                                      axes=self.ctx.view_axes)  # [B,H_st,hd]
+        h_loc = H_st // m
+        out = lax.dynamic_slice_in_dim(out_full, v_idx * h_loc, h_loc, 1)
+        return out[:, None].astype(q.dtype), (k_pool, v_pool)
+
+
+@dataclass(frozen=True)
+class LivePrefillBackend:
+    """Chunked prefill whose PRIOR context spans mode-tagged segments.
+
+    The chunk itself always lands in the current-tag segment: its pages
+    are in the current tag's ``segs`` table and the causal in-chunk +
+    current-segment-prior attention is one sweep (``seg_len`` for the
+    current tag = prior tokens within that segment, NOT counting the
+    chunk). Frozen older segments get prior-only sweeps."""
+    ctx: "TPContext"
+    slots: jax.Array          # [B,T] current-view chunk write slots
+    segs: Tuple[Tuple[int, jax.Array, jax.Array, jax.Array], ...]
+    merge: int
+    block_base: int
+    window: Optional[int] = None
+    impl: Optional[str] = None
+    stored_frame = True
+
+    def attend(self, state, q, k, v, *, positions, window=None):
+        from repro.kernels.flash_prefill import ops as fp_ops
+        from repro.kernels.paged_attention import ops as pa_ops
+        assert (window or self.window) is None, \
+            "live cross-layout reads do not support sliding windows"
+        k_pool, v_pool = state
+        B, T, H_st, hd = q.shape
+        KV_st = k.shape[2]
+        m = self.merge
+        nb = k_pool.shape[0]
+        v_idx = self.ctx.view_rank()
+        scale = hd ** -0.5
+
+        kv_loc = KV_st // m
+        k_new = lax.dynamic_slice_in_dim(k, v_idx * kv_loc, kv_loc, 2)
+        v_new = lax.dynamic_slice_in_dim(v, v_idx * kv_loc, kv_loc, 2)
+        if pa_ops.resolve_impl(self.impl) == "ref":
+            k_pool = paged_append(k_pool, k_new, self.slots)
+            v_pool = paged_append(v_pool, v_new, self.slots)
+        else:
+            from repro.kernels.paged_attention.kernel import \
+                paged_append_chunk_kernel
+            interp = pa_ops.resolve_impl(self.impl) == "interpret"
+            k_pool, v_pool = paged_append_chunk_kernel(
+                (k_pool, v_pool), (k_new, v_new), self.slots,
+                interpret=interp)
+
+        flat_k = k_pool.reshape(nb, -1)
+        flat_v = v_pool.reshape(nb, -1)
+        partials = []
+        for tag, bt_t, len_t, own_t in self.segs:
+            cap_t = self.block_base * tag
+            kvh_t = KV_st // tag
+            Hq_t = H_st // tag
+            view_k = flat_k.reshape(nb, cap_t, kvh_t, hd)
+            view_v = flat_v.reshape(nb, cap_t, kvh_t, hd)
+            ok = (own_t <= v_idx) & (v_idx < own_t + tag)
+            eff = jnp.where(ok, len_t, 0).astype(jnp.int32)
+            v_old = jnp.clip(v_idx - own_t, 0, tag - 1)
+            idx = v_old[:, None] * Hq_t + jnp.arange(Hq_t)[None, :]
+            q_sub = jnp.take_along_axis(q, idx[:, None, :, None], axis=2)
+            cur = tag == m
+            out_t, lse_t = fp_ops.paged_prefill_sweep_with_lse(
+                q_sub, view_k, view_v, bt_t, eff, prior_only=not cur,
+                softmax_scale=scale, impl=self.impl)
+            # the current-tag sweep is causal over [prior, prior+T): it
+            # always contributes (the chunk row itself); old-tag sweeps
+            # only where the segment exists
+            ok_any = ok if cur else (ok & (len_t > 0))
+            partials.append(_seg_scatter(out_t, lse_t, v_old, ok_any,
+                                         H_st, 2))
+        m_loc, ws, l_loc = _merge_sweeps(partials)       # lse-shaped [B,H,T]
+        # weights [B,H_st,T] -> [B,T,H_st,1] against out rows [B,T,H_st,hd]
+        acc = sum(o * jnp.moveaxis(w, 1, -1)[..., None]
+                  for (o, _), w in zip(partials, ws))
+        out_full = self.ctx.lse_merge(
+            acc, jnp.moveaxis(l_loc, 1, -1), jnp.moveaxis(m_loc, 1, -1),
+            axes=self.ctx.view_axes)                     # [B,T,H_st,hd]
+        h_loc = H_st // m
+        out = lax.dynamic_slice_in_dim(out_full, v_idx * h_loc, h_loc, 2)
+        return out.astype(q.dtype), (k_pool, v_pool)

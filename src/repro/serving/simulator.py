@@ -151,3 +151,11 @@ class SimBackend:
 
     def drain(self) -> None:
         """Synchronous backend: nothing in flight."""
+
+    def live_readable(self) -> bool:
+        """Capability hook for the LIVE strategy (§D8): the simulator
+        models a fleet whose step programs implement cross-tag reads;
+        the scheduler's per-request geometry gate
+        (``PoolGeometry.live_readable``) still decides which requests
+        actually qualify."""
+        return True

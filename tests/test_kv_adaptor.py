@@ -91,12 +91,24 @@ def test_slots_unique_and_in_range(n_tokens, merge):
     assert not set(more.tolist()) & set(slots.tolist())
 
 
-def test_mode_tag_guard():
+def test_mode_switch_opens_new_segment():
+    """The seed-era hard assert (blocks only readable under the mode
+    that wrote them) became the per-segment contract (§D8): appending
+    after a mode switch freezes the old segment in place and opens a
+    new one under the new capacity — no pause, no recompute."""
     ad = KVCacheAdaptor(geom_for())
-    ad.append_slots("r0", 10)
+    ad.append_slots("r0", 10)        # merge=1, cap=16 -> 1 block
     ad.switch_mode(2)
-    with pytest.raises(AssertionError):
-        ad.append_slots("r0", 1)  # layout written under merge=1
+    slots = ad.append_slots("r0", 1)
+    e = ad.table["r0"]
+    assert e.tags() == (1, 2)
+    assert e.max_tag == 2 and e.mode_tag == 2
+    assert e.seg_tokens(0) == 10 and e.seg_tokens(1) == 1
+    # the new segment's first slot is segment-local under B(2)
+    cap2 = ad.geom.capacity(2)
+    assert slots[0] == e.segments[1].ids[0] * cap2
+    # the flat concat view still lists every block in write order
+    assert e.block_ids == e.segments[0].ids + e.segments[1].ids
 
 
 def test_drop_for_recompute_returns_tokens_and_blocks():
@@ -142,13 +154,15 @@ def test_append_slots_batch_matches_per_request(ntoks, merge, layout, arch):
         for i, (rid, n) in enumerate(zip(rids, ntoks)):
             np.testing.assert_array_equal(bat[i, :n], ref[i])
             assert (bat[i, n:] == -1).all()
+        # width 64 >= worst case (2 rounds x 70 tokens / cap 4): the
+        # builders now RAISE on overflow instead of silently truncating
         for rid in rids:
             np.testing.assert_array_equal(
-                ad_bat.block_table(rid, 32),
-                ad_ref.block_table(rid, 32))
+                ad_bat.block_table(rid, 64),
+                ad_ref.block_table(rid, 64))
         np.testing.assert_array_equal(
-            ad_bat.block_table_batch(rids, 32),
-            np.stack([ad_ref.block_table(r, 32) for r in rids]))
+            ad_bat.block_table_batch(rids, 64),
+            np.stack([ad_ref.block_table(r, 64) for r in rids]))
     np.testing.assert_array_equal(
         ad_bat.lengths_batch(rids),
         np.asarray([ad_ref.table[r].length for r in rids]))

@@ -75,6 +75,15 @@ def test_mixed_prefill_step_across_merges():
     assert "PREFILL ATTENTION OK" in out
 
 
+def test_live_cross_layout_switch():
+    """LIVE rebinds (§D8): in-flight decodes and a chunked-prefill rider
+    cross two merge-ups with their KV spanning three mode-tagged block
+    segments — token-identical to a never-switched reference on both
+    kernel impls, untouched island undrained."""
+    out = run_script("check_live_switch.py")
+    assert "LIVE SWITCH OK" in out
+
+
 def test_heterogeneous_island_serving():
     """Partial rebind (§Perf D7): a priority TP island bound and
     released beside live DP decode — the untouched island's in-flight
