@@ -2,11 +2,17 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-md bench bench-smoke quickstart
+.PHONY: test test-md test-chaos bench bench-smoke quickstart
 
 # tier-1 suite
 test:
 	$(PY) -m pytest -x -q
+
+# self-healing chaos matrix (docs/PERF.md §D9): scripted engine kills,
+# stalls, rebind failures, corrupted drains, and pool exhaustion on the
+# simulation backend, plus the allocator exception-safety regressions
+test-chaos:
+	$(PY) -m pytest -x -q tests/test_faults.py
 
 # multi-device invariant scripts, run standalone under 8 emulated host
 # devices (each script also sets the flag itself, so they are directly

@@ -67,14 +67,27 @@ def main() -> None:
         for row in live_switch.run_subprocess():
             print(row)
         print(f"live_switch,elapsed_s,{time.time() - t0:.1f},")
+        # self-healing guard (§D9, simulation backend): a silent
+        # injector must be free (identical runs, makespan ratio <=
+        # 1.05x), and the chaos run (engine kill + rebind fault + pool
+        # seizure) must finish every request with the dead engine
+        # quarantined; recovery metrics land in BENCH_faults.json
+        t0 = time.time()
+        from benchmarks import fault_recovery
+        fdata = {}
+        for row in fault_recovery.run(guard=True, out=fdata):
+            print(row)
+        print(f"fault_recovery,elapsed_s,{time.time() - t0:.1f},")
         # perf trajectory artifacts: future PRs diff against these files
         import jax
         meta = {"devices": len(jax.devices()),
                 "backend": jax.default_backend(), "smoke": True}
         data["meta"] = meta
         pdata["meta"] = meta
+        fdata["meta"] = meta
         for fname, d in (("BENCH_decode.json", data),
-                         ("BENCH_prefill.json", pdata)):
+                         ("BENCH_prefill.json", pdata),
+                         ("BENCH_faults.json", fdata)):
             path = os.path.join(os.path.dirname(__file__), "..", fname)
             with open(path, "w") as f:
                 json.dump(d, f, indent=2, sort_keys=True)
@@ -82,10 +95,11 @@ def main() -> None:
             print(f"bench,artifact,{os.path.abspath(path)},")
         return
 
-    from benchmarks import (decode_attention, fig8_bursty, fig9_tpot,
-                            fig10_longcontext, kernels_micro,
-                            prefill_attention, steady_state,
-                            table1_priority, table2_context_switch)
+    from benchmarks import (decode_attention, fault_recovery,
+                            fig8_bursty, fig9_tpot, fig10_longcontext,
+                            kernels_micro, prefill_attention,
+                            steady_state, table1_priority,
+                            table2_context_switch)
     suites = {
         "steady_state": lambda: steady_state.run(smoke=args.fast),
         "decode_attention": lambda: decode_attention.run(smoke=args.fast),
@@ -97,6 +111,8 @@ def main() -> None:
         "fig10": lambda: fig10_longcontext.run(
             n_requests=20 if args.fast else 60),
         "kernels": kernels_micro.run,
+        "faults": lambda: fault_recovery.run(
+            n_requests=120 if args.fast else 400),
     }
     print("benchmark,metric,value,derived")
     for name, fn in suites.items():

@@ -57,6 +57,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.communicator_pool import CommunicatorPool, bucket_pow2
+from repro.core.faults import TransitionFault
 from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry,
                                    bind_fleet, ragged_arange)
 from repro.core.modes import FleetLayout, Island, ParallelPlan
@@ -143,7 +144,8 @@ class FlyingEngine:
                  async_window: int = 2, temperature: float = 0.0,
                  top_k: int = 0, harvest_limit: int = 512,
                  mixed_step: bool = True,
-                 layout: Optional[FleetLayout] = None):
+                 layout: Optional[FleetLayout] = None,
+                 injector=None):
         self.model = model
         self.cfg = model.cfg
         self.plan = plan
@@ -185,8 +187,16 @@ class FlyingEngine:
         bind_fleet(self.adaptors, self.layout)
         self.switch_log: List[float] = []
         self.sync_stats = SyncStats()
+        # scripted fault schedule (core/faults.py); the scheduler adopts
+        # it from here so one deterministic script drives injection AND
+        # detection on the real-execution path
+        self.injector = injector
         self._token_buf: Dict[str, List[int]] = {}
         self._prompt_cache: Dict[str, np.ndarray] = {}
+        # recovery-folded prompts: orig prompt ++ harvested tokens. The
+        # seed-based regeneration in _prompt_tokens knows nothing about
+        # folds, so recovered requests' prompts must be pinned verbatim.
+        self._pinned_prompts: Dict[str, np.ndarray] = {}
         self._bt_scratch: Optional[np.ndarray] = None
         self._host_bufs: Dict[Tuple, Dict[str, np.ndarray]] = {}
         self._seed_iota: Dict[int, jax.Array] = {}
@@ -328,11 +338,43 @@ class FlyingEngine:
         assert layout.plan == self.plan
         if layout == self.layout:
             return 0.0
+        inj = self.injector
+        if inj is not None:
+            s = inj.take_rebind_fault()
+            if s is not None:
+                # scripted failure BEFORE any state moves: the engine
+                # stays bound to the old layout, which is exactly what
+                # the scheduler's rollback assumes
+                raise TransitionFault(
+                    f"scripted rebind failure (tick {inj.tick})")
         t0 = time.perf_counter()
         new_set = set(layout.islands)
         changed = [rt for rt in self.islands if rt.island not in new_set]
+        changed_engs = {e for rt in changed for e in rt.island.engines()}
+        dead: set = set()
+        if inj is not None:
+            s = inj.take_drain_corrupt(changed_engs)
+            if s is not None:
+                bad = (set(s.engines) & changed_engs) or set(s.engines)
+                # the corruption IS the loss of in-flight tokens on the
+                # named islands; layout state is untouched, so rollback
+                # plus recovery (re-prefill from harvested tokens) is
+                # still well-defined
+                for rt in changed:
+                    if set(rt.island.engines()) & bad:
+                        self._discard_island(rt)
+                raise TransitionFault(
+                    "drain corrupted at the rebind safe point",
+                    engines=bad)
+            dead = set(inj.dead_engines())
         for rt in changed:
-            self._drain_island(rt)
+            if set(rt.island.engines()) & dead:
+                # a dead engine cannot answer the drain transfer: its
+                # island's unharvested tokens are lost (recovery folds
+                # whatever reached the host buffer earlier)
+                self._discard_island(rt)
+            else:
+                self._drain_island(rt)
         # recurrent states are per-request and batch-dense, and enc-dec
         # cross caches carry merge-dependent per-device shapes: reshaped
         # islands rebuild those (the documented exception to zero-copy;
@@ -533,6 +575,24 @@ class FlyingEngine:
         rt.last_src = None
         rt.last_key = None
 
+    def _discard_island(self, rt: _IslandRT) -> None:
+        """Fault path: drop one island's in-flight tokens WITHOUT
+        harvesting (the device they live on is dead or the drain was
+        corrupted). Only the host token buffer survives for recovery."""
+        rt.pending.clear()
+        rt.last_tok.clear()
+        rt.last_src = None
+        rt.last_key = None
+        rt.steady = None
+
+    def _fault_gate(self, isl: Island) -> None:
+        """Raise EngineFault when a scripted-dead engine sits in this
+        island's collective (any launch spanning it would hang on real
+        hardware); stall factors are meaningless for wall-clock
+        execution and are ignored."""
+        if self.injector is not None:
+            self.injector.check_launch(list(isl.engines()))
+
     def drain(self) -> None:
         """Fleet-wide safe point (scheduler end-of-run, host readout)."""
         for rt in self.islands:
@@ -671,6 +731,7 @@ class FlyingEngine:
     def prefill(self, reqs: Sequence[Request], island: Union[Island, int],
                 chunk_tokens: int) -> float:
         rt = self._resolve(island)
+        self._fault_gate(rt.island)
         t0 = time.perf_counter()
         B = rt.B
         batch, rows, final, T, mb, live = self._stage_prefill(rt, reqs)
@@ -713,7 +774,7 @@ class FlyingEngine:
         otherwise they would crash the serve loop mid-stream once their
         block count outgrows the table."""
         cap = self.geom.capacity(merge)
-        need = -(-(r.prompt_len + r.output_len) // cap)
+        need = -(-r.total_context() // cap)
         return need <= self.max_blocks
 
     def live_readable(self) -> bool:
@@ -753,6 +814,7 @@ class FlyingEngine:
         sequential prefill->decode pair, in one step launch."""
         rt = self._resolve(island)
         isl = rt.island
+        self._fault_gate(isl)
         assert self.fused, "mixed step requires fused sampling"
         ents = [self.adaptors[r.engine_group].table[r.req_id]
                 for r in list(prefills) + list(decodes)]
@@ -1004,6 +1066,7 @@ class FlyingEngine:
     def decode(self, reqs: Sequence[Request],
                island: Union[Island, int]) -> float:
         rt = self._resolve(island)
+        self._fault_gate(rt.island)
         t0 = time.perf_counter()
         B = rt.B
         c = self._decode_cache(rt, reqs)
@@ -1046,6 +1109,13 @@ class FlyingEngine:
 
     # ------------------------------------------------------------------
     def _prompt_tokens(self, r: Request) -> np.ndarray:
+        p = self._pinned_prompts.get(r.req_id)
+        if p is not None:
+            # recovery fold: the prompt is orig ++ harvested tokens and
+            # CANNOT be regenerated from the req_id seed
+            assert len(p) == r.prompt_len, \
+                (r.req_id, "pinned prompt out of sync", len(p), r.prompt_len)
+            return p
         p = self._prompt_cache.get(r.req_id)
         if p is None:
             if len(self._prompt_cache) >= 4096:
@@ -1058,6 +1128,38 @@ class FlyingEngine:
             p = rng.integers(0, self.cfg.vocab_size, size=r.prompt_len)
             self._prompt_cache[r.req_id] = p
         return p
+
+    def recover_request(self, r: Request) -> int:
+        """Scheduler recovery hook: surface whatever of this request's
+        output survives, pin the recovery prompt (orig prompt ++
+        harvested tokens — the fold makes ``prompt_len`` grow past what
+        the seed regenerates), and return the kept-token count. Called
+        BEFORE the scheduler's fold bookkeeping, so ``r`` still carries
+        its pre-fold prompt/engine placement."""
+        rid = r.req_id
+        g = r.engine_group
+        if g >= 0:
+            rt = self._rt_of.get(self.layout.island_of(g))
+            if rt is not None:
+                dead = set(self.injector.dead_engines()) \
+                    if self.injector is not None else set()
+                if set(rt.island.engines()) & dead:
+                    # in-flight tokens died with the island; everyone
+                    # resident there is being recovered anyway
+                    self._discard_island(rt)
+                else:
+                    # healthy island (backpressure eviction): harvest
+                    # so the fold keeps every produced token
+                    self._drain_island(rt)
+        orig = np.asarray(self._prompt_tokens(r)[:r.prompt_len],
+                          dtype=np.int64)
+        toks = self._token_buf.get(rid, [])
+        self._pinned_prompts[rid] = np.concatenate(
+            [orig, np.asarray(toks, dtype=np.int64)])
+        self._prompt_cache.pop(rid, None)
+        for rt in self.islands:
+            rt.last_tok.pop(rid, None)
+        return len(toks)
 
     def generated_tokens(self, req_id: str) -> List[int]:
         self.drain()

@@ -380,25 +380,35 @@ class KVCacheAdaptor:
         """Alg. 1 step 4: KVCacheMgr.Allocate(req, B_req, H_req). Appends
         always target the CURRENT mode's segment — a tag change freezes
         the old segment in place (its blocks stay readable via the
-        per-segment contract) and opens a new one."""
+        per-segment contract) and opens a new one.
+
+        Exception-safe: the block take is the ONLY failure point and it
+        happens before any table/segment mutation, so a MemoryError
+        leaves the entry, the free stacks and the shared group-free set
+        exactly as they were (the backpressure path retries after
+        evicting a victim and must see clean state)."""
         cap = self.capacity
         entry = self.table.get(req_id)
-        if entry is None:
-            entry = RequestKV(mode_tag=self.merge)
-            self.table[req_id] = entry
-        seg = entry.segments[-1] if entry.segments else None
-        if seg is None or seg.tag != self.merge:
-            seg = Segment(tag=self.merge, start=entry.length,
-                          owners=self.group)
-            entry.segments.append(seg)
-            entry.mode_tag = self.merge
-        seg_tok = entry.length - seg.start
-        need = -(-(seg_tok + n_tokens) // cap) - len(seg.ids)
+        seg = entry.segments[-1] if entry and entry.segments else None
+        fresh = seg is None or seg.tag != self.merge
+        seg_tok = 0 if fresh else entry.length - seg.start
+        held = 0 if fresh else len(seg.ids)
+        need = -(-(seg_tok + n_tokens) // cap) - held
+        new: List[int] = []
         if need > 0:
             try:
                 new = self._take_blocks(need)
             except MemoryError:
                 raise MemoryError(f"KV pool exhausted for {req_id}")
+        if entry is None:
+            entry = RequestKV(mode_tag=self.merge)
+            self.table[req_id] = entry
+        if fresh:
+            seg = Segment(tag=self.merge, start=entry.length,
+                          owners=self.group)
+            entry.segments.append(seg)
+            entry.mode_tag = self.merge
+        if new:
             seg.ids.extend(new)
             entry._ids_np = None
         return entry
@@ -431,21 +441,41 @@ class KVCacheAdaptor:
         if seg.tag == self.merge:
             return
         assert entry.length > seg.start, "no pending token to retag"
-        entry.length -= 1
-        cap_old = self.geom.capacity(seg.tag)
-        seg_tok = entry.length - seg.start
-        need = -(-seg_tok // cap_old)
-        owners = seg.owners or (self,)
-        while len(seg.ids) > need:
-            b = seg.ids.pop()
-            for a in owners:
-                a._give_back((b,))
-        if seg_tok == 0 and not seg.ids:
-            entry.segments.pop()
-            if entry.segments:
-                entry.mode_tag = entry.segments[-1].tag
-        entry._ids_np = None
+        self.truncate(req_id, 1)
         self.append_slots(req_id, 1)
+
+    def truncate(self, req_id: str, n_tokens: int) -> None:
+        """Roll the last ``n_tokens`` allocated slots back out of the
+        entry, freeing surplus blocks to the adaptors that own them and
+        popping segments the rollback empties. The undo primitive under
+        ``retag_tail`` — and, for fault recovery, the rollback for an
+        island launch that failed AFTER its slots were issued (the
+        scheduler un-issues the tick's slots so allocator state matches
+        the tokens that actually materialized)."""
+        entry = self.table.get(req_id)
+        if not entry or n_tokens <= 0:
+            return
+        entry.length = max(entry.length - n_tokens, 0)
+        while entry.segments:
+            seg = entry.segments[-1]
+            owners = seg.owners or (self,)
+            if entry.length < seg.start:
+                for a in owners:
+                    a._give_back(seg.ids)
+                entry.segments.pop()
+                continue
+            cap = self.geom.capacity(seg.tag)
+            keep = -(-(entry.length - seg.start) // cap)
+            while len(seg.ids) > keep:
+                b = seg.ids.pop()
+                for a in owners:
+                    a._give_back((b,))
+            if entry.length == seg.start and not seg.ids:
+                entry.segments.pop()
+            break
+        if entry.segments:
+            entry.mode_tag = entry.segments[-1].tag
+        entry._ids_np = None
 
     def block_table(self, req_id: str, max_blocks: int) -> np.ndarray:
         ids = self.table[req_id].ids_np()
@@ -512,6 +542,27 @@ class KVCacheAdaptor:
             lens = np.full((n,), int(n_tokens), np.int64)
         else:
             lens = np.asarray(n_tokens, np.int64)
+        # transactional pre-check: total block need vs the group-free
+        # budget BEFORE any entry mutates. The per-request allocates
+        # below draw from the same budget sequentially, so a shortfall
+        # mid-batch would otherwise leave a prefix of requests grown —
+        # this way a MemoryError leaves every entry, free stack, and the
+        # shared group-free set exactly as they were.
+        cap = self.capacity
+        need = 0
+        for rid, t in zip(req_ids, lens):
+            e = self.table.get(rid)
+            if e and e.segments and e.segments[-1].tag == self.merge:
+                seg = e.segments[-1]
+                need += max(
+                    -(-(e.length - seg.start + int(t)) // cap)
+                    - len(seg.ids), 0)
+            else:
+                need += -(-int(t) // cap)
+        if need > self.free_blocks():
+            raise MemoryError(
+                f"KV pool exhausted: batch of {n} needs {need} blocks, "
+                f"{self.free_blocks()} group-free")
         entries = [self.allocate(rid, int(t))
                    for rid, t in zip(req_ids, lens)]
         segs = [e.segments[-1] for e in entries]
@@ -553,6 +604,24 @@ class KVCacheAdaptor:
             for a in (seg.owners or (self,)):
                 a._give_back(seg.ids)
         return entry.length
+
+    # -- fault injection (POOL_EXHAUST) -----------------------------------
+    def seize(self, n: int = -1) -> List[int]:
+        """Take up to ``n`` free ids (-1 = all) out of THIS engine's
+        pool — a scripted memory burst. Deterministic (sorted take) and
+        group-consistent: the shared group-free set shrinks with the
+        member, so group allocations see the pressure immediately.
+        ``restore`` hands the ids back when the fault window closes."""
+        avail = sorted(self._free_set)
+        taken = avail if n < 0 else avail[:n]
+        self._free_set.difference_update(taken)
+        if len(self.group) > 1:
+            self._group_free().difference_update(taken)
+        return taken
+
+    def restore(self, ids: Sequence[int]) -> None:
+        """Return ids taken by ``seize`` to the free pool."""
+        self._give_back(ids)
 
     # -- capacity accounting (paper §6.4 Table 2) -----------------------------
     def max_context_tokens(self, merge: int) -> int:

@@ -283,6 +283,22 @@ class FleetLayout:
             isl if isl.merge == 1 else Island(isl.start, isl.n_engines, 1)
             for isl in self.islands))
 
+    def quarantine(self, engines) -> "FleetLayout":
+        """Re-carve buddy-aligned islands around dead engine tiles: each
+        quarantined engine becomes a singleton DP island (no healthy
+        engine shares a collective with it), and the buddy remainders of
+        any group it belonged to fall back to the widest merge they can
+        still sustain. Engines whose group contained no dead tile keep
+        their group identity — ``changed_engines`` against the result is
+        exactly the blast radius of the failure."""
+        out = self
+        for e in sorted(set(engines)):
+            isl = out.island_of(e)
+            if isl.n_engines == 1:
+                continue  # already isolated
+            out = out.carve(e, 1, 1)
+        return out
+
     def changed_engines(self, new: "FleetLayout") -> frozenset:
         """Engines whose GROUP assignment (lead engine, merge) differs
         under `new` — the partial-rebind scope: only requests on these

@@ -129,7 +129,7 @@ class FlyingPolicy:
         # UC3: long-context request that cannot fit at any live island
         lead = self._least_loaded_lead(sched)
         for r in arrived:
-            need = r.prompt_len + r.output_len
+            need = r.total_context()
             if not sched._adaptor(lead).can_allocate(need):
                 geom = sched.geom
                 m = 1

@@ -47,9 +47,10 @@ since collectives exist only inside per-island compiled programs.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple, Union
 
+from repro.core.faults import EngineFault, TransitionFault
 from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry, bind_fleet)
 from repro.core.modes import FleetLayout, Island, ParallelPlan
 from repro.core.task_pool import Request, TaskPool
@@ -117,6 +118,12 @@ class SchedulerConfig:
     queue_low: int = 1
     latency_merge: int = 0       # 0 -> max available merge at low load
     fixed_merge: Optional[int] = None  # static baselines pin the mode
+    # fault tolerance (docs/PERF.md §D9): a step (or rebind) is a
+    # deadline MISS when its duration exceeds the backend's clean
+    # roofline expectation by watchdog_slack x; health_misses
+    # consecutive misses quarantine the island's engines.
+    watchdog_slack: float = 4.0
+    health_misses: int = 3
 
 
 @dataclass
@@ -128,6 +135,56 @@ class StepLog:
     n_queued: int
     switched: bool = False     # a layout transition applied this tick
     islands: Tuple[Tuple[int, int], ...] = ()   # live (n_engines, merge)s
+    degraded: bool = False     # backpressure eviction fired this tick
+
+
+@dataclass
+class SchedulerDiagnostic:
+    """Structured snapshot of the scheduler's full state — raised with
+    ``SchedulerWedged`` instead of a bare state string, and consumed by
+    the quarantine/recovery path to pick its victims (both views of a
+    stuck fleet come from the same accounting)."""
+    t: float
+    tick: int
+    layout: str
+    islands: Tuple[Dict, ...] = ()     # per island: span/shape/clock/work
+    waiting: Tuple[str, ...] = ()
+    running: Tuple[str, ...] = ()
+    paused: Tuple[str, ...] = ()
+    pool_free: Tuple[int, ...] = ()    # free blocks per engine tile
+    preempt_stats: Dict = field(default_factory=dict)
+    quarantined: Tuple[int, ...] = ()
+    health: Dict = field(default_factory=dict)  # island span -> miss count
+
+    def describe(self) -> str:
+        lines = [f"  t={self.t:.3f} tick={self.tick} layout={self.layout}"]
+        for isl in self.islands:
+            lines.append(
+                f"  island {isl['span']} {isl['shape']}: "
+                f"clock={isl['clock']:.3f} decode={isl['decode']} "
+                f"prefill={isl['prefill']}")
+        lines.append(f"  waiting={list(self.waiting)}")
+        lines.append(f"  running={list(self.running)}")
+        lines.append(f"  paused={list(self.paused)}")
+        lines.append(f"  pool_free={list(self.pool_free)}")
+        lines.append(f"  quarantined={list(self.quarantined)} "
+                     f"health={self.health}")
+        lines.append(f"  preempt_stats={self.preempt_stats}")
+        return "\n".join(lines)
+
+
+class SchedulerWedged(RuntimeError):
+    """The scheduler has work but can make no progress. Carries the
+    full ``SchedulerDiagnostic`` (also appended to the message) so the
+    operator sees per-island worklists, the paused set, and pool
+    occupancy instead of a bare count string."""
+
+    def __init__(self, msg: str, diagnostic: Optional[SchedulerDiagnostic]
+                 = None):
+        self.diagnostic = diagnostic
+        if diagnostic is not None:
+            msg = f"{msg}\n{diagnostic.describe()}"
+        super().__init__(msg)
 
 
 class DynamicScheduler:
@@ -172,9 +229,25 @@ class DynamicScheduler:
         self._busy_islands: set = set()
         # disruption accounting (§D8 acceptance): how many requests each
         # transition class touched. LIVE's whole point is that its
-        # rebinds add nothing here.
+        # rebinds add nothing here. §D9 adds the self-healing counters:
+        # recovered (requests re-admitted after a quarantine/eviction),
+        # rollbacks (transitions undone by the watchdog), degraded_ticks
+        # (ticks that needed a backpressure eviction).
         self.preempt_stats = {"paused": 0, "recomputed_tokens": 0,
-                              "live_riders": 0}
+                              "live_riders": 0, "recovered": 0,
+                              "rollbacks": 0, "degraded_ticks": 0}
+        # -- fault tolerance (docs/PERF.md §D9) -------------------------
+        # the injector rides on the backend (like the adaptors) so one
+        # scripted schedule drives both sides; the scheduler owns the
+        # tick clock and the host-side POOL_EXHAUST seizures.
+        self.injector = getattr(backend, "injector", None)
+        self._tick = -1
+        self.quarantined: set = set()      # permanently dead engine tiles
+        self._health: Dict[Island, int] = {}   # consecutive deadline misses
+        self._seized: Dict[int, List[int]] = {}  # engine -> seized block ids
+        self._degraded_tick = False
+        self._recovered_tick: set = set()  # req_ids recovered this pass
+        self.incidents: List[Dict] = []    # audit log of faults handled
 
     # ------------------------------------------------------------------
     @property
@@ -212,6 +285,12 @@ class DynamicScheduler:
                         break
                     if not until_drained:
                         break  # caller accepts undrained work
+                    if self._seized:
+                        # a scripted pool seizure still holds blocks: a
+                        # starved fleet here is the fault, not a wedge —
+                        # idle the tick clock forward until the window
+                        # closes and the blocks come back
+                        continue
                     # cycle guard: two paused requests whose resume
                     # carves conflict can ping-pong (each forced resume
                     # re-pauses the other). Revisiting an already-seen
@@ -220,10 +299,11 @@ class DynamicScheduler:
                     state = (frozenset(r.req_id for r in self.paused),
                              self.layout.shapes())
                     if state in seen_wedges:
-                        raise RuntimeError(
+                        raise SchedulerWedged(
                             f"scheduler wedged in a resume cycle: "
                             f"{len(self.paused)} paused requests' carves "
-                            f"conflict (layout {self.layout.describe()})")
+                            f"conflict (layout {self.layout.describe()})",
+                            self._diagnostic())
                     seen_wedges.add(state)
                     # nothing runnable but work exists: a paused request
                     # can be stranded when its opportunistic resume stays
@@ -240,12 +320,13 @@ class DynamicScheduler:
                             forced = True
                             break
                     if not forced:
-                        raise RuntimeError(
+                        raise SchedulerWedged(
                             f"scheduler wedged with no runnable work: "
                             f"{len(self.waiting)} waiting, "
                             f"{len(self.running)} running, "
                             f"{len(self.paused)} paused "
-                            f"(layout {self.layout.describe()})")
+                            f"(layout {self.layout.describe()})",
+                            self._diagnostic())
                     continue
                 self.now = max(self.now, nxt)
         # async backends: surface in-flight generated tokens (the only
@@ -258,6 +339,13 @@ class DynamicScheduler:
     # ------------------------------------------------------------------
     def step(self) -> bool:
         """One Algorithm-1 iteration. Returns False if idle."""
+        # ⓪ fault clock: scripted faults key on the step index; host-side
+        # POOL_EXHAUST seizures open/close here
+        self._tick += 1
+        self._degraded_tick = False
+        if self.injector is not None:
+            self.injector.advance(self._tick)
+            self._apply_pool_faults()
         # ① Input Processing
         self.waiting.extend(self.pool.pull(self.now, 1 << 30))
         # ② Global Synchronization: one agreed order
@@ -266,7 +354,8 @@ class DynamicScheduler:
         # ③ Mode Determination (policy layer; Flag_SetTP / Flag_ResetTP)
         switched = False
         if self.cfg.fixed_merge is None and self.policy is not None:
-            target = self._as_layout(self.policy.decide(self))
+            target = self._sanitize(
+                self._as_layout(self.policy.decide(self)))
             if target != self.layout:
                 switched = self._transition(target)
 
@@ -326,7 +415,14 @@ class DynamicScheduler:
         to tags it acquired later.)"""
         m = self._tag(r)
         start = (r.engine_group // m) * m if r.engine_group >= 0 else 0
-        return self.layout.carve(start, m, m)
+        return self._sanitize(self.layout.carve(start, m, m))
+
+    def _sanitize(self, target: FleetLayout) -> FleetLayout:
+        """Re-carve any transition target around the quarantined tiles:
+        no healthy engine may be bound into a group with a dead one."""
+        if not self.quarantined:
+            return target
+        return target.quarantine(self.quarantined)
 
     def _live_ok(self, r: Request, target: FleetLayout) -> bool:
         """Can this request's KV keep being read in place under
@@ -370,6 +466,10 @@ class DynamicScheduler:
 
     def _transition(self, target: FleetLayout) -> bool:
         strat = self.cfg.strategy
+        target = self._sanitize(target)
+        if target == self.layout:
+            self.pending_layout = None
+            return True
         incompatible = self._incompatible(target)
         if strat == LIVE:
             # riders: running decodes on reshaped engines that stay
@@ -380,18 +480,12 @@ class DynamicScheduler:
             riders = [r for r in self.running
                       if r.engine_group in changed
                       and r not in incompatible]
-            for r in incompatible:   # non-readable stragglers: HARD
-                r.state = "paused"
-                self.paused.append(r)
-                self.preempt_stats["paused"] += 1
-                if r in self.running:
-                    self.running.remove(r)
-                if r in self.waiting:
-                    self.waiting.remove(r)
-            ok = self._apply_switch(target)
-            self.preempt_stats["live_riders"] += len(riders)
-            for r in riders:
-                self._retag_or_recompute(r)
+            newly = self._pause(incompatible)
+            ok = self._apply_switch(target, newly)
+            if ok:
+                self.preempt_stats["live_riders"] += len(riders)
+                for r in riders:
+                    self._retag_or_recompute(r)
             return ok
         if strat == SEQUENTIAL:
             self.pending_layout = target
@@ -422,7 +516,16 @@ class DynamicScheduler:
             return self._apply_switch(target)
         # HARD: immediate switch at this (safe) step boundary; only the
         # reshaped islands' requests pause
-        for r in incompatible:
+        newly = self._pause(incompatible)
+        return self._apply_switch(target, newly)
+
+    def _pause(self, reqs: Sequence[Request]
+               ) -> List[Tuple[Request, str]]:
+        """HARD-pause ``reqs``, remembering where each came from so a
+        watchdog rollback can reinstate them exactly."""
+        newly: List[Tuple[Request, str]] = []
+        for r in reqs:
+            origin = "running" if r in self.running else "waiting"
             r.state = "paused"
             self.paused.append(r)
             self.preempt_stats["paused"] += 1
@@ -430,7 +533,8 @@ class DynamicScheduler:
                 self.running.remove(r)
             if r in self.waiting:
                 self.waiting.remove(r)
-        return self._apply_switch(target)
+            newly.append((r, origin))
+        return newly
 
     def _retag_or_recompute(self, r: Request) -> None:
         """Re-issue a rider's pending slot under the (new) current mode;
@@ -449,8 +553,44 @@ class DynamicScheduler:
                 self.running.remove(r)
                 self.waiting.insert(0, r)
 
-    def _apply_switch(self, target: FleetLayout) -> bool:
-        dt = self._backend_rebind(target)
+    def _apply_switch(self, target: FleetLayout,
+                      newly_paused: Sequence[Tuple[Request, str]] = (),
+                      enforce_deadline: bool = True) -> bool:
+        """Commit a layout transition — under the watchdog. The rebind
+        gets a deadline (the backend's clean expectation x
+        ``watchdog_slack``); a rebind that faults or blows the deadline
+        (reshaped islands failing to drain) is rolled back to the prior
+        layout, and every request the attempt paused is reinstated
+        where it was — a failed transition never strands paused
+        requests."""
+        old_layout = self.layout
+        exp = self._rebind_expected(target)
+        try:
+            dt = self._backend_rebind(target)
+        except (TransitionFault, EngineFault) as ex:
+            self._rollback_transition(target, newly_paused,
+                                      f"rebind fault: {ex}")
+            bad = getattr(ex, "engines", None)
+            if bad:
+                self._quarantine_engines(bad)
+            return False
+        if enforce_deadline and exp is not None \
+                and dt > exp * self.cfg.watchdog_slack:
+            # deadline blown: rebind back, charging the lost time to the
+            # islands the attempt touched
+            try:
+                self._backend_rebind(old_layout)
+            except (TransitionFault, EngineFault):
+                pass
+            changed = old_layout.changed_engines(target)
+            for isl in list(self._clock):
+                if set(isl.engines()) & changed:
+                    self._clock[isl] = max(self._clock[isl], self.now) + dt
+            self._rollback_transition(
+                target, newly_paused,
+                f"rebind deadline missed: {dt:.3f}s > "
+                f"{self.cfg.watchdog_slack:.1f}x expected {exp:.3f}s")
+            return False
         # the rebind cost lands on the RESHAPED islands' clocks: an
         # untouched island keeps serving straight through it (the real
         # engine never even drains it). A reshaped island synchronizes
@@ -499,6 +639,36 @@ class DynamicScheduler:
         return self.backend.switch(self.merge,
                                    target.uniform_merge or target.max_merge)
 
+    def _rebind_expected(self, target: FleetLayout) -> Optional[float]:
+        """Clean (fault-free) rebind duration from the backend's cost
+        model — the watchdog deadline's base. None disables the check."""
+        hook = getattr(self.backend, "rebind_expected", None)
+        if hook is None:
+            return None
+        return hook(target)
+
+    def _rollback_transition(self, target: FleetLayout,
+                             newly_paused: Sequence[Tuple[Request, str]],
+                             why: str) -> None:
+        """Undo a failed transition attempt: the layout never changed,
+        so reinstate every request the attempt paused exactly where it
+        was and drop the pending target."""
+        for r, origin in newly_paused:
+            if r in self.paused:
+                self.paused.remove(r)
+            self.preempt_stats["paused"] -= 1
+            if origin == "running":
+                r.state = "running"
+                self.running.append(r)
+            else:
+                r.state = "queued"
+                self.waiting.insert(0, r)
+        self.pending_layout = None
+        self.preempt_stats["rollbacks"] += 1
+        self.incidents.append({
+            "t": self.now, "tick": self._tick, "kind": "rollback",
+            "target": target.describe(), "why": why})
+
     def _group_restored(self, r: Request, layout: FleetLayout) -> bool:
         """A paused request resumes when its engine's group can read its
         KV again: exactly its widest tag's merge with its lead leading
@@ -537,6 +707,10 @@ class DynamicScheduler:
     def _execute_one_step(self) -> bool:
         layout = self.layout
         eps = 1e-12
+        # requests recovered during THIS pass (quarantine victims,
+        # backpressure evictions): already-built worklists must shed
+        # them before launching
+        self._recovered_tick = set()
         # islands whose previous step has completed may launch; the
         # others are mid-step (the real engine's async dispatch overlap)
         ready = {isl for isl in layout.islands
@@ -558,6 +732,15 @@ class DynamicScheduler:
             # their current (wider) group — account them where they run
             isl_r = layout.island_of(r.engine_group)
             group_load[isl_r.group_of(r.engine_group)[0]] += 1
+        for r in self.waiting:
+            # mid-prefill requests hold a batch row on their sticky
+            # group across ticks; admission must keep counting it or a
+            # multi-chunk prompt's group overfills past the engine's
+            # per-group batch (fold-recovered prompts always span
+            # several chunks, so the recovery path hits this)
+            if r.engine_group >= 0 and r.prefilled > 0:
+                isl_r = layout.island_of(r.engine_group)
+                group_load[isl_r.group_of(r.engine_group)[0]] += 1
         mem_blocked: set = set()   # leads waiting on their own pool
         reserved: Dict[int, int] = {}   # blocks promised this tick
         fits = getattr(self.backend, "request_fits", None)
@@ -576,7 +759,7 @@ class DynamicScheduler:
                 ent = ad.table.get(r.req_id)
                 have = ent.length if ent else 0
                 if ad.can_allocate(
-                        max(r.prompt_len + r.output_len - have, 0),
+                        max(r.total_context() - have, 0),
                         req_id=r.req_id):
                     admit.append(r)
                 else:
@@ -606,6 +789,14 @@ class DynamicScheduler:
                 # arrives.
                 cands = [il for il in leads
                          if il[0].merge == layout.max_merge]
+                if self.quarantined and not any(
+                        not (set(range(lead, lead + isl.merge))
+                             & self.quarantined)
+                        for isl, lead in cands):
+                    # every widest island lost an engine: degraded
+                    # latency beats starving the priority class
+                    wide = False
+                    cands = leads
             else:
                 cands = leads
             order = sorted(
@@ -616,6 +807,10 @@ class DynamicScheduler:
             for isl, lead in order:
                 if isl not in ready or lead in mem_blocked:
                     continue
+                if self.quarantined and (
+                        set(range(lead, lead + isl.merge))
+                        & self.quarantined):
+                    continue  # group lost an engine: never admit to it
                 if group_load[lead] >= self.cfg.max_batch_per_group:
                     continue
                 if fits is not None and not fits(r, isl.merge):
@@ -625,7 +820,7 @@ class DynamicScheduler:
                 # count the free pool (chunked prefill would exhaust it
                 # mid-stream and wedge both — neither ever decodes)
                 ad = self._adaptor(lead)
-                need = -(-(r.prompt_len + r.output_len) // ad.capacity)
+                need = -(-r.total_context() // ad.capacity)
                 if ad.free_blocks() - reserved.get(lead, 0) >= need:
                     r.engine_group = lead  # absolute lead engine
                     group_load[lead] += 1
@@ -662,11 +857,19 @@ class DynamicScheduler:
             dec_by[idx_of[layout.island_of(r.engine_group)]].append(r)
         launched = False
         any_mixed = any_pre = any_dec = False
+        suspects: set = set()   # engines to quarantine after the loop
         # islands busy as of THIS tick: mid-step/mid-rebind at tick
         # start, or launched below (snapshotted here because the
         # clock advance at the end of the tick hides both)
         self._busy_islands = set(layout.islands) - ready
         for isl, pre_i, dec_i in zip(layout.islands, pre_by, dec_by):
+            if self._recovered_tick:
+                # an earlier island's backpressure eviction may have
+                # recovered requests right out of this island's lists
+                pre_i = [r for r in pre_i
+                         if r.req_id not in self._recovered_tick]
+                dec_i = [r for r in dec_i
+                         if r.req_id not in self._recovered_tick]
             if isl not in ready or not (pre_i or dec_i):
                 continue
             self._busy_islands.add(isl)
@@ -683,37 +886,88 @@ class DynamicScheduler:
                     chunk_of[r.req_id] = chunk
                     chunks.setdefault(r.engine_group, []).append(
                         (r.req_id, chunk))
+                dropped: set = set()
                 for g, items in chunks.items():
-                    self._adaptor(g).append_slots_batch(
-                        [rid for rid, _ in items], [c for _, c in items])
+                    if not self._alloc_with_backpressure(
+                            g, [rid for rid, _ in items],
+                            [c for _, c in items]):
+                        # group pool stays exhausted even after
+                        # evictions: hold these chunks this tick
+                        dropped.add(g)
+                if dropped or self._recovered_tick:
+                    pre_i = [r for r in pre_i
+                             if r.engine_group not in dropped
+                             and r.req_id not in self._recovered_tick]
+                    dec_i = [r for r in dec_i
+                             if r.req_id not in self._recovered_tick]
                 # promote final-chunk requests BEFORE execution: the
                 # island's decode batch this tick includes them (their
                 # first token comes out of the final prefill step), and
                 # ``prefilled`` stays at the chunk's prior length for
                 # the backend to read
-                finished = [r for r in pre_i
-                            if r.prefilled + chunk_of[r.req_id]
-                            >= r.prompt_len]
-                for r in finished:
+                for r in list(pre_i):
+                    if r.prefilled + chunk_of[r.req_id] < r.prompt_len:
+                        continue
+                    if not self._alloc_with_backpressure(
+                            r.engine_group, [r.req_id], [1]):
+                        # no room for even its first output token: undo
+                        # the chunk, retry when pressure lifts
+                        self._adaptor(r.engine_group).truncate(
+                            r.req_id, chunk_of[r.req_id])
+                        pre_i.remove(r)
+                        continue
                     r.state = "running" if r.state != "spec_dp" \
                         else "spec_dp"
                     self.waiting.remove(r)
                     self.running.append(r)
                     dec_i.append(r)
                     r.generated += 1
-                    self._adaptor(r.engine_group).append_slots(r.req_id, 1)
-            dt = 0.0
-            if pre_i and dec_i and backend_mixed:
-                dt = mixed(pre_i, dec_i, isl, self.cfg.prefill_chunk)
-                any_mixed = True
+                    finished.append(r)
+                if self._recovered_tick:
+                    pre_i = [r for r in pre_i
+                             if r.req_id not in self._recovered_tick]
+                    dec_i = [r for r in dec_i
+                             if r.req_id not in self._recovered_tick]
+                    finished = [r for r in finished
+                                if r.req_id not in self._recovered_tick]
+            if not (pre_i or dec_i):
+                continue
+            try:
+                dt = 0.0
+                if pre_i and dec_i and backend_mixed:
+                    dt = mixed(pre_i, dec_i, isl, self.cfg.prefill_chunk)
+                    any_mixed = True
+                else:
+                    if pre_i:
+                        dt += self.backend.prefill(pre_i, isl,
+                                                   self.cfg.prefill_chunk)
+                        any_pre = True
+                    if dec_i:
+                        dt += self.backend.decode(dec_i, isl)
+                        any_dec = True
+            except EngineFault as ex:
+                # the step's output never materializes: roll the tick's
+                # bookkeeping back and mark the dead engines
+                self._undo_island_tick(pre_i, finished, chunk_of)
+                suspects |= set(ex.engines)
+                self.incidents.append({
+                    "t": self.now, "tick": self._tick,
+                    "kind": "engine_fault", "engines": sorted(ex.engines)})
+                continue
+            # soft step deadline (detection): an island whose step blew
+            # the roofline expectation cfg.health_misses times in a row
+            # is treated as failed — a stall the harness can't surface
+            # as an exception (hung collective, sick HBM) looks exactly
+            # like this
+            exp = self._expected_step(pre_i, dec_i, isl)
+            if exp is not None and dt > exp * self.cfg.watchdog_slack:
+                miss = self._health.get(isl, 0) + 1
+                self._health[isl] = miss
+                if miss >= self.cfg.health_misses:
+                    suspects |= set(isl.engines())
+                    self._health.pop(isl, None)
             else:
-                if pre_i:
-                    dt += self.backend.prefill(pre_i, isl,
-                                               self.cfg.prefill_chunk)
-                    any_pre = True
-                if dec_i:
-                    dt += self.backend.decode(dec_i, isl)
-                    any_dec = True
+                self._health.pop(isl, None)
             end = start + dt
             self._clock[isl] = end
             launched = True
@@ -724,6 +978,9 @@ class DynamicScheduler:
                 r.token_times.append(end)
             if dec_i:
                 self._decode_bookkeeping(dec_i, end)
+        if suspects:
+            self._quarantine_engines(suspects)
+            launched = True
         if any_mixed or any_pre:
             self._log("mixed" if any_mixed else "prefill")
         if any_dec:
@@ -757,12 +1014,226 @@ class DynamicScheduler:
                 r.finish_t = t
                 r.state = "done"
                 done.append(r)
-        # next token's slot, one vectorized allocation per adaptor
-        for g, rids in alive.items():
-            self._adaptor(g).append_slots_batch(rids, 1)
+        # next token's slot, one vectorized allocation per adaptor —
+        # decode growth under memory pressure sheds the lowest-priority
+        # resident (preempt-to-recompute) instead of crashing
         for r in done:
             self.running.remove(r)
             self._adaptor(r.engine_group).release(r.req_id)
+        for g, rids in alive.items():
+            self._alloc_with_backpressure(g, rids, [1] * len(rids),
+                                          evict_self=True)
+
+    # -- fault tolerance (docs/PERF.md §D9) ----------------------------
+    def _expected_step(self, pre_i: Sequence[Request],
+                       dec_i: Sequence[Request],
+                       isl: Island) -> Optional[float]:
+        """Clean roofline duration for this island's launch — the soft
+        deadline's base. None (no backend hook) disables detection."""
+        hook = getattr(self.backend, "expected_step", None)
+        if hook is None:
+            return None
+        return hook(pre_i, dec_i, isl, self.cfg.prefill_chunk)
+
+    def _apply_pool_faults(self) -> None:
+        """Open/close scripted POOL_EXHAUST windows: seize free blocks
+        from the named engines' pools while the window is active, hand
+        them back when it closes. The serving path then exercises the
+        real backpressure machinery — no special-cased failure."""
+        inj = self.injector
+        active: Dict[int, Tuple[int, object]] = {}
+        for i, s in inj.pool_faults():
+            targets = s.engines or tuple(range(len(self.adaptors)))
+            for e in targets:
+                active.setdefault(e, (i, s))
+        for e in list(self._seized):
+            if e not in active:
+                self.adaptors[e].restore(self._seized.pop(e))
+        for e, (i, s) in active.items():
+            if e in self._seized:
+                continue
+            taken = self.adaptors[e].seize(s.blocks)
+            if taken:
+                self._seized[e] = taken
+                inj.note_pool_fault(i, s)
+
+    def _mark_degraded(self) -> None:
+        if not self._degraded_tick:
+            self._degraded_tick = True
+            self.preempt_stats["degraded_ticks"] += 1
+
+    def _alloc_with_backpressure(self, g: int, rids: Sequence[str],
+                                 lens: Sequence[int],
+                                 evict_self: bool = False) -> bool:
+        """Graceful degradation: allocate KV growth for group ``g``,
+        turning MemoryError into preempt-to-recompute — evict the
+        lowest-priority resident of the group's engines, retry. With
+        ``evict_self`` (decode growth: the batch MUST get next-token
+        slots) the batch sheds its own lowest-priority member as the
+        last resort; otherwise (prefill chunks) returns False so the
+        caller holds the work for a later tick."""
+        ad = self._adaptor(g)
+        pairs = list(zip(rids, lens))
+        while True:
+            live = [(rid, t) for rid, t in pairs
+                    if rid not in self._recovered_tick]
+            if not live:
+                return True
+            try:
+                ad.append_slots_batch([rid for rid, _ in live],
+                                      [t for _, t in live])
+                return True
+            except MemoryError:
+                self._mark_degraded()
+                victim = self._pick_victim(g, {rid for rid, _ in live})
+                if victim is not None:
+                    self._recover(victim, "backpressure")
+                    continue
+                if not evict_self:
+                    return False
+                rs = [self.pool.all[rid] for rid, _ in live]
+                self._recover(min(rs, key=lambda r: (r.priority,
+                                                     -r.arrival)),
+                              "backpressure")
+
+    def _pick_victim(self, g: int, exclude: set) -> Optional[Request]:
+        """Backpressure victim: the lowest-priority (then newest)
+        request whose KV owner span overlaps group ``g``'s engines —
+        evicting it actually frees blocks this group can take."""
+        isl = self.layout.island_of(g)
+        lead, m = isl.group_of(g)
+        span = set(range(lead, lead + m))
+        cands = []
+        for r in (self.running + self.paused
+                  + [w for w in self.waiting if w.prefilled > 0]):
+            if r.req_id in exclude or r.engine_group < 0 \
+                    or r.req_id in self._recovered_tick:
+                continue
+            t = self._tag(r)
+            l2 = (r.engine_group // t) * t
+            if set(range(l2, l2 + t)) & span:
+                cands.append(r)
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.priority, -r.arrival))
+
+    def _undo_island_tick(self, pre_i: Sequence[Request],
+                          finished: Sequence[Request],
+                          chunk_of: Dict[str, int]) -> None:
+        """A launch died after its tick's slots were issued: un-issue
+        them so allocator state matches the tokens that actually
+        materialized (none), and un-promote final-chunk requests."""
+        for r in finished:
+            r.generated -= 1
+            r.state = "queued" if r.state != "spec_dp" else "spec_dp"
+            if r in self.running:
+                self.running.remove(r)
+            self.waiting.insert(0, r)
+        for r in pre_i:
+            n = chunk_of.get(r.req_id, 0) + (1 if r in finished else 0)
+            if n:
+                self._adaptor(r.engine_group).truncate(r.req_id, n)
+
+    def _quarantine_engines(self, engines) -> None:
+        """Failure containment: mark ``engines`` dead, re-carve the
+        layout around them (``FleetLayout.quarantine``), and recover —
+        priority first — every request whose KV owner span overlaps the
+        blast radius. The victims are read off the same
+        ``SchedulerDiagnostic`` snapshot the wedge error would show."""
+        engines = set(engines) - self.quarantined
+        if not engines:
+            return
+        snap = self._diagnostic()
+        self.quarantined |= engines
+        self.incidents.append({
+            "t": self.now, "tick": self._tick, "kind": "quarantine",
+            "engines": sorted(engines), "snapshot": snap})
+        target = self._sanitize(self.layout)
+        changed = self.layout.changed_engines(target) | engines
+        rids = set(snap.running) | set(snap.paused) | {
+            rid for isl in snap.islands for rid in isl["prefill"]}
+        victims = []
+        for rid in rids:
+            r = self.pool.all[rid]
+            if r.req_id in self._recovered_tick or r.engine_group < 0 \
+                    or r.state == "done":
+                continue
+            t = self._tag(r)
+            lead = (r.engine_group // t) * t
+            if set(range(lead, lead + t)) & changed \
+                    or r.engine_group in changed:
+                victims.append(r)
+        victims.sort(key=lambda r: (-r.priority, r.arrival))
+        for r in victims:
+            self._recover(r, "quarantine")
+        if target != self.layout:
+            # containment is mandatory: a sick engine inflating the
+            # re-carve's duration must not roll back its own quarantine
+            self._apply_switch(target, enforce_deadline=False)
+
+    def _recover(self, r: Request, why: str) -> None:
+        """Re-admit a request whose KV (or island) was lost: drop its
+        blocks, fold the already-harvested output tokens into the
+        prompt (SOFT-style re-prefill — generated tokens preserved),
+        and requeue it at the head of the waiting line. The backend's
+        ``recover_request`` hook reports how many generated tokens
+        actually survived (an async engine's un-harvested ring dies
+        with its island)."""
+        g = r.engine_group
+        hook = getattr(self.backend, "recover_request", None)
+        kept = r.generated if hook is None else min(hook(r), r.generated)
+        dropped = 0
+        if g >= 0:
+            dropped = self._adaptor(g).drop_for_recompute(r.req_id)
+        for lst in (self.running, self.paused, self.waiting):
+            if r in lst:
+                lst.remove(r)
+        orig = r.prompt_len - r.folded
+        r.prompt_len = orig + kept
+        r.folded = kept
+        r.generated = kept
+        r.prefilled = 0
+        r.engine_group = -1
+        self._recovered_tick.add(r.req_id)
+        self.preempt_stats["recovered"] += 1
+        self.preempt_stats["recomputed_tokens"] += dropped
+        self.incidents.append({
+            "t": self.now, "tick": self._tick, "kind": "recover",
+            "req": r.req_id, "why": why, "kept_tokens": kept})
+        if r.done:
+            # every output token was already harvested: nothing to redo
+            r.state = "done"
+            if r.finish_t is None:
+                r.finish_t = self.now
+            return
+        r.state = "queued"
+        self.waiting.insert(0, r)
+
+    def _diagnostic(self) -> SchedulerDiagnostic:
+        islands = []
+        for isl in self.layout.islands:
+            dec = [r.req_id for r in self.running
+                   if self.layout.island_of(r.engine_group) == isl]
+            pre = [r.req_id for r in self.waiting
+                   if r.engine_group >= 0
+                   and self.layout.island_of(r.engine_group) == isl]
+            islands.append({
+                "span": f"[{isl.start},{isl.stop})",
+                "shape": isl.describe(),
+                "clock": self._clock.get(isl, 0.0),
+                "decode": dec, "prefill": pre})
+        return SchedulerDiagnostic(
+            t=self.now, tick=self._tick,
+            layout=self.layout.describe(),
+            islands=tuple(islands),
+            waiting=tuple(r.req_id for r in self.waiting),
+            running=tuple(r.req_id for r in self.running),
+            paused=tuple(r.req_id for r in self.paused),
+            pool_free=tuple(len(a._free_set) for a in self.adaptors),
+            preempt_stats=dict(self.preempt_stats),
+            quarantined=tuple(sorted(self.quarantined)),
+            health={f"[{i.start},{i.stop})": m
+                    for i, m in self._health.items()})
 
     def _log(self, phase: str) -> None:
         self.log.append(StepLog(
@@ -770,5 +1241,6 @@ class DynamicScheduler:
             n_running=len(self.running),
             n_queued=len(self.waiting) + self.pool.queue_depth(self.now),
             switched=self._switched_tick,
-            islands=self.layout.shapes()))
+            islands=self.layout.shapes(),
+            degraded=self._degraded_tick))
         self._switched_tick = False

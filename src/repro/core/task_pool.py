@@ -31,6 +31,12 @@ class Request:
     engine_group: int = -1
     generated: int = 0
     prefilled: int = 0
+    # fault recovery: tokens harvested before a quarantine/eviction and
+    # folded into the prompt for re-prefill. The request's KV footprint
+    # is prompt_len + output_len - folded (each folded token is BOTH the
+    # tail of the recovery prompt and one already-produced output token,
+    # so it occupies a single slot).
+    folded: int = 0
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     sched_t: Optional[float] = None      # first scheduling (queue time)
@@ -41,7 +47,7 @@ class Request:
         return self.generated >= self.output_len
 
     def total_context(self) -> int:
-        return self.prompt_len + self.output_len
+        return self.prompt_len + self.output_len - self.folded
 
 
 class TaskPool:

@@ -32,7 +32,22 @@ def main():
                     choices=["flying", "restart", "none"])
     ap.add_argument("--priority-frac", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault", action="append", default=[],
+                    metavar="KIND@TICK[:eng,eng...]",
+                    help="scripted fault, e.g. kill@40:3 stall@20:0,1 "
+                         "rebind_fail@10 pool_exhaust@30:2 (repeatable)")
     args = ap.parse_args()
+
+    from repro.core.faults import FaultInjector, FaultSpec
+
+    def parse_fault(s: str) -> FaultSpec:
+        kind, _, rest = s.partition("@")
+        tick, _, engs = rest.partition(":")
+        engines = tuple(int(e) for e in engs.split(",")) if engs else ()
+        return FaultSpec(kind=kind, tick=int(tick), engines=engines)
+
+    injector = FaultInjector([parse_fault(s) for s in args.fault]) \
+        if args.fault else None
 
     from repro.configs import get_config
     from repro.core.kv_adaptor import PoolGeometry
@@ -56,7 +71,8 @@ def main():
         model = build_model(cfg, jnp.float32)
         params = model.init(jax.random.key(0))
         backend = FlyingEngine(model, plan, geom, params,
-                               batch_per_engine=2, prefill_len=8)
+                               batch_per_engine=2, prefill_len=8,
+                               injector=injector)
         sched = DynamicScheduler(
             plan, geom, backend,
             SchedulerConfig(strategy=args.strategy, max_batch_per_group=2,
@@ -84,7 +100,8 @@ def main():
         budget = 16e9 - cfg.num_params() * 2 / (plan.engine_rows * 16) - 2e9
         blocks = max(int(budget / max(kv_per_tok, 1) / 16), 1024)
         geom = PoolGeometry(cfg, plan, num_blocks=blocks, block_base=16)
-        backend = SimBackend(CostModel(cfg, plan), switch_mode=args.switch)
+        backend = SimBackend(CostModel(cfg, plan), switch_mode=args.switch,
+                             injector=injector)
         sched = DynamicScheduler(
             plan, geom, backend,
             SchedulerConfig(strategy=args.strategy,
@@ -109,6 +126,17 @@ def main():
     print(f"  peak tput     : {m.peak_throughput:9.0f} tok/s")
     print(f"  mode switches : {sched.switches}")
     print(f"  preempts      : {sched.preempt_stats}")
+    if injector is not None or sched.quarantined or sched.incidents:
+        print(f"  quarantined   : {sorted(sched.quarantined)}")
+        print(f"  recovered     : {sched.preempt_stats['recovered']} reqs, "
+              f"{sched.preempt_stats['recomputed_tokens']} tokens recomputed")
+        print(f"  degraded ticks: {sched.preempt_stats['degraded_ticks']}  "
+              f"rollbacks: {sched.preempt_stats['rollbacks']}")
+        for inc in sched.incidents:
+            extra = {k: v for k, v in inc.items()
+                     if k not in ("t", "tick", "kind", "snapshot")}
+            print(f"    incident t={inc['t']:.3f} tick={inc['tick']} "
+                  f"{inc['kind']}: {extra}")
 
 
 if __name__ == "__main__":

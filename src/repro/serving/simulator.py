@@ -14,6 +14,7 @@ from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 from repro.configs.base import ArchConfig
+from repro.core.faults import TransitionFault
 from repro.core.kv_adaptor import PoolGeometry
 from repro.core.modes import ParallelPlan
 from repro.core.task_pool import Request
@@ -99,9 +100,24 @@ class SimBackend:
     switch_mode: str = "flying"     # 'flying' | 'restart' | 'none'
     dp_throughput_penalty: float = 1.0  # shift-parallelism proxy uses <1
     _layout: object = None          # last rebound layout (restart costing)
+    # scripted fault schedule (core/faults.py). The scheduler adopts it
+    # from here (like the real engine's adaptors) so one deterministic
+    # script drives detection AND injection.
+    injector: object = None
 
-    def prefill(self, reqs: Sequence[Request], island,
-                chunk_tokens: int) -> float:
+    # -- fault hooks -------------------------------------------------------
+    def _check_launch(self, island) -> float:
+        """Raise EngineFault when a dead engine is in the collective;
+        return the stall factor for the step duration otherwise."""
+        if self.injector is None:
+            return 1.0
+        eng = getattr(island, "engines", None)
+        if not callable(eng):
+            return 1.0          # bare-merge callers carry no identity
+        return self.injector.check_launch(list(eng()))
+
+    def _prefill_cost(self, reqs: Sequence[Request], island,
+                      chunk_tokens: int) -> float:
         merge = _merge_of(island)
         groups: dict = {}
         for r in reqs:
@@ -110,34 +126,96 @@ class SimBackend:
         worst = max(groups.values())
         return self.cost.prefill_step(merge, worst)
 
-    def decode(self, reqs: Sequence[Request], island) -> float:
+    def _decode_cost(self, reqs: Sequence[Request], island) -> float:
         merge = _merge_of(island)
         groups: dict = {}
         ctx: dict = {}
         for r in reqs:
             groups[r.engine_group] = groups.get(r.engine_group, 0) + 1
             ctx[r.engine_group] = ctx.get(r.engine_group, 0) \
-                + r.prompt_len + r.generated
+                + r.prompt_len + r.generated - r.folded
         worst = 0.0
         for g, b in groups.items():
             t = self.cost.decode_step(merge, b, ctx[g] / b)
             worst = max(worst, t)
         return worst / self.dp_throughput_penalty
 
+    def prefill(self, reqs: Sequence[Request], island,
+                chunk_tokens: int) -> float:
+        f = self._check_launch(island)
+        return self._prefill_cost(reqs, island, chunk_tokens) * f
+
+    def decode(self, reqs: Sequence[Request], island) -> float:
+        f = self._check_launch(island)
+        return self._decode_cost(reqs, island) * f
+
+    def expected_step(self, prefills: Sequence[Request],
+                      decodes: Sequence[Request], island,
+                      chunk_tokens: int) -> float:
+        """Clean (fault-free) roofline duration of one island launch —
+        the scheduler's soft step deadline derives from this."""
+        dt = 0.0
+        if prefills:
+            dt += self._prefill_cost(prefills, island, chunk_tokens)
+        if decodes:
+            dt += self._decode_cost(decodes, island)
+        return dt
+
     def rebind(self, layout) -> float:
         """Partial layout transition: the reshaped islands re-bind live
         (one O(1) lookup regardless of how many islands moved); static
         baselines cold-restart the widest RESHAPED binding — islands
-        the transition leaves alone cost nothing."""
-        old, self._layout = self._layout, layout
+        the transition leaves alone cost nothing.
+
+        Fault hooks fire BEFORE any state moves, so a scripted
+        REBIND_FAIL / DRAIN_CORRUPT leaves the backend still bound to
+        the old layout — exactly what the scheduler's rollback
+        assumes."""
+        old = self._layout
+        factor = 1.0
+        if self.injector is not None:
+            s = self.injector.take_rebind_fault()
+            if s is not None:
+                raise TransitionFault(
+                    f"scripted rebind failure (tick {self.injector.tick})")
+            if old is not None:
+                changed = old.changed_engines(layout)
+                s = self.injector.take_drain_corrupt(changed)
+                if s is not None:
+                    bad = (set(s.engines) & changed) or set(s.engines)
+                    raise TransitionFault(
+                        "drain corrupted at the rebind safe point",
+                        engines=bad)
+                if changed:
+                    factor = self.injector.stall_factor(changed)
+        self._layout = layout
         if self.switch_mode == "flying":
-            return self.cost.flying_switch()
+            return self.cost.flying_switch() * factor
         if self.switch_mode == "restart":
             kept = set(old.islands) if old is not None else set()
             reshaped = [i.merge for i in layout.islands if i not in kept]
             m = max(reshaped) if reshaped else layout.max_merge
-            return self.cost.cold_restart(self.cost.tp(m))
+            return self.cost.cold_restart(self.cost.tp(m)) * factor
         return 0.0
+
+    def rebind_expected(self, layout) -> Optional[float]:
+        """Clean rebind duration — the transition watchdog's deadline
+        base (call BEFORE ``rebind``: restart costing reads the
+        still-bound old layout)."""
+        if self.switch_mode == "flying":
+            return self.cost.flying_switch()
+        if self.switch_mode == "restart":
+            old = self._layout
+            kept = set(old.islands) if old is not None else set()
+            reshaped = [i.merge for i in layout.islands if i not in kept]
+            m = max(reshaped) if reshaped else layout.max_merge
+            return self.cost.cold_restart(self.cost.tp(m))
+        return None
+
+    def recover_request(self, req: Request) -> int:
+        """Synchronous backend: every counted token was host-visible
+        when its step returned, so recovery preserves them all."""
+        return req.generated
 
     def switch(self, old: int, new: int) -> float:
         """Seed-era uniform transition (kept for direct callers)."""

@@ -1,0 +1,357 @@
+"""Self-healing fleet chaos matrix (docs/PERF.md §D9).
+
+Scripted faults (core/faults.py) drive the scheduler's containment and
+recovery machinery on the simulation backend: engine kills during
+decode, rebind failures under the transition watchdog, corrupted
+safe-point drains, stall detection via the roofline step deadline, and
+scripted KV-pool exhaustion through the preempt-to-recompute
+backpressure path. Every scenario must end in surviving-request
+completion or a STRUCTURED wedge (SchedulerWedged with a full
+diagnostic) — never a crash, never silently stranded requests."""
+import copy
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.faults import (DRAIN_CORRUPT, KILL, POOL_EXHAUST,
+                               REBIND_FAIL, STALL, EngineFault,
+                               FaultInjector, FaultSpec)
+from repro.core.kv_adaptor import KVCacheAdaptor, PoolGeometry
+from repro.core.modes import FleetLayout, ParallelPlan
+from repro.core.policy import FlyingPolicy
+from repro.core.scheduler import (HARD, LIVE, SEQUENTIAL, SOFT,
+                                  DynamicScheduler, SchedulerConfig,
+                                  SchedulerWedged)
+from repro.core.task_pool import PRIORITY_HIGH, Request
+from repro.serving.simulator import CostModel, SimBackend
+
+CFG = get_config("llama3-8b")
+PLAN = ParallelPlan(engine_rows=1, tp_base=16, data_rows=16)
+STRATEGIES = [SEQUENTIAL, SOFT, HARD, LIVE]
+
+
+def make_sched(strategy=HARD, injector=None, policy="flying",
+               blocks=40000):
+    geom = PoolGeometry(CFG, PLAN, num_blocks=blocks, block_base=16)
+    be = SimBackend(CostModel(CFG, PLAN), switch_mode="flying",
+                    injector=injector)
+    sc = SchedulerConfig(strategy=strategy)
+    return DynamicScheduler(
+        PLAN, geom, be, sc,
+        policy=FlyingPolicy() if policy == "flying" else None)
+
+
+def burst(n=40, rate=50.0, prompt=512, out=64, prio_every=0):
+    return [Request(
+        req_id=f"r{i}", arrival=i / rate, prompt_len=prompt,
+        output_len=out,
+        priority=PRIORITY_HIGH if prio_every and i % prio_every == 0
+        else 0) for i in range(n)]
+
+
+def assert_all_done(s, n):
+    done = [r for r in s.pool.all.values() if r.state == "done"]
+    assert len(done) == n, \
+        [f"{r.req_id}:{r.state}" for r in s.pool.all.values()
+         if r.state != "done"]
+    for r in done:
+        assert r.generated == r.output_len
+
+
+# ---------------------------------------------------------------------------
+# injector unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_faultspec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(kind="meteor", tick=0)
+
+
+def test_injector_kill_permanent_stall_windowed_oneshot_spent():
+    inj = FaultInjector([
+        FaultSpec(kind=KILL, tick=5, engines=(3,)),
+        FaultSpec(kind=STALL, tick=2, engines=(0,), factor=4.0,
+                  duration=2),
+        FaultSpec(kind=REBIND_FAIL, tick=1, duration=100),
+    ])
+    inj.advance(0)
+    assert not inj.dead_engines()
+    assert inj.stall_factor([0]) == 1.0
+    assert inj.take_rebind_fault() is None
+    inj.advance(2)
+    assert inj.stall_factor([0, 7]) == 4.0      # window open
+    assert inj.stall_factor([7]) == 1.0         # other engines clean
+    assert inj.take_rebind_fault() is not None  # one-shot fires...
+    assert inj.take_rebind_fault() is None      # ...once
+    inj.advance(4)
+    assert inj.stall_factor([0]) == 1.0         # window closed
+    inj.advance(9)
+    assert inj.dead_engines() == frozenset({3})  # KILL is permanent
+    with pytest.raises(EngineFault) as ei:
+        inj.check_launch([2, 3, 4])
+    assert ei.value.engines == frozenset({3})
+    assert inj.check_launch([2, 4]) == 1.0      # dead engine not involved
+    assert inj.fired                            # audit log populated
+
+
+def test_quarantine_layout_algebra():
+    lay = FleetLayout.uniform(PLAN, 4)
+    q = lay.quarantine({5})
+    assert q.island_of(5).n_engines == 1 and q.island_of(5).merge == 1
+    assert q.island_of(0).merge == 4            # untouched buddy group
+    assert q.quarantine({5}) == q               # idempotent
+    assert q.total_engines == lay.total_engines
+
+
+# ---------------------------------------------------------------------------
+# chaos matrix: engine kill during decode, under every strategy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_engine_kill_quarantines_and_completes(strategy):
+    inj = FaultInjector([FaultSpec(kind=KILL, tick=8, engines=(3,))])
+    s = make_sched(strategy, injector=inj)
+    for r in burst(40):
+        s.submit(r)
+    s.run()
+    assert 3 in s.quarantined
+    assert s.preempt_stats["recovered"] >= 1
+    assert any(i["kind"] == "quarantine" for i in s.incidents)
+    assert_all_done(s, 40)
+    # the dead tile never serves again after the quarantine tick
+    q_tick = min(i["tick"] for i in s.incidents
+                 if i["kind"] == "quarantine")
+    for i in s.incidents:
+        if i["kind"] == "engine_fault":
+            assert i["tick"] <= q_tick
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_rebind_fault_rolls_back_and_later_retries(strategy):
+    """A scripted rebind failure must roll the transition back (no
+    stranded paused requests) and the fleet keeps serving; the policy's
+    next attempt succeeds."""
+    inj = FaultInjector([FaultSpec(kind=REBIND_FAIL, tick=0,
+                                   duration=1 << 30)])
+    s = make_sched(strategy, injector=inj)
+    for r in burst(40, prio_every=7):
+        s.submit(r)
+    s.run()
+    assert s.preempt_stats["rollbacks"] >= 1
+    assert any(i["kind"] == "rollback" for i in s.incidents)
+    assert s.switches >= 1          # the retry (one-shot spent) landed
+    assert not s.paused
+    assert_all_done(s, 40)
+
+
+def test_drain_corrupt_quarantines_named_engines():
+    """A corrupted safe-point drain fails the rebind AND kills the named
+    engines: rollback plus quarantine, then the fleet serves around the
+    hole."""
+    inj = FaultInjector([FaultSpec(kind=DRAIN_CORRUPT, tick=0,
+                                   engines=(0, 1), duration=1 << 30)])
+    s = make_sched(HARD, injector=inj, policy=None)
+    inj.advance(0)
+    s.backend.rebind(s.layout)      # prime the sim's bound layout
+    assert not s._transition(s.layout.carve(0, 2, 2))
+    assert {0, 1} <= s.quarantined
+    assert s.preempt_stats["rollbacks"] >= 1
+    for r in burst(20):
+        s.submit(r)
+    s.run()
+    assert_all_done(s, 20)
+    for r in s.pool.all.values():
+        assert r.engine_group not in (0, 1)
+
+
+def test_stall_detection_quarantines_island():
+    """A stall no exception surfaces (hung collective, sick HBM) trips
+    the roofline step deadline ``health_misses`` times and quarantines
+    the island; its requests — priority first — recover onto survivors."""
+    inj = FaultInjector([FaultSpec(kind=STALL, tick=0, engines=(0,),
+                                   factor=50.0, duration=1 << 30)])
+    s = make_sched(HARD, injector=inj, policy=None)
+    assert s._transition(s.layout.carve(0, 2, 2))  # TP island on [0,2)
+    s.submit(Request(req_id="hp", arrival=0.0, prompt_len=512,
+                     output_len=32, priority=PRIORITY_HIGH))
+    for i in range(8):
+        s.submit(Request(req_id=f"bg{i}", arrival=0.0, prompt_len=256,
+                         output_len=32))
+    s.run()
+    assert s.quarantined == {0, 1}
+    assert s.preempt_stats["recovered"] >= 1
+    assert_all_done(s, 9)
+    hp = s.pool.all["hp"]
+    assert hp.folded > 0 or hp.engine_group not in (0, 1)
+
+
+@pytest.mark.parametrize("strategy", [SEQUENTIAL, HARD, LIVE])
+def test_pool_exhaust_degrades_gracefully(strategy):
+    """A scripted full-pool memory burst mid-run becomes backpressure
+    (evict lowest-priority to recompute), never a crash; the window
+    closes and everything completes."""
+    # the window must straddle a block boundary of some running decode
+    # (growth takes a fresh block only every ``capacity`` tokens), so it
+    # spans a few dozen ticks
+    inj = FaultInjector([FaultSpec(kind=POOL_EXHAUST, tick=10,
+                                   blocks=-1, duration=60)])
+    # policy=None: the layout policy would react to the full pool by
+    # merging the fleet (UC3) and pausing everyone — legitimate, but it
+    # hides the backpressure path this test pins down
+    s = make_sched(strategy, injector=inj, policy=None)
+    for r in burst(24):
+        s.submit(r)
+    s.run()
+    assert s.preempt_stats["degraded_ticks"] >= 1
+    assert s.preempt_stats["recovered"] >= 1
+    assert any(l.degraded for l in s.log)
+    assert not s._seized                 # every seized block handed back
+    assert_all_done(s, 24)
+    # recovery folded already-produced tokens into the prompt: folded
+    # counts stay consistent with the slot math
+    for r in s.pool.all.values():
+        assert 0 <= r.folded <= r.output_len
+        assert r.total_context() == r.prompt_len + r.output_len - r.folded
+
+
+def test_midprefill_rows_counted_against_group_batch_cap():
+    """A mid-prefill request holds a batch row on its sticky group
+    across ticks; admission must keep counting it or the group's decode
+    batch overfills past ``max_batch_per_group`` once the chunks finish
+    (the real engine asserts the overflow at row assignment — and every
+    fold-recovered prompt spans several chunks, so quarantine recovery
+    hit this first)."""
+    geom = PoolGeometry(CFG, PLAN, num_blocks=40000, block_base=16)
+    be = SimBackend(CostModel(CFG, PLAN), switch_mode="flying")
+    s = DynamicScheduler(
+        PLAN, geom, be,
+        SchedulerConfig(max_batch_per_group=2, prefill_chunk=64),
+        policy=None)
+    cap = s.cfg.max_batch_per_group
+    orig = be.decode
+
+    def checked(reqs, island):
+        per: dict = {}
+        for r in reqs:
+            per[r.engine_group] = per.get(r.engine_group, 0) + 1
+        assert max(per.values()) <= cap, \
+            f"group decode batch over cap: {per}"
+        return orig(reqs, island)
+
+    be.decode = checked
+    for r in burst(40):                 # prompt 512 = 8 chunks of 64
+        s.submit(r)
+    s.run()
+    assert_all_done(s, 40)
+
+
+def test_fault_free_injector_is_a_noop():
+    """An armed-but-empty injector must not perturb scheduling at all —
+    the fault-free hot path is untouched (the §Perf guard)."""
+    reqs = burst(30, prio_every=9)
+    plain = make_sched(HARD)
+    wired = make_sched(HARD, injector=FaultInjector([]))
+    for s in (plain, wired):
+        for r in reqs:
+            s.submit(copy.deepcopy(r))
+        s.run()
+    assert plain.switches == wired.switches
+    for rid in plain.pool.all:
+        a, b = plain.pool.all[rid], wired.pool.all[rid]
+        assert (a.state, a.generated, a.finish_t) == \
+            (b.state, b.generated, b.finish_t)
+
+
+# ---------------------------------------------------------------------------
+# structured wedge diagnostics (satellite: scheduler observability)
+# ---------------------------------------------------------------------------
+
+def test_total_fleet_loss_raises_structured_wedge():
+    inj = FaultInjector([FaultSpec(kind=KILL, tick=4,
+                                   engines=tuple(range(16)))])
+    s = make_sched(HARD, injector=inj)
+    for r in burst(10):
+        s.submit(r)
+    with pytest.raises(SchedulerWedged, match="wedged") as ei:
+        s.run()
+    d = ei.value.diagnostic
+    assert d is not None
+    assert d.quarantined == tuple(range(16))
+    assert len(d.pool_free) == 16
+    # the message carries the full snapshot, not a bare count string
+    msg = str(ei.value)
+    assert "pool_free" in msg and "quarantined" in msg
+    assert isinstance(ei.value, RuntimeError)   # legacy contract
+
+
+# ---------------------------------------------------------------------------
+# allocator exception safety (satellite: bind_group/allocate)
+# ---------------------------------------------------------------------------
+
+def _adaptor_state(ad):
+    return (
+        sorted(ad.free),
+        set(ad._free_set),
+        None if len(ad.group) <= 1 else set(ad._group_free()),
+        {rid: (e.length, tuple(e.block_ids),
+               tuple((seg.start, seg.tag, tuple(seg.ids))
+                     for seg in e.segments))
+         for rid, e in ad.table.items()},
+    )
+
+
+def small_geom(blocks=8):
+    return PoolGeometry(get_config("stablelm-1.6b"), PLAN,
+                        num_blocks=blocks, block_base=16)
+
+
+def test_midbatch_memoryerror_leaves_allocator_untouched():
+    ad = KVCacheAdaptor(small_geom())
+    ad.append_slots("r0", 40)
+    ad.append_slots("r1", 16)
+    before = _adaptor_state(ad)
+    with pytest.raises(MemoryError, match="batch"):
+        # r0's growth alone fits; r1's pushes the batch over the pool —
+        # the transactional pre-check must reject with ZERO mutation
+        ad.append_slots_batch(["r0", "r1"], [8, 1000])
+    assert _adaptor_state(ad) == before
+    # the pool still serves after the rejected batch
+    ad.append_slots("r0", 8)
+
+
+def test_single_allocate_memoryerror_is_side_effect_free():
+    ad = KVCacheAdaptor(small_geom())
+    ad.append_slots("r0", 16)
+    before = _adaptor_state(ad)
+    with pytest.raises(MemoryError):
+        ad.append_slots("huge", 100000)
+    assert _adaptor_state(ad) == before
+    assert "huge" not in ad.table       # no phantom entry
+
+
+def test_group_free_set_survives_failed_group_take():
+    a, b = KVCacheAdaptor(small_geom()), KVCacheAdaptor(small_geom())
+    a.bind_group([a, b])
+    b.bind_group([a, b])
+    a.append_slots("r0", 16)
+    before_a, before_b = _adaptor_state(a), _adaptor_state(b)
+    shared_before = set(a._group_free())
+    with pytest.raises(MemoryError):
+        a.append_slots_batch(["r0"], [100000])
+    assert _adaptor_state(a) == before_a
+    assert _adaptor_state(b) == before_b
+    assert set(a._group_free()) == shared_before
+    assert a._group_free() is b._group_free()   # still ONE shared object
+
+
+def test_seize_restore_roundtrip():
+    ad = KVCacheAdaptor(small_geom())
+    total = ad.free_blocks()
+    taken = ad.seize(3)
+    assert len(taken) == 3 and ad.free_blocks() == total - 3
+    assert ad.seize(-1) and ad.free_blocks() == 0
+    with pytest.raises(MemoryError):
+        ad.append_slots("r0", 1)
+    ad.restore(taken)
+    assert ad.free_blocks() == 3
+    ad.append_slots("r0", 1)            # pool serves again

@@ -92,3 +92,14 @@ def test_heterogeneous_island_serving():
     equivalent uniform fleet."""
     out = run_script("check_island_serving.py")
     assert "ISLAND SERVING OK" in out
+
+
+def test_fault_recovery_across_quarantine():
+    """Self-healing (§D9): an engine tile is scripted dead mid-decode,
+    its island quarantined, and its request recovered onto a surviving
+    island by folding the harvested tokens into a pinned recovery
+    prompt — every stream (recovered AND untouched) token-identical to
+    a fault-free reference, survivor island undrained, and scripted
+    rebind/drain faults leave the layout untouched."""
+    out = run_script("check_fault_recovery.py")
+    assert "FAULT RECOVERY OK" in out
