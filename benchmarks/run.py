@@ -78,6 +78,16 @@ def main() -> None:
         for row in fault_recovery.run(guard=True, out=fdata):
             print(row)
         print(f"fault_recovery,elapsed_s,{time.time() - t0:.1f},")
+        # prefix-cache guard (§D10, simulation backend): warm TTFT <=
+        # 0.25x cold on a shared-prefix workload, and a same-prefix
+        # burst on a tight pool admits strictly more concurrent
+        # requests (shorter makespan) than the uncached reference
+        t0 = time.time()
+        from benchmarks import prefix_cache
+        xdata = {}
+        for row in prefix_cache.run(guard=True, out=xdata):
+            print(row)
+        print(f"prefix_cache,elapsed_s,{time.time() - t0:.1f},")
         # perf trajectory artifacts: future PRs diff against these files
         import jax
         meta = {"devices": len(jax.devices()),
@@ -85,9 +95,11 @@ def main() -> None:
         data["meta"] = meta
         pdata["meta"] = meta
         fdata["meta"] = meta
+        xdata["meta"] = meta
         for fname, d in (("BENCH_decode.json", data),
                          ("BENCH_prefill.json", pdata),
-                         ("BENCH_faults.json", fdata)):
+                         ("BENCH_faults.json", fdata),
+                         ("BENCH_prefix.json", xdata)):
             path = os.path.join(os.path.dirname(__file__), "..", fname)
             with open(path, "w") as f:
                 json.dump(d, f, indent=2, sort_keys=True)
@@ -98,7 +110,7 @@ def main() -> None:
     from benchmarks import (decode_attention, fault_recovery,
                             fig8_bursty, fig9_tpot, fig10_longcontext,
                             kernels_micro, prefill_attention,
-                            steady_state, table1_priority,
+                            prefix_cache, steady_state, table1_priority,
                             table2_context_switch)
     suites = {
         "steady_state": lambda: steady_state.run(smoke=args.fast),
@@ -113,6 +125,7 @@ def main() -> None:
         "kernels": kernels_micro.run,
         "faults": lambda: fault_recovery.run(
             n_requests=120 if args.fast else 400),
+        "prefix": lambda: prefix_cache.run(),
     }
     print("benchmark,metric,value,derived")
     for name, fn in suites.items():

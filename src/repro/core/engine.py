@@ -61,7 +61,7 @@ from repro.core.faults import TransitionFault
 from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry,
                                    bind_fleet, ragged_arange)
 from repro.core.modes import FleetLayout, Island, ParallelPlan
-from repro.core.task_pool import Request
+from repro.core.task_pool import Request, prompt_token_ids
 from repro.core.views import make_serving_ctx
 from repro.core.weights_manager import WeightsManager, shard_view
 from repro.models.model import Model
@@ -145,7 +145,7 @@ class FlyingEngine:
                  top_k: int = 0, harvest_limit: int = 512,
                  mixed_step: bool = True,
                  layout: Optional[FleetLayout] = None,
-                 injector=None):
+                 injector=None, seed_mode: str = "fleet"):
         self.model = model
         self.cfg = model.cfg
         self.plan = plan
@@ -163,6 +163,8 @@ class FlyingEngine:
         self.temperature = temperature
         self.harvest_limit = max(int(harvest_limit), 1)
         self.mixed_step = mixed_step
+        assert seed_mode in ("fleet", "request"), seed_mode
+        self.seed_mode = seed_mode
         assert fused_sampling or temperature <= 0.0, \
             "the legacy host path samples greedily; temperature/top_k " \
             "need fused_sampling=True"
@@ -619,6 +621,29 @@ class FlyingEngine:
         self._seed_cursor = (base + B) & 0xFFFFFFFF
         return iota + jnp.uint32(base)
 
+    def _sample_seeds(self, B: int, reqs: Sequence[Request], rows,
+                      phase: str) -> Optional[jax.Array]:
+        """Per-launch sampling seeds. ``seed_mode='fleet'`` (default) is
+        the cursor draw above — cheapest, but the stream depends on how
+        many launches preceded this one. ``'request'`` derives each
+        row's seed from (req_id, output index), making token streams
+        independent of batching AND of how much prefill actually ran —
+        a prefix-cache hit skips launches, which would shift the
+        cursor. The output index at launch time: the scheduler promotes
+        (generated += 1) BEFORE launching, so a final prefill chunk
+        samples index ``generated - 1`` (== 0) and decode rows sample
+        ``generated`` — identical for mixed and sequential paths."""
+        if self.temperature <= 0.0:
+            return None
+        if self.seed_mode != "request":
+            return self._seeds(B)
+        host = np.zeros((B,), np.uint32)
+        for r, row in zip(reqs, rows):
+            idx = max(r.generated - 1, 0) if phase == "prefill" \
+                else r.generated
+            host[int(row)] = abs(hash((r.req_id, int(idx)))) & 0xFFFFFFFF
+        return jnp.asarray(host)
+
     # ------------------------------------------------------------------
     def _stage_prefill(self, rt: _IslandRT, reqs: Sequence[Request],
                        mb_min: int = 1):
@@ -680,22 +705,23 @@ class FlyingEngine:
                 blockcat = btab[rcat, poscat // cap].astype(np.int64)
                 slots[rcat, offcat] = blockcat * cap + poscat % cap
             else:
-                # §D8: chunk write slots are SEGMENT-LOCAL against each
-                # entry's live segment — a rebind froze earlier
-                # segments, so global positions no longer index the
-                # concatenated table uniformly
-                segs_cur = [e.segments[-1] for e in entries]
-                for r, s in zip(reqs, segs_cur):
-                    assert s.tag == isl.merge, \
+                # §D8: chunk write slots are RUN-LOCAL against each
+                # entry's live (current-tag) run — a rebind froze
+                # earlier segments, so global positions no longer index
+                # the concatenated table uniformly. Writes stay past
+                # any shared prefix blocks (prior >= cached tokens).
+                tails = [self._seg_runs(e)[-1] for e in entries]
+                for r, t_run in zip(reqs, tails):
+                    assert t_run[0] == isl.merge, \
                         (r.req_id, "chunk not under the island merge",
-                         s.tag, isl.merge)
-                seg_start = np.fromiter((s.start for s in segs_cur),
+                         t_run[0], isl.merge)
+                seg_start = np.fromiter((t_run[1] for t_run in tails),
                                         np.int64, n)
                 spos = poscat - np.repeat(seg_start, chunk)
-                maxb = max(len(s.ids) for s in segs_cur)
+                maxb = max(len(t_run[2]) for t_run in tails)
                 segtab = np.zeros((n, maxb), np.int64)
-                for i, s in enumerate(segs_cur):
-                    segtab[i, :len(s.ids)] = s.ids
+                for i, t_run in enumerate(tails):
+                    segtab[i, :len(t_run[2])] = t_run[2]
                 slots[rcat, offcat] = segtab[rowcat, spos // cap] * cap \
                     + spos % cap
         priorb = bufs["prior"]
@@ -721,7 +747,7 @@ class FlyingEngine:
             batch["prior_len"] = self._h2d(priorb)
         else:
             cur_start = np.fromiter(
-                (e.segments[-1].start for e in entries), np.int64, n)
+                (self._seg_runs(e)[-1][1] for e in entries), np.int64, n)
             lt = self._seg_arrays(isl, reqs, entries, rows, B, live,
                                   (prior - cur_start).astype(np.int64))
             for k, v in lt.items():
@@ -735,7 +761,7 @@ class FlyingEngine:
         t0 = time.perf_counter()
         B = rt.B
         batch, rows, final, T, mb, live = self._stage_prefill(rt, reqs)
-        seeds = self._seeds(B)
+        seeds = self._sample_seeds(B, reqs, rows, "prefill")
         if seeds is not None:
             batch["sample_seeds"] = seeds
         runner = self.pool.runner(
@@ -862,8 +888,8 @@ class FlyingEngine:
         })
         # two seed draws mirror the sequential two-launch assignment, so
         # stochastic sampling stays token-identical across the fusion
-        p_seeds = self._seeds(B)
-        d_seeds = self._seeds(B)
+        p_seeds = self._sample_seeds(B, prefills, prows, "prefill")
+        d_seeds = self._sample_seeds(B, decodes, drows, "decode")
         if p_seeds is not None:
             batch["p_sample_seeds"] = p_seeds
             batch["d_sample_seeds"] = d_seeds
@@ -886,41 +912,69 @@ class FlyingEngine:
     def _live_tags(self, entries, merge: int):
         """Sorted tag tuple when any entry's KV spans segments beyond
         the island's current merge; None selects the single-view fast
-        path (the seed-era staging, byte-identical)."""
+        path (the seed-era staging, byte-identical). Same-tag shared
+        prefix segments DON'T trigger the live path: their blocks are
+        full and block-aligned under the same capacity, so the flat
+        concatenated table stays position-correct."""
         tags = {s.tag for e in entries for s in e.segments}
         if tags <= {merge}:
             return None
         tags.add(merge)
         return tuple(sorted(tags))
 
+    @staticmethod
+    def _seg_runs(e):
+        """Contiguous same-tag segments merged into one logical run
+        each: ``[tag, start, ids, owners]`` in order. A warm request's
+        shared prefix head and its private same-tag continuation are
+        block-aligned under one capacity, so position math over the
+        concatenated ids is valid — the staging paths below only ever
+        see runs, never raw segments."""
+        runs = []
+        for s in e.segments:
+            if runs and runs[-1][0] == s.tag:
+                runs[-1][2].extend(s.ids)
+            else:
+                runs.append([s.tag, s.start, list(s.ids), s.owners])
+        return runs
+
     def _seg_arrays(self, isl: Island, reqs: Sequence[Request], entries,
                     rows: np.ndarray, B: int, tags, cur_len):
         """Per-tag (block table, token count, owner offset) host arrays
-        for the live step. ``cur_len[i]`` is the current-tag segment's
+        for the live step. ``cur_len[i]`` is the current-tag RUN's
         token count contribution for entry i (decode: incl. the incoming
         token; prefill: prior tokens only). Owner offsets are merge-axis
-        engine offsets of the tag-aligned group that wrote the segment —
-        buddy alignment makes them derivable from the request's lead
-        engine alone."""
+        engine offsets of the group that wrote the run — derived from
+        the owners' fleet positions when recorded (an attached shared
+        prefix may be owned by a group unrelated to the reader's lead
+        engine), falling back to the buddy-alignment formula."""
         m = isl.merge
         out: Dict[str, np.ndarray] = {}
+        runs_of = [self._seg_runs(e) for e in entries]
         for t in tags:
             per = []
             for i, (r, e) in enumerate(zip(reqs, entries)):
-                segs = [j for j, s in enumerate(e.segments) if s.tag == t]
-                assert len(segs) <= 1, \
-                    (r.req_id, "duplicate tag segments", e.tags())
-                if not segs:
+                runs = runs_of[i]
+                match = [k for k, run in enumerate(runs) if run[0] == t]
+                assert len(match) <= 1, \
+                    (r.req_id, "non-contiguous tag runs", e.tags())
+                if not match:
                     per.append((i, [], 0, 0))
                     continue
-                j = segs[0]
-                seg = e.segments[j]
-                ntok = cur_len[i] if t == m else e.seg_tokens(j)
+                k = match[0]
+                _, start, ids, owners = runs[k]
+                if t == m:
+                    ntok = cur_len[i]
+                else:
+                    end = runs[k + 1][1] if k + 1 < len(runs) else e.length
+                    ntok = end - start
                 g_lead = isl.start + ((r.engine_group - isl.start)
                                       // m) * m
-                own = (r.engine_group // t) * t - g_lead
+                own_lead = (min(o.engine_id for o in owners) if owners
+                            else (r.engine_group // t) * t)
+                own = own_lead - g_lead
                 assert 0 <= own <= m - t, (r.req_id, t, own, m)
-                per.append((i, seg.ids, ntok, own))
+                per.append((i, ids, ntok, own))
             mb_t = bucket_pow2(max([len(ids) for _, ids, _, _ in per] + [1]))
             bt = np.zeros((B, mb_t), np.int32)
             ln = np.zeros((B,), np.int32)
@@ -1001,11 +1055,11 @@ class FlyingEngine:
         B = rt.B
         n = len(reqs)
         cap = self.geom.capacity(isl.merge)
-        segs = [e.segments[-1] for e in entries]
-        for r, s in zip(reqs, segs):
-            assert s.tag == isl.merge, \
-                (r.req_id, "pending slot not retagged", s.tag, isl.merge)
-        seg_start = np.fromiter((s.start for s in segs), np.int64, n)
+        tails = [self._seg_runs(e)[-1] for e in entries]
+        for r, t_run in zip(reqs, tails):
+            assert t_run[0] == isl.merge, \
+                (r.req_id, "pending slot not retagged", t_run[0], isl.merge)
+        seg_start = np.fromiter((t[1] for t in tails), np.int64, n)
         cur_len = (lengths - seg_start).astype(np.int64)
         bufs = {
             "toks": np.zeros((B, 1), np.int32),
@@ -1016,7 +1070,7 @@ class FlyingEngine:
         p_loc = p - seg_start               # segment-local write offset
         bufs["pos"][rows, 0] = p
         slot_blk = np.fromiter(
-            (s.ids[int(pl) // cap] for s, pl in zip(segs, p_loc)),
+            (t[2][int(pl) // cap] for t, pl in zip(tails, p_loc)),
             np.int64, n)
         bufs["slots"][rows] = slot_blk * cap + p_loc % cap
         bufs.update(self._seg_arrays(isl, reqs, entries, rows, B, live,
@@ -1086,7 +1140,7 @@ class FlyingEngine:
             for k in bufs:
                 if k.startswith("lt_"):
                     batch[k] = self._h2d(bufs[k])
-        seeds = self._seeds(B)
+        seeds = self._sample_seeds(B, reqs, c.rows, "decode")
         if seeds is not None:
             batch["sample_seeds"] = seeds
         runner = self.pool.runner(
@@ -1122,12 +1176,18 @@ class FlyingEngine:
                 # bounded: eviction is safe, prompts regenerate from the
                 # req_id seed deterministically
                 self._prompt_cache.pop(next(iter(self._prompt_cache)))
-            rng = np.random.default_rng(abs(hash(r.req_id)) % (1 << 31))
             # the FULL prompt: chunked prefill streams it in slices (the
-            # seed-era cap at prefill_len silently truncated long prompts)
-            p = rng.integers(0, self.cfg.vocab_size, size=r.prompt_len)
+            # seed-era cap at prefill_len silently truncated long
+            # prompts). Shared helper so scheduler-side content hashing
+            # sees exactly the bytes this backend will prefill.
+            p = prompt_token_ids(r, self.cfg.vocab_size)
             self._prompt_cache[r.req_id] = p
         return p
+
+    def prompt_tokens(self, r: Request) -> np.ndarray:
+        """Scheduler hook: the exact token ids this backend prefills for
+        ``r`` — the prefix cache hashes these for content addressing."""
+        return self._prompt_tokens(r)
 
     def recover_request(self, r: Request) -> int:
         """Scheduler recovery hook: surface whatever of this request's

@@ -37,6 +37,21 @@ Arch caveats (DESIGN.md §5): MLA's compressed cache and MQA's single KV
 head cannot head-shard, so their view (and capacity) is mode-invariant —
 ``capacity_scales`` reports whether Eq. 3 applies, ``live_readable``
 whether cross-tag reads are possible at all.
+
+Cross-request prefix cache (docs/PERF.md §D10): on top of the segment
+machinery, the adaptor can content-address full prompt blocks. Each
+committed block gets a CHAINED hash key (previous block's key + mode
+tag + token ids), so a block's identity includes everything before it;
+a new request's prompt is walked block-by-block against the index and
+its leading segment ATTACHES to resident blocks (refcount++, zero
+prefill) — copy-on-write at block granularity: shared blocks are
+immutable, the first divergent or partial block starts a private
+segment, so no device copy is ever needed. Cached blocks keep their
+writer's mode tag and owner group; the per-segment live-read contract
+above is exactly what makes a prefix cached under one merge readable
+from islands running another. Blocks whose refcount drops to zero are
+PARKED in a per-owner eviction pool (LRU), not freed — reclaimed on
+demand when the free list runs dry, and drained first by ``seize``.
 """
 from __future__ import annotations
 
@@ -197,11 +212,18 @@ class Segment:
     rebind freezes it; new tokens go to a fresh segment under the new
     capacity. ``owners`` are the adaptors whose physical pools hold the
     segment's blocks (the TP-group members at write time) — releases
-    return ids to exactly these."""
+    return ids to exactly these.
+
+    ``shared`` marks a refcounted prefix-cache segment: its blocks are
+    immutable (copy-on-write — appends always open a fresh private
+    segment) and release/truncate DETACH its ``cached`` entries instead
+    of freeing the ids."""
     tag: int
     start: int
     ids: List[int] = field(default_factory=list)
     owners: Tuple["KVCacheAdaptor", ...] = ()
+    shared: bool = False
+    cached: Tuple["CachedBlock", ...] = ()
 
 
 @dataclass
@@ -247,6 +269,95 @@ class RequestKV:
         return self._ids_np
 
 
+# ---------------------------------------------------------------------------
+# content-addressed prefix cache (§D10)
+# ---------------------------------------------------------------------------
+
+def _chain_key(prev: int, tag: int, tokens) -> int:
+    """Chained content hash of one full block: previous block's key +
+    writer mode tag + the block's token ids. Chaining makes a block's
+    identity include EVERYTHING before it, so equal keys imply equal
+    full prefixes; tag is mixed in because capacity (tokens/block) and
+    the physical head slicing differ per tag — chains never mix tags.
+    Process-stable is sufficient (the index lives in one process)."""
+    return hash((prev, tag, np.asarray(tokens, np.int64).tobytes()))
+
+
+@dataclass(eq=False)
+class CachedBlock:
+    """One content-addressed full block resident in its owners' pools.
+
+    ``refcount`` counts attached requests (including the writer until
+    it releases). At zero the block is PARKED in every owner's
+    ``_evict_pool`` — still in the index, revivable by the next attach —
+    and only actually freed by LRU reclaim, ``seize`` or eviction."""
+    key: int
+    block_id: int
+    tag: int
+    owners: Tuple["KVCacheAdaptor", ...]
+    refcount: int = 0
+    last_use: int = 0
+    # adaptor whose ``_parked_clean`` counter this parked block is
+    # credited to (None = not counted; see PrefixCache._count_parked)
+    counted: Optional["KVCacheAdaptor"] = None
+
+
+class PrefixCache:
+    """Fleet-wide content-addressed index over committed prompt blocks.
+
+    One instance is shared by every adaptor in the fleet (the scheduler
+    wires it); block ids inside entries are per-owner-pool, so the same
+    id on different engines never collides — the chained key is the
+    global identity. ``stats`` are cumulative counters surfaced in
+    ``StepLog``/serve."""
+
+    def __init__(self) -> None:
+        self.index: Dict[int, CachedBlock] = {}
+        self.tags: set = set()          # tags with >=1 committed chain
+        self._clock = 0
+        self.stats = {"hit_requests": 0, "miss_requests": 0,
+                      "hit_tokens": 0, "inserted_blocks": 0,
+                      "evictions": 0}
+
+    def touch(self, cb: CachedBlock) -> None:
+        self._clock += 1
+        cb.last_use = self._clock
+
+    def _count_parked(self, cb: CachedBlock) -> None:
+        """O(owners) bookkeeping at park time: credit the block to its
+        lead owner's ``_parked_clean`` counter when its owners are
+        exactly one bound group — that group can reclaim it with a
+        single eviction, so ``free_blocks`` may count it as allocatable
+        WITHOUT scanning the pools (the scan is O(parked blocks) and
+        sits on the per-tick admission path). Blocks whose ownership no
+        longer matches any group (layout changed under them) are not
+        credited — they stay reclaimable via the exact ``_reclaimable``
+        slow path; ``bind_fleet`` recounts everything on rebind."""
+        lead = min(cb.owners, key=lambda a: a.engine_id)
+        if set(cb.owners) == set(lead.group):
+            cb.counted = lead
+            lead._parked_clean += 1
+
+    def _uncount(self, cb: CachedBlock) -> None:
+        if cb.counted is not None:
+            cb.counted._parked_clean -= 1
+            cb.counted = None
+
+    def evict(self, cb: CachedBlock) -> None:
+        """Drop one refcount-0 block: remove it from the index and
+        return its id to every owner's free pool. Descendant chain
+        entries become unreachable (lookups walk from the root) and age
+        out of the pool by the same LRU — they are never resurrected
+        because their parent key is gone."""
+        assert cb.refcount == 0, "evicting a referenced prefix block"
+        self._uncount(cb)
+        self.index.pop(cb.key, None)
+        for a in cb.owners:
+            if a._evict_pool.pop(cb.block_id, None) is not None:
+                a._give_back((cb.block_id,))
+        self.stats["evictions"] += 1
+
+
 class KVCacheAdaptor:
     """Constant-time metadata remapping across DP/TP layouts (paper §4.2.2).
 
@@ -275,6 +386,17 @@ class KVCacheAdaptor:
         # O(members) per block take/return — never re-intersected on the
         # admission path.
         self._group_free_set: Optional[set] = None
+        # prefix cache (None = content addressing off; legacy behavior
+        # is then bit-identical). ``_evict_pool`` parks this engine's
+        # refcount-0 cached blocks: id -> CachedBlock, reclaimed LRU.
+        self.prefix_cache: Optional[PrefixCache] = None
+        self._evict_pool: Dict[int, CachedBlock] = {}
+        # parked blocks credited to THIS adaptor as lead of a clean
+        # owner group — free_blocks' O(group) reclaimable credit
+        self._parked_clean = 0
+        # fleet position, stamped by bind_fleet — cross-group owner
+        # offsets in the engine's per-segment staging need it.
+        self.engine_id = 0
 
     # -- O(1) mode switch --------------------------------------------------
     def switch_mode(self, merge: int) -> None:
@@ -305,10 +427,61 @@ class KVCacheAdaptor:
 
     def free_blocks(self) -> int:
         """Blocks allocatable by THIS adaptor's group: free here AND on
-        every bound member."""
+        every bound member, plus cold cached blocks the group could
+        reclaim on demand (refcount 0, parked in eviction pools). The
+        reclaim credit is the incremental ``_parked_clean`` counter —
+        O(group), not a pool scan; cross-layout leftovers it undercounts
+        remain reclaimable via ``_take_blocks``' exact slow path."""
+        base = (len(self._free_set) if len(self.group) <= 1
+                else len(self._group_free()))
+        if self.prefix_cache is not None:
+            return base + sum(a._parked_clean for a in self.group)
+        return base
+
+    def _reclaimable(self) -> set:
+        """Ids the group could free by evicting cold cached blocks: on
+        EVERY member the id is either already free or parked refcount-0
+        in the eviction pool (so one eviction pass makes it group-free).
+        Excludes ids that are group-free already. Referenced blocks
+        (refcount >= 1) are never in either set, hence untouchable."""
+        cand = set()
+        for a in self.group:
+            cand.update(a._evict_pool.keys())
+        if not cand:
+            return cand
         if len(self.group) <= 1:
-            return len(self._free_set)
-        return len(self._group_free())
+            return {b for b in cand if b not in self._free_set}
+        gf = self._group_free()
+        return {b for b in cand if b not in gf
+                and all(b in a._free_set or b in a._evict_pool
+                        for a in self.group)}
+
+    def _lru_stamp(self, b: int) -> Tuple[int, int]:
+        """LRU order for reclaim: oldest last-use across the group's
+        parked copies first, id as deterministic tie-break."""
+        stamp = 0
+        for a in self.group:
+            cb = a._evict_pool.get(b)
+            if cb is not None:
+                stamp = max(stamp, cb.last_use)
+        return (stamp, b)
+
+    def _reclaim(self, ids: Sequence[int]) -> None:
+        """Evict the given parked cached blocks so their ids become
+        group-free. ``evict`` returns each id to every OWNER's free
+        pool; owners outside this group just get a free block back. The
+        explicit shared-set add covers members that already had the id
+        free (their ``_give_back`` never runs)."""
+        pc = self.prefix_cache
+        for b in ids:
+            for a in self.group:
+                cb = a._evict_pool.get(b)
+                if cb is not None:
+                    pc.evict(cb)
+                    break
+            if len(self.group) > 1 and \
+                    all(b in a._free_set for a in self.group):
+                self._group_free().add(b)
 
     def can_allocate(self, n_tokens: int, merge: Optional[int] = None,
                      req_id: Optional[str] = None) -> bool:
@@ -322,7 +495,8 @@ class KVCacheAdaptor:
         seg_tok = n_tokens
         if req_id is not None:
             e = self.table.get(req_id)
-            if e and e.segments and e.segments[-1].tag == m:
+            if e and e.segments and e.segments[-1].tag == m \
+                    and not e.segments[-1].shared:
                 seg = e.segments[-1]
                 have = len(seg.ids)
                 seg_tok = (e.length - seg.start) + n_tokens
@@ -338,8 +512,16 @@ class KVCacheAdaptor:
         grouped = len(self.group) > 1
         usable = self._group_free() if grouped else self._free_set
         if len(usable) < n:
-            raise MemoryError("KV pool exhausted"
-                              + (" across TP group" if grouped else ""))
+            # reclaim-on-demand: evict cold cached blocks (LRU) to cover
+            # the shortfall. Transactional — the can-we check happens
+            # BEFORE any eviction, so a MemoryError evicts nothing.
+            reclaim = (self._reclaimable()
+                       if self.prefix_cache is not None else set())
+            if len(usable) + len(reclaim) < n:
+                raise MemoryError("KV pool exhausted"
+                                  + (" across TP group" if grouped else ""))
+            short = n - len(usable)
+            self._reclaim(sorted(reclaim, key=self._lru_stamp)[:short])
         got: List[int] = []
         skipped: List[int] = []
         while self.free and len(got) < n:
@@ -390,7 +572,9 @@ class KVCacheAdaptor:
         cap = self.capacity
         entry = self.table.get(req_id)
         seg = entry.segments[-1] if entry and entry.segments else None
-        fresh = seg is None or seg.tag != self.merge
+        # shared prefix segments are immutable (copy-on-write): appends
+        # after an attached prefix always open a fresh private segment
+        fresh = seg is None or seg.tag != self.merge or seg.shared
         seg_tok = 0 if fresh else entry.length - seg.start
         held = 0 if fresh else len(seg.ids)
         need = -(-(seg_tok + n_tokens) // cap) - held
@@ -460,16 +644,27 @@ class KVCacheAdaptor:
             seg = entry.segments[-1]
             owners = seg.owners or (self,)
             if entry.length < seg.start:
-                for a in owners:
-                    a._give_back(seg.ids)
+                if seg.shared:
+                    self._detach(seg.cached)
+                    seg.cached = ()
+                else:
+                    for a in owners:
+                        a._give_back(seg.ids)
                 entry.segments.pop()
                 continue
             cap = self.geom.capacity(seg.tag)
             keep = -(-(entry.length - seg.start) // cap)
-            while len(seg.ids) > keep:
-                b = seg.ids.pop()
-                for a in owners:
-                    a._give_back((b,))
+            if seg.shared:
+                # refcounted, never freed here — detach the surplus tail
+                if len(seg.ids) > keep:
+                    self._detach(seg.cached[keep:])
+                    seg.cached = seg.cached[:keep]
+                    del seg.ids[keep:]
+            else:
+                while len(seg.ids) > keep:
+                    b = seg.ids.pop()
+                    for a in owners:
+                        a._give_back((b,))
             if entry.length == seg.start and not seg.ids:
                 entry.segments.pop()
             break
@@ -552,7 +747,8 @@ class KVCacheAdaptor:
         need = 0
         for rid, t in zip(req_ids, lens):
             e = self.table.get(rid)
-            if e and e.segments and e.segments[-1].tag == self.merge:
+            if e and e.segments and e.segments[-1].tag == self.merge \
+                    and not e.segments[-1].shared:
                 seg = e.segments[-1]
                 need += max(
                     -(-(e.length - seg.start + int(t)) // cap)
@@ -590,9 +786,7 @@ class KVCacheAdaptor:
     def release(self, req_id: str) -> None:
         entry = self.table.pop(req_id, None)
         if entry:
-            for seg in entry.segments:
-                for a in (seg.owners or (self,)):
-                    a._give_back(seg.ids)
+            self._free_entry(entry)
 
     def drop_for_recompute(self, req_id: str) -> int:
         """Soft-Preempt: discard the request's blocks; it re-prefills
@@ -600,10 +794,185 @@ class KVCacheAdaptor:
         entry = self.table.pop(req_id, None)
         if not entry:
             return 0
-        for seg in entry.segments:
-            for a in (seg.owners or (self,)):
-                a._give_back(seg.ids)
+        self._free_entry(entry)
         return entry.length
+
+    def _free_entry(self, entry: RequestKV) -> None:
+        """Free an entry's blocks: private segments return ids to their
+        owners; shared prefix segments only drop a refcount — the cached
+        content stays resident (parked at zero) for the next hit."""
+        for seg in entry.segments:
+            if seg.shared:
+                self._detach(seg.cached)
+            else:
+                for a in (seg.owners or (self,)):
+                    a._give_back(seg.ids)
+
+    # -- prefix cache: attach / commit (§D10) ------------------------------
+    def _detach(self, cbs: Sequence[CachedBlock]) -> None:
+        """Drop one reference from each cached block; at zero the block
+        parks in every owner's eviction pool (LRU-stamped), NOT the free
+        stack — the next attach revives it, reclaim/seize free it."""
+        pc = self.prefix_cache
+        for cb in cbs:
+            cb.refcount -= 1
+            assert cb.refcount >= 0, "prefix block refcount underflow"
+            if cb.refcount == 0:
+                if pc is not None:
+                    pc.touch(cb)
+                    pc._count_parked(cb)
+                for a in cb.owners:
+                    a._evict_pool[cb.block_id] = cb
+
+    def _chain_readable(self, tag: int, owners, cross_tag_ok: bool) -> bool:
+        """Whether THIS group can read a cached chain written under
+        ``tag`` by ``owners`` (§D8 rules): same tag needs the exact same
+        group (same ids address the same physical blocks on every
+        member); an older tag rides the live-read path — every owner
+        must be inside this group and the geometry must support
+        cross-tag partial attention at both tags. Newer (wider) tags are
+        never readable: this group lacks some owner's pool."""
+        if tag == self.merge:
+            return set(owners) == set(self.group)
+        if tag < self.merge:
+            return (cross_tag_ok
+                    and self.geom.live_readable(tag)
+                    and self.geom.live_readable(self.merge)
+                    and set(owners) <= set(self.group))
+        return False
+
+    def _lookup_prefix(self, tokens, tag: int,
+                       cross_tag_ok: bool) -> List[CachedBlock]:
+        """Longest readable cached chain for this prompt under ``tag``.
+        Capped at ``(len(tokens)-1)//cap`` FULL blocks so at least one
+        prompt token always prefills — the final position's logits are
+        needed to sample the first output token."""
+        pc = self.prefix_cache
+        cap = self.geom.capacity(tag)
+        nfull = (len(tokens) - 1) // cap
+        chain: List[CachedBlock] = []
+        prev = 0
+        for i in range(nfull):
+            key = _chain_key(prev, tag, tokens[i * cap:(i + 1) * cap])
+            cb = pc.index.get(key)
+            if cb is None or not self._chain_readable(
+                    tag, cb.owners, cross_tag_ok):
+                break
+            chain.append(cb)
+            prev = key
+        return chain
+
+    def cached_prefix_tokens(self, tokens,
+                             cross_tag_ok: bool = False) -> int:
+        """Lookup-only: how many leading prompt tokens an attach would
+        satisfy from cache right now (admission discounts these)."""
+        pc = self.prefix_cache
+        if pc is None or len(tokens) <= 1:
+            return 0
+        best = 0
+        for tag in sorted(pc.tags):
+            n = len(self._lookup_prefix(tokens, tag, cross_tag_ok)) \
+                * self.geom.capacity(tag)
+            best = max(best, n)
+        return best
+
+    def attach_prefix(self, req_id: str, tokens,
+                      cross_tag_ok: bool = False) -> int:
+        """Content-addressed admission: attach the request's leading
+        tokens to the longest readable cached chain (refcount++ per
+        block, zero prefill work) as a single SHARED segment. Returns
+        the number of tokens satisfied (0 = miss; the request starts
+        with no entry and prefills from scratch)."""
+        pc = self.prefix_cache
+        if pc is None or req_id in self.table or len(tokens) <= 1:
+            return 0
+        best: List[CachedBlock] = []
+        best_tag, best_tok = 0, 0
+        for tag in sorted(pc.tags):
+            chain = self._lookup_prefix(tokens, tag, cross_tag_ok)
+            ntok = len(chain) * self.geom.capacity(tag)
+            if ntok > best_tok:
+                best, best_tag, best_tok = chain, tag, ntok
+        if not best:
+            pc.stats["miss_requests"] += 1
+            return 0
+        for cb in best:
+            if cb.refcount == 0:           # revive a parked block
+                pc._uncount(cb)
+                for a in cb.owners:
+                    a._evict_pool.pop(cb.block_id, None)
+            cb.refcount += 1
+            pc.touch(cb)
+        seg = Segment(tag=best_tag, start=0,
+                      ids=[cb.block_id for cb in best],
+                      owners=best[0].owners, shared=True,
+                      cached=tuple(best))
+        self.table[req_id] = RequestKV(mode_tag=best_tag,
+                                       segments=[seg], length=best_tok)
+        pc.stats["hit_requests"] += 1
+        pc.stats["hit_tokens"] += best_tok
+        return best_tok
+
+    def commit_prefix(self, req_id: str, tokens, written: int) -> int:
+        """Publish the request's freshly-prefilled full prompt blocks
+        into the index, moving them from its private segment into the
+        (possibly new) leading shared segment with refcount 1 — the
+        request itself now references them like any attacher, so its
+        release parks rather than frees them.
+
+        Only clean single-tag entries publish: every segment must carry
+        the CURRENT tag and be owned by exactly this group (cross-tag
+        attachments stay private — their chain would mix tags). On a key
+        collision the FIRST inserter wins and the walk stops: extending
+        past a foreign block would leave a chain gap. Returns blocks
+        committed."""
+        pc = self.prefix_cache
+        entry = self.table.get(req_id)
+        if pc is None or entry is None or not entry.segments:
+            return 0
+        if any(s.tag != self.merge for s in entry.segments):
+            return 0
+        head = entry.segments[0] if entry.segments[0].shared else None
+        priv = entry.segments[-1]
+        if priv.shared or len(entry.segments) != (2 if head else 1):
+            return 0
+        if set(priv.owners or (self,)) != set(self.group):
+            return 0
+        cap = self.capacity
+        base = len(head.ids) if head else 0
+        upto = min(written, len(tokens)) // cap
+        prev = head.cached[-1].key if head and head.cached else 0
+        new_cbs: List[CachedBlock] = []
+        for i in range(base, upto):
+            key = _chain_key(prev, self.merge,
+                             tokens[i * cap:(i + 1) * cap])
+            if key in pc.index:
+                break                      # first inserter wins
+            cb = CachedBlock(key=key, block_id=priv.ids[i - base],
+                             tag=self.merge,
+                             owners=priv.owners or (self,), refcount=1)
+            pc.touch(cb)
+            pc.index[key] = cb
+            new_cbs.append(cb)
+            prev = key
+        if not new_cbs:
+            return 0
+        pc.tags.add(self.merge)
+        moved = len(new_cbs)
+        if head is None:
+            head = Segment(tag=self.merge, start=0,
+                           owners=priv.owners or (self,), shared=True)
+            entry.segments.insert(0, head)
+        head.ids.extend(priv.ids[:moved])
+        head.cached += tuple(new_cbs)
+        del priv.ids[:moved]
+        priv.start += moved * cap
+        if not priv.ids and entry.length <= priv.start:
+            entry.segments.remove(priv)
+            entry.mode_tag = head.tag
+        entry._ids_np = None
+        pc.stats["inserted_blocks"] += moved
+        return moved
 
     # -- fault injection (POOL_EXHAUST) -----------------------------------
     def seize(self, n: int = -1) -> List[int]:
@@ -611,7 +980,25 @@ class KVCacheAdaptor:
         pool — a scripted memory burst. Deterministic (sorted take) and
         group-consistent: the shared group-free set shrinks with the
         member, so group allocations see the pressure immediately.
-        ``restore`` hands the ids back when the fault window closes."""
+        ``restore`` hands the ids back when the fault window closes.
+
+        Prefix-cache aware: the eviction pool is drained FIRST (cold
+        refcount-0 cached blocks become free and seizable); blocks with
+        live references are never in the free set or the pool, so a
+        degraded tick can NEVER rip a shared prefix out from under
+        another request."""
+        pc = self.prefix_cache
+        if pc is not None and self._evict_pool:
+            want = -1 if n < 0 else max(n - len(self._free_set), 0)
+            for b in sorted(self._evict_pool):
+                if want == 0:
+                    break
+                cb = self._evict_pool.get(b)
+                if cb is None:
+                    continue               # freed as a co-owner above
+                pc.evict(cb)
+                if want > 0:
+                    want -= 1
         avail = sorted(self._free_set)
         taken = avail if n < 0 else avail[:n]
         self._free_set.difference_update(taken)
@@ -636,10 +1023,30 @@ class KVCacheAdaptor:
 def bind_fleet(adaptors: Sequence[KVCacheAdaptor], layout) -> None:
     """Wire every engine's adaptor to its layout group: switch the
     allocation capacity AND the group allocation domain (shared helper
-    for the engine and the scheduler-owned adaptor path)."""
+    for the engine and the scheduler-owned adaptor path). Also stamps
+    each adaptor's fleet position — attached shared segments may be
+    owned by a group other than the reader's, and the engine's staging
+    derives the owner lead from ``engine_id``."""
+    for i, a in enumerate(adaptors):
+        a.engine_id = i
     for isl in layout.islands:
         for lead in isl.lead_engines():
             members = [adaptors[e] for e in range(lead, lead + isl.merge)]
             for a in members:
                 a.switch_mode(isl.merge)
                 a.bind_group(members)
+    # recount the parked-clean reclaim credit under the NEW groups: a
+    # block parked clean under the old layout may now straddle groups
+    # (not cheaply reclaimable) and vice versa. O(parked) per rebind.
+    pcs = {id(a.prefix_cache): a.prefix_cache for a in adaptors
+           if a.prefix_cache is not None}
+    if pcs:
+        for a in adaptors:
+            a._parked_clean = 0
+        seen = set()
+        for a in adaptors:
+            for cb in a._evict_pool.values():
+                if id(cb) not in seen:
+                    seen.add(id(cb))
+                    cb.counted = None
+                    next(iter(pcs.values()))._count_parked(cb)

@@ -51,9 +51,10 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple, Union
 
 from repro.core.faults import EngineFault, TransitionFault
-from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry, bind_fleet)
+from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry,
+                                   PrefixCache, bind_fleet)
 from repro.core.modes import FleetLayout, Island, ParallelPlan
-from repro.core.task_pool import Request, TaskPool
+from repro.core.task_pool import Request, TaskPool, prompt_token_ids
 
 SEQUENTIAL = "sequential"
 SOFT = "soft"
@@ -124,6 +125,9 @@ class SchedulerConfig:
     # consecutive misses quarantine the island's engines.
     watchdog_slack: float = 4.0
     health_misses: int = 3
+    # cross-request prefix cache (docs/PERF.md §D10): content-addressed
+    # block sharing across requests; admission discounts cache hits.
+    prefix_cache: bool = False
 
 
 @dataclass
@@ -136,6 +140,10 @@ class StepLog:
     switched: bool = False     # a layout transition applied this tick
     islands: Tuple[Tuple[int, int], ...] = ()   # live (n_engines, merge)s
     degraded: bool = False     # backpressure eviction fired this tick
+    # prefix-cache counters (§D10), CUMULATIVE as of this tick
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_evictions: int = 0
 
 
 @dataclass
@@ -222,6 +230,22 @@ class DynamicScheduler:
             self.adaptors = [KVCacheAdaptor(geom)
                              for _ in range(plan.dp_engines * plan.pods)]
             bind_fleet(self.adaptors, self.layout)
+        # cross-request prefix cache (§D10): ONE content-addressed index
+        # shared by every adaptor in the fleet — chains carry their
+        # writer group, so cross-island hits are first-class.
+        self.prefix_cache: Optional[PrefixCache] = None
+        if cfg.prefix_cache:
+            self.prefix_cache = PrefixCache()
+            for a in self.adaptors:
+                a.prefix_cache = self.prefix_cache
+        # whether the backend's step programs can read cached chains
+        # written under OTHER tags (the §D8 live-read capability gates
+        # cross-layout attach; geometry per tag is checked at lookup)
+        blr = getattr(backend, "live_readable", None)
+        self._live_backend = bool(blr()) if callable(blr) else True
+        # per-request prompt token ids (content hashing); dropped once
+        # the prompt fully prefills or the request is recovered
+        self._tok_cache: Dict[str, object] = {}
         self.policy = policy
         self.log: List[StepLog] = []
         self.switches = 0
@@ -441,9 +465,16 @@ class DynamicScheduler:
         entry = self._entry(r)
         if entry is None or not entry.segments:
             return True
-        m_new = target.island_of(g).group_of(g)[1]
+        lead2, m_new = target.island_of(g).group_of(g)
         if entry.max_tag > m_new:
             return False         # merge-down: owners outside the group
+        # attached shared prefixes may be owned by a group NOT derivable
+        # from this request's lead by buddy alignment — check each
+        # recorded owner's fleet position against the new group span
+        for s in entry.segments:
+            for o in s.owners:
+                if not lead2 <= o.engine_id < lead2 + m_new:
+                    return False
         return all(self.geom.live_readable(t)
                    for t in set(entry.tags()) | {m_new})
 
@@ -687,12 +718,37 @@ class DynamicScheduler:
     def _tag(self, r: Request) -> int:
         """The merge a request's KV needs to be readable: the widest
         segment tag (owner groups nest, so the widest owner group
-        contains them all)."""
+        contains them all) — widened further until the aligned group
+        around the request's lead also contains every ATTACHED shared
+        prefix's owner (a cross-group attach is not buddy-nested)."""
         g = r.engine_group
         if g < 0:
             return self.layout.merge_of(0)
         entry = self._entry(r)
-        return entry.max_tag if entry else self.layout.merge_of(g)
+        if not entry:
+            return self.layout.merge_of(g)
+        m = entry.max_tag
+        owners = {o.engine_id for s in entry.segments for o in s.owners}
+        if owners:
+            widest = self.plan.valid_merges()[-1]
+            while m < widest and not all(
+                    (g // m) * m <= e < (g // m) * m + m for e in owners):
+                m *= 2
+        return m
+
+    def _prompt_ids(self, r: Request):
+        """The exact prompt token ids the backend will prefill for
+        ``r`` — the bytes content addressing hashes. Backends exposing
+        ``prompt_tokens`` (the real engine, with its pinned recovery
+        prompts) are authoritative; otherwise the shared deterministic
+        generator."""
+        ids = self._tok_cache.get(r.req_id)
+        if ids is None:
+            hook = getattr(self.backend, "prompt_tokens", None)
+            ids = hook(r) if hook is not None \
+                else prompt_token_ids(r, self.geom.cfg.vocab_size)
+            self._tok_cache[r.req_id] = ids
+        return ids
 
     def _entry(self, r: Request):
         g = r.engine_group
@@ -818,13 +874,33 @@ class DynamicScheduler:
                 # RESERVE the full-context block need: two prompts
                 # admitted to one group in the same tick must not both
                 # count the free pool (chunked prefill would exhaust it
-                # mid-stream and wedge both — neither ever decodes)
+                # mid-stream and wedge both — neither ever decodes).
+                # Prefix-cache hits DISCOUNT the reservation: attached
+                # blocks are never allocated, so a shared-prefix burst
+                # must not be refused admission for them (§D10).
+                # folded (recovered) prompts embed harvested output
+                # tokens that prompt_token_ids cannot regenerate — no
+                # content identity, so they bypass the cache entirely
+                use_pc = self.prefix_cache is not None and not r.folded
                 ad = self._adaptor(lead)
-                need = -(-r.total_context() // ad.capacity)
+                cached = 0
+                if use_pc:
+                    cached = ad.cached_prefix_tokens(
+                        self._prompt_ids(r),
+                        cross_tag_ok=self._live_backend)
+                need = -(-max(r.total_context() - cached, 0)
+                         // ad.capacity)
                 if ad.free_blocks() - reserved.get(lead, 0) >= need:
                     r.engine_group = lead  # absolute lead engine
                     group_load[lead] += 1
                     reserved[lead] = reserved.get(lead, 0) + need
+                    if use_pc:
+                        c = ad.attach_prefix(
+                            r.req_id, self._prompt_ids(r),
+                            cross_tag_ok=self._live_backend)
+                        if c:
+                            # prefill starts at the first uncached token
+                            r.prefilled = c
                     admit.append(r)
                     placed = True
                     break
@@ -973,6 +1049,16 @@ class DynamicScheduler:
             launched = True
             for r in pre_i:
                 r.prefilled += chunk_of[r.req_id]
+                if self.prefix_cache is not None and not r.folded:
+                    # publish freshly-written full prompt blocks so the
+                    # NEXT same-prefix request attaches instead of
+                    # re-prefilling (§D10); safe here — an EngineFault
+                    # rolls the tick back before reaching this point
+                    ad = self._adaptor(r.engine_group)
+                    ad.commit_prefix(r.req_id, self._prompt_ids(r),
+                                     min(r.prefilled, r.prompt_len))
+                    if r.prefilled >= r.prompt_len:
+                        self._tok_cache.pop(r.req_id, None)
             for r in finished:
                 r.first_token_t = end
                 r.token_times.append(end)
@@ -1194,6 +1280,7 @@ class DynamicScheduler:
         r.generated = kept
         r.prefilled = 0
         r.engine_group = -1
+        self._tok_cache.pop(r.req_id, None)
         self._recovered_tick.add(r.req_id)
         self.preempt_stats["recovered"] += 1
         self.preempt_stats["recomputed_tokens"] += dropped
@@ -1236,11 +1323,16 @@ class DynamicScheduler:
                     for i, m in self._health.items()})
 
     def _log(self, phase: str) -> None:
+        ps = self.prefix_cache.stats if self.prefix_cache is not None \
+            else {}
         self.log.append(StepLog(
             t=self.now, merge=self.merge, phase=phase,
             n_running=len(self.running),
             n_queued=len(self.waiting) + self.pool.queue_depth(self.now),
             switched=self._switched_tick,
             islands=self.layout.shapes(),
-            degraded=self._degraded_tick))
+            degraded=self._degraded_tick,
+            prefix_hits=ps.get("hit_requests", 0),
+            prefix_misses=ps.get("miss_requests", 0),
+            prefix_evictions=ps.get("evictions", 0)))
         self._switched_tick = False

@@ -10,6 +10,8 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 from collections import deque
 
+import numpy as np
+
 PRIORITY_HIGH = 1
 PRIORITY_NORMAL = 0
 
@@ -25,6 +27,12 @@ class Request:
     # req.mode = TP with req.num_engines)
     mode: str = "auto"
     num_engines: int = 1
+    # shared-prefix workloads (§D10): requests drawn from the same
+    # system-prompt pool carry the SAME prefix_seed, so their first
+    # prefix_len prompt tokens are identical — the prefix cache's
+    # content addressing finds them without any workload-level hints.
+    prefix_seed: Optional[int] = None
+    prefix_len: int = 0
 
     # runtime bookkeeping
     state: str = "queued"  # queued|prefilling|running|paused|spec_dp|done
@@ -48,6 +56,22 @@ class Request:
 
     def total_context(self) -> int:
         return self.prompt_len + self.output_len - self.folded
+
+
+def prompt_token_ids(r: Request, vocab_size: int) -> np.ndarray:
+    """Deterministic synthetic prompt for a request — the SINGLE source
+    of prompt bytes for real backends and content hashing. Requests
+    without a prefix regenerate exactly the seed-era stream (req_id
+    seed); shared-prefix requests prepend ``prefix_len`` tokens drawn
+    from ``prefix_seed`` so pool-mates share identical leading ids."""
+    pl = min(max(int(r.prefix_len), 0), r.prompt_len) \
+        if r.prefix_seed is not None else 0
+    rng = np.random.default_rng(abs(hash(r.req_id)) % (1 << 31))
+    body = rng.integers(0, vocab_size, size=r.prompt_len - pl)
+    if not pl:
+        return body
+    prng = np.random.default_rng(int(r.prefix_seed) % (1 << 31))
+    return np.concatenate([prng.integers(0, vocab_size, size=pl), body])
 
 
 class TaskPool:

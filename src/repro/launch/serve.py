@@ -31,6 +31,12 @@ def main():
     ap.add_argument("--switch", default="flying",
                     choices=["flying", "restart", "none"])
     ap.add_argument("--priority-frac", type=float, default=0.0)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed KV prefix sharing (§D10)")
+    ap.add_argument("--prefix-pool", type=int, default=4,
+                    help="distinct shared system prompts in the workload")
+    ap.add_argument("--prefix-hit", type=float, default=0.6,
+                    help="fraction of requests drawing a pool prefix")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--fault", action="append", default=[],
                     metavar="KIND@TICK[:eng,eng...]",
@@ -77,6 +83,7 @@ def main():
             plan, geom, backend,
             SchedulerConfig(strategy=args.strategy, max_batch_per_group=2,
                             prefill_chunk=8,
+                            prefix_cache=args.prefix_cache,
                             fixed_merge=args.fixed_merge or None),
             policy=None if args.fixed_merge else FlyingPolicy())
         # (the scheduler adopts the engine's adaptors automatically)
@@ -90,6 +97,10 @@ def main():
                             low_rate=(20, 50), burst_rate=(100, 200),
                             phase_seconds=0.5,
                             priority_frac=args.priority_frac)
+        if args.prefix_cache:
+            spec.prefix_pool = args.prefix_pool
+            spec.prefix_hit = args.prefix_hit
+            spec.prefix_range = (4, 8)
     else:
         cfg = get_config(args.arch)
         plan = ParallelPlan(engine_rows=cfg.engine_rows, tp_base=16,
@@ -105,11 +116,16 @@ def main():
         sched = DynamicScheduler(
             plan, geom, backend,
             SchedulerConfig(strategy=args.strategy,
+                            prefix_cache=args.prefix_cache,
                             fixed_merge=args.fixed_merge or None),
             policy=None if args.fixed_merge else FlyingPolicy())
         spec = WorkloadSpec(n_requests=args.requests, seed=args.seed,
                             phase_seconds=30.0,
                             priority_frac=args.priority_frac)
+        if args.prefix_cache:
+            spec.prefix_pool = args.prefix_pool
+            spec.prefix_hit = args.prefix_hit
+            spec.prefix_range = (512, 2048)
 
     for r in generate(spec):
         sched.submit(copy.deepcopy(r))
@@ -126,6 +142,13 @@ def main():
     print(f"  peak tput     : {m.peak_throughput:9.0f} tok/s")
     print(f"  mode switches : {sched.switches}")
     print(f"  preempts      : {sched.preempt_stats}")
+    if args.prefix_cache and sched.prefix_cache is not None:
+        s = sched.prefix_cache.stats
+        tot = s["hit_requests"] + s["miss_requests"]
+        print(f"  prefix cache  : {s['hit_requests']}/{tot} hits "
+              f"({s['hit_tokens']} tokens), "
+              f"{s['inserted_blocks']} blocks inserted, "
+              f"{s['evictions']} evicted")
     if injector is not None or sched.quarantined or sched.incidents:
         print(f"  quarantined   : {sorted(sched.quarantined)}")
         print(f"  recovered     : {sched.preempt_stats['recovered']} reqs, "

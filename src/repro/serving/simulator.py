@@ -17,7 +17,7 @@ from repro.configs.base import ArchConfig
 from repro.core.faults import TransitionFault
 from repro.core.kv_adaptor import PoolGeometry
 from repro.core.modes import ParallelPlan
-from repro.core.task_pool import Request
+from repro.core.task_pool import Request, prompt_token_ids
 from repro.serving.hardware import Hardware, V5E
 
 
@@ -211,6 +211,11 @@ class SimBackend:
             m = max(reshaped) if reshaped else layout.max_merge
             return self.cost.cold_restart(self.cost.tp(m))
         return None
+
+    def prompt_tokens(self, req: Request):
+        """Prompt bytes for content hashing (§D10) — the same
+        deterministic stream a real engine would prefill."""
+        return prompt_token_ids(req, self.cost.cfg.vocab_size)
 
     def recover_request(self, req: Request) -> int:
         """Synchronous backend: every counted token was host-visible

@@ -27,6 +27,15 @@ class WorkloadSpec:
     priority_frac: float = 0.0       # UC2 workloads set > 0
     long_context_frac: float = 0.0   # UC3: fraction with huge prompts
     long_prompt: int = 200_000
+    # shared-prefix traffic (§D10): a pool of system prompts / few-shot
+    # preambles. With probability prefix_hit a request draws one pool
+    # entry (same prefix_seed+prefix_len => identical leading tokens,
+    # so the content-addressed cache shares their KV blocks). Tier mix
+    # rides on priority_frac — priority and background requests draw
+    # from the SAME pool, the cross-layout sharing case.
+    prefix_pool: int = 0             # number of distinct shared prefixes
+    prefix_hit: float = 0.0          # P(request uses a pool prefix)
+    prefix_range: Tuple[int, int] = (0, 0)  # prefix length range (tokens)
     seed: int = 0
 
 
@@ -37,6 +46,14 @@ def _rint(rng, lo, hi) -> int:
 
 def generate(spec: WorkloadSpec) -> List[Request]:
     rng = np.random.default_rng(spec.seed)
+    # pre-draw the pool so every pool-mate of prefix k agrees on both
+    # the seed AND the length (a length mismatch would silently break
+    # content identity between supposed pool-mates)
+    pool: List[Tuple[int, int]] = []
+    if spec.prefix_pool and spec.prefix_hit > 0:
+        lo, hi = spec.prefix_range
+        pool = [(int(rng.integers(1, 1 << 30)), _rint(rng, lo, hi))
+                for _ in range(spec.prefix_pool)]
     reqs: List[Request] = []
     t = 0.0
     phase_low = True
@@ -56,6 +73,14 @@ def generate(spec: WorkloadSpec) -> List[Request]:
         prio = PRIORITY_HIGH if (spec.priority_frac and
                                  rng.uniform() < spec.priority_frac) \
             else PRIORITY_NORMAL
+        pseed: Optional[int] = None
+        plen = 0
+        if pool and rng.uniform() < spec.prefix_hit:
+            pseed, plen = pool[int(rng.integers(len(pool)))]
+            # the prefix replaces the prompt's head, never grows the
+            # request: total context is unchanged vs the uncached run
+            plen = min(plen, prompt - 1)  # keep >=1 private token
         reqs.append(Request(req_id=f"req{i}", arrival=t, prompt_len=prompt,
-                            output_len=out, priority=prio))
+                            output_len=out, priority=prio,
+                            prefix_seed=pseed, prefix_len=plen))
     return reqs

@@ -1,0 +1,144 @@
+"""Cross-layout prefix cache (docs/PERF.md §D10) under 8 forced host
+devices: a prompt prefix written and committed under DP (tag 1) on
+engine 0 is ATTACHED by a later request after the fleet carves a TP4
+island over engines [0,4) — the attacher's shared tag-1 segment is
+live-read (per-segment sweep + lse_merge) from inside the TP4 step
+program, its remaining prompt chunk-prefills under tag 4, and its token
+stream is identical to an uncached reference engine that prefilled the
+whole prompt from scratch under the final layout. Runs the auto and
+forced-kernel dispatch paths.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.engine import FlyingEngine
+from repro.core.kv_adaptor import PoolGeometry, PrefixCache
+from repro.core.modes import FleetLayout, ParallelPlan
+from repro.core.task_pool import Request, prompt_token_ids
+
+PROMPT = 12          # 3 full blocks at cap 4
+PREFIX = 8           # 2 of them shared content
+BPE = 2
+
+
+def mkreq(g, rid):
+    r = Request(req_id=rid, arrival=0.0, prompt_len=PROMPT,
+                output_len=1 << 30, prefix_seed=1234, prefix_len=PREFIX)
+    r.engine_group = g
+    return r
+
+
+def decode(eng, reqs, island, steps=1):
+    for _ in range(steps):
+        eng.decode(reqs, island)
+        for r in reqs:
+            eng.adaptors[r.engine_group].append_slots(r.req_id, 1)
+
+
+def drive(eng, vocab, cache):
+    """One writer under DP, a DP->TP4 rebind, then a same-prefix reader.
+    With ``cache`` on, the reader attaches the committed tag-1 blocks
+    cross-layout; off, it prefills the whole prompt under tag 4."""
+    pc = None
+    if cache:
+        pc = PrefixCache()
+        for a in eng.adaptors:
+            a.prefix_cache = pc
+    ad0 = eng.adaptors[0]
+    w, s = mkreq(0, "w"), mkreq(0, "s")
+
+    # writer prefills fully under DP (tag 1) and publishes its blocks
+    ad0.append_slots("w", PROMPT)
+    eng.prefill([w], eng.layout.island_of(0), PROMPT)
+    if cache:
+        committed = ad0.commit_prefix("w", prompt_token_ids(w, vocab),
+                                      PROMPT)
+        assert committed == PROMPT // 4, committed
+        head = ad0.table["w"].segments[0]
+        assert head.shared and head.tag == 1
+    ad0.append_slots("w", 1)
+    decode(eng, [w], eng.layout.island_of(0), 2)
+
+    # live rebind: TP4 island over engines [0,4); the writer rides it
+    L2 = eng.layout.carve(0, 4, 4)
+    eng.rebind(L2)
+    ad0.retag_tail("w")
+    isl = eng.layout.island_of(0)
+
+    # reader: same prefix content, admitted under the NEW layout
+    if cache:
+        got = ad0.attach_prefix("s", prompt_token_ids(s, vocab),
+                                cross_tag_ok=True)
+        assert got == PREFIX, got   # 2 shared blocks; body block differs
+        seg = ad0.table["s"].segments[0]
+        assert seg.shared and seg.tag == 1 and seg.owners == (ad0,)
+        assert all(cb.refcount == 2 for cb in seg.cached)
+        ad0.append_slots_batch(["s"], [PROMPT - PREFIX])
+        s.prefilled = PREFIX
+        eng.prefill([s], isl, PROMPT - PREFIX)
+        s.prefilled = PROMPT
+        assert ad0.table["s"].tags() == (1, 4)
+    else:
+        ad0.append_slots("s", PROMPT)
+        eng.prefill([s], isl, PROMPT)
+    ad0.append_slots("s", 1)
+    decode(eng, [w, s], isl, 4)
+
+    toks = {r.req_id: list(eng.generated_tokens(r.req_id)) for r in (w, s)}
+    if cache:
+        assert pc.stats["hit_requests"] == 1
+        assert pc.stats["hit_tokens"] == PREFIX
+        # teardown: releases only detach; every cached block parks at
+        # refcount 0 and the pool balances
+        for rid in ("w", "s"):
+            ad0.release(rid)
+        assert all(cb.refcount == 0 for cb in pc.index.values())
+        # every id is either free or parked (the parked ones straddle
+        # the old DP ownership, so the TP4 group's cheap free_blocks
+        # credit skips them — the exact reclaim path still frees them)
+        assert len(ad0._free_set) + len(ad0._evict_pool) == \
+            eng.adaptors[0].geom.num_blocks - 1
+    return toks
+
+
+def main():
+    cfg = get_config("stablelm-1.6b").reduced()
+    from repro.models.model import build_model
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.key(0))
+    plan = ParallelPlan(engine_rows=1, tp_base=1, data_rows=8)
+    L1 = FleetLayout.uniform(plan, 1)
+
+    def geom_of():
+        return PoolGeometry(cfg, plan, num_blocks=64, block_base=4)
+
+    for m in (1, 4):
+        assert geom_of().live_readable(m), m
+
+    ref_eng = FlyingEngine(model, plan, geom_of(), params,
+                           batch_per_engine=BPE, layout=L1)
+    ref = drive(ref_eng, cfg.vocab_size, cache=False)
+
+    for uk, name in ((None, "auto/ref"), (True, "forced-kernel")):
+        eng = FlyingEngine(model, plan, geom_of(), params,
+                           batch_per_engine=BPE, layout=L1,
+                           use_kernel=uk, check_zero_copy=True)
+        toks = drive(eng, cfg.vocab_size, cache=True)
+        diff = {k: (toks[k], ref[k]) for k in toks if toks[k] != ref[k]}
+        assert not diff, f"[{name}] cached diverged from uncached: {diff}"
+        assert eng.sync_stats.host_argmax == 0
+
+    print(f"prefix cached under DP (tag 1) attached across a live "
+          f"DP->TP4 rebind: {PREFIX} tokens served from shared blocks, "
+          f"token streams identical to the uncached reference on both "
+          f"kernel impls")
+    print("PREFIX CACHE OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -214,6 +214,43 @@ def test_pool_exhaust_degrades_gracefully(strategy):
         assert r.total_context() == r.prompt_len + r.output_len - r.folded
 
 
+@pytest.mark.parametrize("strategy", [HARD, LIVE])
+def test_pool_exhaust_never_rips_shared_prefixes(strategy):
+    """§D10 satellite regression: a scripted full-pool memory burst
+    drains the eviction pool FIRST (cold refcount-0 cached blocks) but
+    must never seize a block a live request still references through a
+    shared prefix segment — that would corrupt another request's KV
+    mid-decode. Every seize is checked against the live index."""
+    inj = FaultInjector([FaultSpec(kind=POOL_EXHAUST, tick=12,
+                                   blocks=-1, duration=40)])
+    geom = PoolGeometry(CFG, PLAN, num_blocks=2000, block_base=16)
+    be = SimBackend(CostModel(CFG, PLAN), switch_mode="flying",
+                    injector=inj)
+    s = DynamicScheduler(
+        PLAN, geom, be,
+        SchedulerConfig(strategy=strategy, prefix_cache=True),
+        policy=None)
+    seizes = {"n": 0}
+    for ad in s.adaptors:
+        def checked(n=-1, _ad=ad, _orig=ad.seize):
+            taken = _orig(n)
+            seizes["n"] += 1
+            live = {cb.block_id for cb in s.prefix_cache.index.values()
+                    if cb.refcount > 0 and _ad in cb.owners}
+            assert not (set(taken) & live), \
+                "seize ripped a referenced shared prefix block"
+            return taken
+        ad.seize = checked
+    for i in range(24):
+        s.submit(Request(req_id=f"r{i}", arrival=i / 50.0, prompt_len=512,
+                         output_len=64, prefix_seed=5, prefix_len=256))
+    s.run()
+    assert seizes["n"] >= 1              # the fault window really fired
+    assert not s._seized                 # every seized block handed back
+    assert s.prefix_cache.stats["hit_requests"] >= 1
+    assert_all_done(s, 24)
+
+
 def test_midprefill_rows_counted_against_group_batch_cap():
     """A mid-prefill request holds a batch row on its sticky group
     across ticks; admission must keep counting it or the group's decode

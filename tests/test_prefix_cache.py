@@ -1,0 +1,408 @@
+"""Cross-request prefix cache (§D10): refcount/COW/eviction units and
+scheduler-driven cached-vs-uncached token identity on the real engine."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry, PrefixCache,
+                                   bind_fleet)
+from repro.core.modes import FleetLayout, ParallelPlan
+from repro.core.task_pool import Request
+
+PLAN = ParallelPlan(engine_rows=1, tp_base=16, data_rows=16)
+
+
+def geom_for(arch="stablelm-1.6b", layout="head", blocks=64, base=4):
+    return PoolGeometry(get_config(arch), PLAN, num_blocks=blocks,
+                        block_base=base, layout=layout)
+
+
+def mk(blocks=64, base=4):
+    ad = KVCacheAdaptor(geom_for(blocks=blocks, base=base))
+    pc = PrefixCache()
+    ad.prefix_cache = pc
+    return ad, pc
+
+
+def toks(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 1000, size=n)
+
+
+# ---------------------------------------------------------------------------
+# refcount / attach / COW
+# ---------------------------------------------------------------------------
+
+def test_commit_attach_shares_blocks_zero_alloc():
+    ad, pc = mk()
+    t = toks(40)
+    ad.append_slots("w", 40)                   # 10 blocks at cap 4
+    assert ad.commit_prefix("w", t, 40) == 10
+    assert pc.stats["inserted_blocks"] == 10
+    free_after_w = ad.free_blocks()
+    # attach caps at (40-1)//4 = 9 full blocks: >=1 token always prefills
+    assert ad.attach_prefix("r", t) == 36
+    assert ad.free_blocks() == free_after_w    # zero new blocks
+    seg = ad.table["r"].segments[0]
+    assert seg.shared and len(seg.ids) == 9
+    assert seg.ids == ad.table["w"].segments[0].ids[:9]  # physical share
+    assert all(cb.refcount == 2 for cb in seg.cached)
+    assert pc.stats["hit_requests"] == 1
+    assert pc.stats["hit_tokens"] == 36
+
+
+def test_append_after_attach_is_copy_on_write():
+    ad, pc = mk()
+    t = toks(40)
+    ad.append_slots("w", 40)
+    ad.commit_prefix("w", t, 40)
+    ad.attach_prefix("r", t)
+    slots = ad.append_slots("r", 4)            # remaining prompt tokens
+    e = ad.table["r"]
+    assert len(e.segments) == 2
+    assert not e.segments[-1].shared           # fresh private segment
+    assert e.segments[-1].ids[0] not in e.segments[0].ids
+    assert e.length == 40
+    # the new slot lands in the private block, never a shared one
+    assert int(slots[0]) // ad.capacity == e.segments[-1].ids[0]
+    # writer's blocks untouched
+    assert all(cb.refcount == 2 for cb in e.segments[0].cached)
+
+
+def test_divergent_prompt_attaches_only_common_prefix():
+    ad, pc = mk()
+    t = toks(40)
+    ad.append_slots("w", 40)
+    ad.commit_prefix("w", t, 40)
+    other = t.copy()
+    other[8] += 1                              # diverge in block 2
+    assert ad.attach_prefix("r", other) == 8   # blocks 0-1 only
+    assert len(ad.table["r"].segments[0].ids) == 2
+
+
+def test_release_parks_then_revives():
+    ad, pc = mk()
+    t = toks(40)
+    total = ad.free_blocks()
+    ad.append_slots("w", 40)
+    ad.commit_prefix("w", t, 40)
+    ad.attach_prefix("r", t)
+    ad.release("w")
+    ad.release("r")
+    # every cached block parked at refcount 0: still resident (index
+    # intact) but counted allocatable again
+    assert len(ad._evict_pool) == 10
+    assert all(cb.refcount == 0 for cb in pc.index.values())
+    assert ad.free_blocks() == total
+    assert pc.stats["evictions"] == 0
+    # next attach revives from the pool — no prefill, no eviction
+    assert ad.attach_prefix("r2", t) == 36
+    assert len(ad._evict_pool) == 1            # 10th block stays parked
+    assert pc.stats["evictions"] == 0
+
+
+def test_truncate_detaches_shared_tail():
+    ad, pc = mk()
+    t = toks(40)
+    ad.append_slots("w", 40)
+    ad.commit_prefix("w", t, 40)
+    ad.attach_prefix("r", t)
+    ad.truncate("r", 8)                        # drop last 2 shared blocks
+    seg = ad.table["r"].segments[0]
+    assert len(seg.ids) == 7 and len(seg.cached) == 7
+    assert all(cb.refcount == 2 for cb in seg.cached)
+    # the detached two parked nowhere (writer still references them)
+    assert not ad._evict_pool
+    assert ad.table["r"].length == 28
+
+
+def test_first_inserter_wins_on_collision():
+    ad, pc = mk()
+    t = toks(12)
+    ad.append_slots("a", 12)
+    assert ad.commit_prefix("a", t, 12) == 3
+    ids_a = list(pc.index.values())
+    ad.append_slots("b", 12)
+    assert ad.commit_prefix("b", t, 12) == 0   # same content: no insert
+    assert list(pc.index.values()) == ids_a
+
+
+# ---------------------------------------------------------------------------
+# eviction / reclaim
+# ---------------------------------------------------------------------------
+
+def test_reclaim_on_demand_evicts_cold_blocks():
+    ad, pc = mk(blocks=9)                      # 8 usable
+    t = toks(32)
+    ad.append_slots("w", 32)                   # all 8 blocks
+    ad.commit_prefix("w", t, 32)
+    ad.release("w")
+    assert ad.free_blocks() == 8               # parked = reclaimable
+    assert len(ad._free_set) == 0
+    ad.append_slots("n", 32)                   # forces full reclaim
+    assert pc.stats["evictions"] == 8
+    assert not pc.index
+    ad.release("n")
+    assert ad.free_blocks() == 8               # conservation
+
+
+def test_reclaim_is_lru_ordered():
+    ad, pc = mk(blocks=17)                     # 16 usable
+    ta, tb = toks(8, seed=1), toks(8, seed=2)
+    ad.append_slots("a", 8)
+    ad.commit_prefix("a", ta, 8)               # older chain
+    ad.append_slots("b", 8)
+    ad.commit_prefix("b", tb, 8)               # newer chain
+    ad.release("a")
+    ad.release("b")
+    ad.append_slots("n", 56)                   # 14 blocks: reclaim 2 of 4
+    assert pc.stats["evictions"] == 2
+    # the OLDER chain (a) was evicted; b's root block still attachable
+    assert ad.attach_prefix("ra", ta) == 0
+    assert ad.attach_prefix("rb", tb) == 4
+    assert ad.table["rb"].segments[0].cached[0].refcount == 1
+
+
+def test_memory_error_is_transactional_no_eviction():
+    ad, pc = mk(blocks=9)
+    t = toks(16)
+    ad.append_slots("w", 16)                   # 4 of 8 blocks
+    ad.commit_prefix("w", t, 16)
+    ad.release("w")                            # 4 parked, 4 free
+    with pytest.raises(MemoryError):
+        ad.allocate("n", 64)                   # 16 blocks > 8 available
+    assert pc.stats["evictions"] == 0          # pre-check fired first
+    assert len(ad._evict_pool) == 4
+
+
+def test_can_allocate_counts_reclaimable_but_not_referenced():
+    ad, pc = mk(blocks=9)
+    t = toks(32)
+    ad.append_slots("w", 32)
+    ad.commit_prefix("w", t, 32)
+    assert not ad.can_allocate(4)              # all 8 blocks referenced
+    ad.release("w")
+    assert ad.can_allocate(32)                 # all parked => reclaimable
+
+
+def test_attached_shared_segment_excluded_from_can_allocate_tail():
+    """Satellite 1: the shared last segment must not be mistaken for a
+    private tail with spare slot capacity — the next private token
+    needs a NEW block even when the shared block is half-empty."""
+    ad, pc = mk(blocks=12)
+    t = toks(8)
+    ad.append_slots("w", 8)
+    ad.commit_prefix("w", t, 8)
+    ad.attach_prefix("r", t)                   # 4 tokens, 1 shared block
+    free = ad.free_blocks()
+    assert ad.can_allocate(4, req_id="r")      # needs exactly 1 new block
+    ad.append_slots("r", 4)
+    assert ad.free_blocks() == free - 1
+
+
+# ---------------------------------------------------------------------------
+# seize (fault path) — satellite 2
+# ---------------------------------------------------------------------------
+
+def test_seize_drains_pool_first_and_skips_referenced():
+    ad, pc = mk(blocks=16)
+    t = toks(16)
+    ad.append_slots("w", 16)                   # blocks 0..3
+    ad.commit_prefix("w", t, 16)
+    ad.attach_prefix("r", t)                   # refcount 2 on first 3
+    ad.release("w")                            # 4th block parks
+    live = set(ad.table["r"].segments[0].ids)
+    free0 = len(ad._free_set)
+    taken = ad.seize(-1)
+    assert not (set(taken) & live)             # shared prefix untouched
+    assert len(taken) == free0 + 1             # free + the parked block
+    assert len(ad._evict_pool) == 0
+    assert all(cb.refcount == 1 for cb in ad.table["r"].segments[0].cached)
+    # restore + release round-trips conservation
+    ad.restore(taken)
+    ad.release("r")
+    assert ad.free_blocks() == 15
+
+
+def test_seize_partial_prefers_free_set_then_pool():
+    ad, pc = mk(blocks=16)
+    t = toks(16)
+    ad.append_slots("w", 16)
+    ad.commit_prefix("w", t, 16)
+    ad.release("w")                            # 4 parked, 11 free
+    taken = ad.seize(11)                       # covered by the free set
+    assert len(taken) == 11
+    assert len(ad._evict_pool) == 4            # pool untouched
+    taken2 = ad.seize(2)                       # must now evict 2 (LRU)
+    assert len(taken2) == 2
+    assert pc.stats["evictions"] >= 2
+
+
+# ---------------------------------------------------------------------------
+# cross-layout readability rules
+# ---------------------------------------------------------------------------
+
+def small_fleet(n=4):
+    plan = ParallelPlan(engine_rows=1, tp_base=1, data_rows=n)
+    geom = PoolGeometry(get_config("stablelm-1.6b"), plan, num_blocks=32,
+                        block_base=4)
+    ads = [KVCacheAdaptor(geom) for _ in range(n)]
+    pc = PrefixCache()
+    for a in ads:
+        a.prefix_cache = pc
+    bind_fleet(ads, FleetLayout.uniform(plan, 1))
+    return plan, geom, ads, pc
+
+
+def test_same_tag_chain_needs_exact_group():
+    plan, geom, ads, pc = small_fleet()
+    t = toks(16)
+    ads[0].append_slots("w", 16)
+    ads[0].commit_prefix("w", t, 16)
+    # same tag, same (singleton) group: readable from engine 0 only
+    assert ads[0].cached_prefix_tokens(t) == 12
+    assert ads[1].cached_prefix_tokens(t) == 0
+
+
+def test_cross_tag_attach_follows_live_readability(monkeypatch):
+    plan, geom, ads, pc = small_fleet()
+    t = toks(16)
+    ads[0].append_slots("w", 16)
+    ads[0].commit_prefix("w", t, 16)           # tag 1, owners {ads[0]}
+    bind_fleet(ads, FleetLayout.uniform(plan, 2))  # groups {0,1} {2,3}
+    lr = {m: True for m in (1, 2)}
+    monkeypatch.setattr(PoolGeometry, "live_readable",
+                        lambda self, m: lr[m])
+    # tag 1 < merge 2, owner inside the group, geometry allows: readable
+    # ONLY with the cross-tag opt-in
+    assert ads[0].cached_prefix_tokens(t, cross_tag_ok=True) == 12
+    assert ads[0].cached_prefix_tokens(t, cross_tag_ok=False) == 0
+    # owner outside the reading group: never
+    assert ads[2].cached_prefix_tokens(t, cross_tag_ok=True) == 0
+    # geometry veto on either tag kills it
+    lr[1] = False
+    assert ads[0].cached_prefix_tokens(t, cross_tag_ok=True) == 0
+    lr[1], lr[2] = True, False
+    assert ads[0].cached_prefix_tokens(t, cross_tag_ok=True) == 0
+
+
+def test_wider_tag_chain_never_readable_after_narrowing():
+    plan, geom, ads, pc = small_fleet()
+    bind_fleet(ads, FleetLayout.uniform(plan, 2))
+    t = toks(32)
+    ads[0].append_slots("w", 32)
+    ads[0].commit_prefix("w", t, 32)           # tag 2 chain
+    bind_fleet(ads, FleetLayout.uniform(plan, 1))
+    # reader's merge 1 < writer tag 2: the group lacks ads[1]'s pool
+    assert ads[0].cached_prefix_tokens(t, cross_tag_ok=True) == 0
+
+
+def test_group_commit_and_parked_accounting_across_rebinds():
+    plan, geom, ads, pc = small_fleet()
+    bind_fleet(ads, FleetLayout.uniform(plan, 2))
+    t = toks(32)
+    cap = ads[0].capacity
+    ads[0].append_slots("w", 32)
+    committed = ads[0].commit_prefix("w", t, 32)
+    assert committed == 32 // cap
+    ads[0].release("w")
+    # parked clean (owners == group {0,1}): both members count it
+    assert ads[0].free_blocks() == 31
+    assert ads[1].free_blocks() == 31
+    # a rebind that splits the owner group recounts: no longer cheap
+    bind_fleet(ads, FleetLayout.uniform(plan, 1))
+    assert ads[0]._parked_clean == 0
+    assert ads[0].free_blocks() == 31 - committed
+    # ...but the exact slow path still reclaims them under pressure
+    ads[0].append_slots("n", 31 * ads[0].capacity)
+    assert pc.stats["evictions"] == committed
+
+
+def test_conservation_with_cache_randomized():
+    ad, pc = mk(blocks=32)
+    rng = np.random.default_rng(3)
+    total = ad.free_blocks()
+    prompts = {f"p{i}": toks(24, seed=i % 3) for i in range(12)}
+    for i, (rid, t) in enumerate(prompts.items()):
+        got = ad.attach_prefix(rid, t)
+        rest = 24 - got
+        if ad.can_allocate(rest, req_id=rid):
+            if rest:
+                ad.append_slots(rid, rest)
+            ad.commit_prefix(rid, t, 24)
+        if i % 2:
+            victim = rng.choice(list(ad.table))
+            ad.release(str(victim))
+    for rid in list(ad.table):
+        ad.release(rid)
+    # everything parked or free: the whole pool is allocatable again
+    assert ad.free_blocks() == total
+    live = sum(cb.refcount for cb in pc.index.values())
+    assert live == 0
+
+
+# ---------------------------------------------------------------------------
+# token identity: cached vs uncached runs on the real engine
+# ---------------------------------------------------------------------------
+
+PLAN1 = ParallelPlan(engine_rows=1, tp_base=1, data_rows=1)
+
+
+@pytest.fixture(scope="module")
+def rt():
+    import jax
+    import jax.numpy as jnp
+    from repro.models.model import build_model
+    cfg = get_config("llama3-8b").reduced()
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def run_sched(rt, cache, temperature=0.0):
+    """Drive two same-prefix requests SEQUENTIALLY through the real
+    engine: the second admits after the first fully prefilled, so with
+    the cache on it attaches the committed prefix blocks."""
+    from repro.core.engine import FlyingEngine
+    from repro.core.scheduler import DynamicScheduler, SchedulerConfig
+    cfg, model, params = rt
+    geom = PoolGeometry(cfg, PLAN1, num_blocks=64, block_base=4)
+    kw = dict(temperature=temperature, top_k=4) if temperature else {}
+    eng = FlyingEngine(model, PLAN1, geom, params, batch_per_engine=2,
+                       max_blocks_per_req=16, prefill_len=8,
+                       seed_mode="request", **kw)
+    sched = DynamicScheduler(
+        PLAN1, geom, eng,
+        SchedulerConfig(strategy="hard", max_batch_per_group=2,
+                        prefill_chunk=8, fixed_merge=1,
+                        prefix_cache=cache))
+
+    def req(rid):
+        return Request(req_id=rid, arrival=0.0, prompt_len=12,
+                       output_len=5, prefix_seed=99, prefix_len=8)
+
+    sched.submit(req("cold"))
+    sched.run()
+    sched.submit(req("warm"))
+    sched.run()
+    return ({rid: eng.generated_tokens(rid) for rid in ("cold", "warm")},
+            sched)
+
+
+def test_cached_tokens_identical_greedy(rt):
+    toks_c, sc = run_sched(rt, cache=True)
+    toks_u, su = run_sched(rt, cache=False)
+    assert toks_c == toks_u
+    assert all(len(v) == 5 for v in toks_c.values())
+    assert su.prefix_cache is None
+    s = sc.prefix_cache.stats
+    assert s["hit_requests"] == 1 and s["hit_tokens"] == 8
+    assert sc.log[-1].prefix_hits == 1
+
+
+def test_cached_tokens_identical_temperature(rt):
+    toks_c, sc = run_sched(rt, cache=True, temperature=0.7)
+    toks_u, _ = run_sched(rt, cache=False, temperature=0.7)
+    assert toks_c == toks_u
+    assert sc.prefix_cache.stats["hit_requests"] == 1
+    vocab = rt[0].vocab_size
+    assert all(0 <= t < vocab for v in toks_c.values() for t in v)
