@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-md test-chaos bench bench-smoke quickstart
+.PHONY: test test-md test-chaos bench bench-smoke bench-frontdoor \
+	quickstart
 
 # tier-1 suite
 test:
@@ -37,6 +38,14 @@ bench:
 # context/chunk/prior sweep points).
 bench-smoke:
 	$(PY) benchmarks/run.py --smoke
+
+# overload-hardened front door guard (docs/PERF.md §D11): 2x-saturation
+# bursty heavy-tail trace through the protected door — priority p99
+# TTFT within 1.5x unloaded at goodput >= 0.9 while the untiered
+# baseline visibly degrades; the chaos variant (engine kill + pool
+# seizure + scripted client cancels) must never wedge and leak zero KV
+bench-frontdoor:
+	$(PY) benchmarks/frontdoor.py
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -1,0 +1,266 @@
+"""Overload-hardened front door benchmark (docs/PERF.md §D11).
+
+Five deterministic simulation-backend runs of the llama3-8b fleet:
+
+  capacity    — closed-loop batch run to estimate fleet throughput;
+  unloaded    — Poisson arrivals at 25% of capacity through the
+                protected front door: the reference latency floor,
+                and the run that calibrates the priority TTFT SLO;
+  protected   — the SAME 2x-saturation bursty heavy-tail trace through
+                the full §D11 machinery (tiered shedding, bounded
+                queue, deadlines): priority p99 TTFT must hold within
+                1.5x of unloaded and priority goodput >= 0.9;
+  unprotected — that trace with every protection switched off. The
+                front door is the component that STAMPS tiers, so the
+                baseline is untiered: no priority, no deadlines, an
+                unbounded FIFO queue (deadlines are still stamped for
+                SLO accounting, never enforced). The trace's latency
+                requests ride the common backlog and visibly degrade
+                — the point of the comparison;
+  chaos       — protected overload PLUS an engine KILL, a scripted
+                pool seizure and scripted client cancellations: zero
+                wedges, every exit releases its KV.
+
+Per-tier p50/p99 TTFT/TPOT, goodput and the shed/expired/aborted
+counters land in ``BENCH_frontdoor.json``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from benchmarks.common import csv_row
+from repro.configs import get_config
+from repro.core.faults import (KILL, POOL_EXHAUST, FaultInjector,
+                               FaultSpec)
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import ParallelPlan
+from repro.core.policy import FlyingPolicy
+from repro.core.scheduler import (LIVE, DynamicScheduler,
+                                  SchedulerConfig, SchedulerWedged)
+from repro.core.task_pool import Request
+from repro.serving.frontdoor import (FrontDoor, FrontDoorConfig,
+                                     SLOClass)
+from repro.serving.metrics import tier_report
+from repro.serving.simulator import CostModel, SimBackend
+from repro.serving.workload import WorkloadSpec, generate
+
+ARCH = "llama3-8b"
+BURST_MULT = 8.0
+
+
+def _sched(injector: Optional[FaultInjector] = None) -> DynamicScheduler:
+    cfg = get_config(ARCH)
+    plan = ParallelPlan(engine_rows=1, tp_base=16, data_rows=16)
+    geom = PoolGeometry(cfg, plan, num_blocks=20000, block_base=16)
+    be = SimBackend(CostModel(cfg, plan), switch_mode="flying",
+                    injector=injector)
+    # LIVE switching + a wide (8-engine) priority bind: the TP island
+    # must have queueing headroom for the burst-period priority load
+    # or no admission policy could hold its p99
+    return DynamicScheduler(plan, geom, be,
+                            SchedulerConfig(strategy=LIVE),
+                            policy=FlyingPolicy(priority_merge=8,
+                                                live=True))
+
+
+def _capacity(n: int = 160) -> float:
+    """Closed-loop throughput estimate: n requests offered at t=0,
+    capacity = n / makespan (req/s)."""
+    s = _sched()
+    for i in range(n):
+        s.submit(Request(req_id=f"r{i}", arrival=0.0, prompt_len=1024,
+                         output_len=128))
+    s.run()
+    span = max(r.finish_t for r in s.pool.all.values())
+    return n / max(span, 1e-9)
+
+
+def _trace(n: int, rate: float, arrival: str, seed: int,
+           cancel_frac: float = 0.0):
+    return generate(WorkloadSpec(
+        n_requests=n, arrival=arrival, rate=rate,
+        burst_mult=BURST_MULT, phase_seconds=2.0,
+        prompt_range=(256, 2048), output_range=(64, 256),
+        # priority is the thin latency tier (5%): during an 8x burst
+        # it alone offers ~0.18x fleet capacity, about half of what
+        # its 8-engine bind can absorb — headroom the SLO depends on
+        length_dist="lognormal", priority_frac=0.05,
+        background_frac=0.3, cancel_frac=cancel_frac, seed=seed))
+
+
+def _tiers(ttft_pri: Optional[float], ttft_std: Optional[float]):
+    # trunk reservation: standard + background together never hold
+    # more than 45% of fleet KV (background alone 20%), so a priority
+    # burst always finds admission headroom
+    return (SLOClass("priority", priority=1, deadline_ttft=ttft_pri),
+            SLOClass("standard", deadline_ttft=ttft_std, ctx_frac=0.45),
+            SLOClass("background", sheddable=True, ctx_frac=0.2))
+
+
+def _serve(trace, tiers, protected: bool,
+           injector: Optional[FaultInjector] = None):
+    """Run one trace through a fresh fleet. Returns (frontdoor, report,
+    wedged)."""
+    s = _sched(injector)
+    fd = FrontDoor(s, FrontDoorConfig(
+        queue_cap=64 if protected else 1 << 30,
+        shed=protected, enforce_deadlines=protected, tiers=tiers))
+    wedged = False
+    try:
+        for r in trace:
+            fd.submit(r)
+        fd.run()
+    except SchedulerWedged:
+        wedged = True
+    return fd, tier_report(list(fd.requests.values())), wedged
+
+
+def run(n_requests: int = 720, guard: bool = False,
+        out: Optional[Dict] = None):
+    rows = []
+    if out is None:
+        out = {}
+
+    cap = _capacity()
+    rows.append(csv_row("frontdoor", "frontdoor/capacity_req_s",
+                        f"{cap:.1f}"))
+
+    # unloaded reference: protected door, Poisson at 25% of capacity,
+    # no deadlines yet (this run CALIBRATES them)
+    _, un_rep, _ = _serve(
+        _trace(n_requests, 0.25 * cap, "poisson", seed=3),
+        _tiers(None, None), protected=True)
+    un_p99 = un_rep["priority"]["p99_ttft_s"]
+    rows.append(csv_row("frontdoor", "frontdoor/unloaded/pri_p99_ttft_ms",
+                        f"{un_p99 * 1e3:.1f}"))
+
+    # SLOs: priority gets exactly the 1.5x acceptance bar — the sweep
+    # expires anything that misses it (including late first tokens),
+    # so completions meet it by construction and goodput carries the
+    # burden of proof. Standard gets a loose 10x: blowing it sheds
+    # load and keeps the expired counter honest under overload.
+    ttft_pri = max(1.5 * un_p99, 1e-3)
+    ttft_std = max(10.0 * un_p99, 1e-2)
+    tiers = _tiers(ttft_pri, ttft_std)
+
+    # the SAME 2x-saturation bursty heavy-tail trace, twice. bursty
+    # time-average rate = rate * (1 + burst_mult) / 2
+    over_rate = 2.0 * cap / ((1.0 + BURST_MULT) / 2.0)
+    mk = lambda: _trace(n_requests, over_rate, "bursty", seed=4)
+
+    # the baseline has no front door, hence no tiers: every request is
+    # priority 0 and rides the common FIFO backlog. Deadlines are
+    # stamped so tier_report can score the SAME SLO — never enforced.
+    flat = (SLOClass("priority", deadline_ttft=ttft_pri),
+            SLOClass("standard", deadline_ttft=ttft_std),
+            SLOClass("background"))
+
+    pro_fd, pro_rep, pro_wedged = _serve(mk(), tiers, protected=True)
+    unp_fd, unp_rep, unp_wedged = _serve(mk(), flat, protected=False)
+
+    def overall_p99(fd):
+        import numpy as np
+        ttft = [r.first_token_t - r.arrival
+                for r in fd.requests.values()
+                if r.state == "done" and r.first_token_t is not None]
+        return float(np.percentile(np.array(ttft), 99)) if ttft \
+            else float("inf")
+
+    pro_pri = pro_rep["priority"]
+    for name, rep, fd, wedged in (("protected", pro_rep, pro_fd,
+                                   pro_wedged),
+                                  ("unprotected", unp_rep, unp_fd,
+                                   unp_wedged)):
+        lc = fd.sched.lifecycle
+        rows.append(csv_row(
+            "frontdoor", f"frontdoor/{name}/pri_p99_ttft_ms",
+            f"{rep['priority']['p99_ttft_s'] * 1e3:.1f}"))
+        rows.append(csv_row(
+            "frontdoor", f"frontdoor/{name}/pri_goodput",
+            f"{rep['priority']['goodput']:.3f}"))
+        rows.append(csv_row(
+            "frontdoor", f"frontdoor/{name}/overall_p99_ttft_ms",
+            f"{overall_p99(fd) * 1e3:.1f}"))
+        rows.append(csv_row(
+            "frontdoor", f"frontdoor/{name}/shed",
+            str(lc["shed"] + fd.counters["rejected"])))
+        rows.append(csv_row(
+            "frontdoor", f"frontdoor/{name}/expired", str(lc["expired"])))
+        rows.append(csv_row(
+            "frontdoor", f"frontdoor/{name}/wedged", str(wedged)))
+
+    # chaos under load: protected overload + engine kill + pool burst
+    # + scripted client cancels
+    inj = FaultInjector([
+        FaultSpec(kind=KILL, tick=12, engines=(3,)),
+        FaultSpec(kind=POOL_EXHAUST, tick=40, blocks=-1, duration=30),
+    ])
+    chaos_fd, chaos_rep, chaos_wedged = _serve(
+        _trace(n_requests, over_rate, "bursty", seed=5,
+               cancel_frac=0.1),
+        tiers, protected=True, injector=inj)
+    clc = chaos_fd.sched.lifecycle
+    rows.append(csv_row("frontdoor", "frontdoor/chaos/aborted",
+                        str(clc["aborted"])))
+    rows.append(csv_row("frontdoor", "frontdoor/chaos/pri_goodput",
+                        f"{chaos_rep['priority']['goodput']:.3f}"))
+    rows.append(csv_row("frontdoor", "frontdoor/chaos/quarantined",
+                        str(sorted(chaos_fd.sched.quarantined))))
+    rows.append(csv_row("frontdoor", "frontdoor/chaos/wedged",
+                        str(chaos_wedged)))
+
+    if guard:
+        assert not pro_wedged and not chaos_wedged, \
+            "protected front door must never wedge under overload"
+        assert pro_pri["p99_ttft_s"] <= 1.5 * un_p99 + 1e-3, \
+            (f"protected priority p99 {pro_pri['p99_ttft_s']:.3f}s vs "
+             f"unloaded {un_p99:.3f}s")
+        assert pro_pri["goodput"] >= 0.9, pro_pri
+        # degradation shows where the protection was: the latency tier.
+        # (overall p99 is dominated by the deadline-free background
+        # tier in BOTH runs, so it can't separate them.) Untiered,
+        # the latency requests ride the same backlog as everyone else
+        # — their p99 balloons and their SLO goodput collapses.
+        unp_pri = unp_rep["priority"]
+        degraded = (unp_wedged
+                    or unp_pri["p99_ttft_s"]
+                    >= 2.0 * pro_pri["p99_ttft_s"]
+                    or unp_pri["goodput"] <= 0.5)
+        assert degraded, \
+            (f"unprotected run failed to degrade: priority p99 "
+             f"{unp_pri['p99_ttft_s']:.3f}s goodput "
+             f"{unp_pri['goodput']:.2f} vs protected "
+             f"{pro_pri['p99_ttft_s']:.3f}s")
+        assert clc["aborted"] >= 1, clc
+        assert 3 in chaos_fd.sched.quarantined
+        for fd in (pro_fd, chaos_fd):
+            for ad in fd.sched.adaptors:
+                assert not ad.table, "terminal exit leaked KV"
+        rows.append(csv_row("frontdoor", "frontdoor/guard", "PASS"))
+
+    out["frontdoor"] = {
+        "n_requests": n_requests,
+        "capacity_req_s": cap,
+        "slo": {"priority_ttft_s": ttft_pri,
+                "standard_ttft_s": ttft_std},
+        "unloaded": un_rep,
+        "protected": {"wedged": pro_wedged,
+                      "lifecycle": dict(pro_fd.sched.lifecycle),
+                      "rejected": pro_fd.counters["rejected"],
+                      "overall_p99_ttft_s": overall_p99(pro_fd),
+                      "tiers": pro_rep},
+        "unprotected": {"wedged": unp_wedged,
+                        "lifecycle": dict(unp_fd.sched.lifecycle),
+                        "overall_p99_ttft_s": overall_p99(unp_fd),
+                        "tiers": unp_rep},
+        "chaos": {"wedged": chaos_wedged,
+                  "lifecycle": dict(clc),
+                  "quarantined": sorted(chaos_fd.sched.quarantined),
+                  "tiers": chaos_rep},
+    }
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(guard=True):
+        print(r)

@@ -194,6 +194,11 @@ class FlyingEngine:
         # detection on the real-execution path
         self.injector = injector
         self._token_buf: Dict[str, List[int]] = {}
+        # aborted requests (§D11): ids whose rows were retired WITHOUT
+        # an island drain. Their tokens may still sit in in-flight
+        # pending rings; harvests drop them instead of buffering.
+        # Cleared at the next fleet-wide drain (no pending refs remain).
+        self._retired: set = set()
         self._prompt_cache: Dict[str, np.ndarray] = {}
         # recovery-folded prompts: orig prompt ++ harvested tokens. The
         # seed-based regeneration in _prompt_tokens knows nothing about
@@ -559,6 +564,8 @@ class FlyingEngine:
             self.sync_stats.d2h_batched += 1
             rt.stats.d2h_batched += 1
             for row, rid in row_reqs:
+                if rid in self._retired:
+                    continue    # aborted mid-flight: drop, don't buffer
                 self._token_buf.setdefault(rid, []).append(int(arr[row]))
         rt.pending.clear()
         rt.last_tok.clear()
@@ -599,6 +606,24 @@ class FlyingEngine:
         """Fleet-wide safe point (scheduler end-of-run, host readout)."""
         for rt in self.islands:
             self._drain_island(rt)
+        # no pending ring references any retired row anymore
+        self._retired.clear()
+
+    def abort_request(self, r: Request) -> None:
+        """Scheduler abort hook (§D11): retire one request's device-side
+        row WITHOUT draining its island. Steps already launched may
+        still carry the row — the retired id tombstones it so harvests
+        drop its tokens instead of buffering them; the decode cache
+        keys on batch membership, so the island's next launch rebuilds
+        without the row. No safe-point synchronization, no disruption
+        to the island's other residents."""
+        rid = r.req_id
+        self._retired.add(rid)
+        self._token_buf.pop(rid, None)
+        self._prompt_cache.pop(rid, None)
+        self._pinned_prompts.pop(rid, None)
+        for rt in self.islands:
+            rt.last_tok.pop(rid, None)
 
     # -- sampling seeds -------------------------------------------------
     def _seeds(self, B: int) -> Optional[jax.Array]:

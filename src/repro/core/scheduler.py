@@ -47,6 +47,7 @@ since collectives exist only inside per-island compiled programs.
 """
 from __future__ import annotations
 
+import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Protocol, Sequence, Tuple, Union
 
@@ -54,7 +55,8 @@ from repro.core.faults import EngineFault, TransitionFault
 from repro.core.kv_adaptor import (KVCacheAdaptor, PoolGeometry,
                                    PrefixCache, bind_fleet)
 from repro.core.modes import FleetLayout, Island, ParallelPlan
-from repro.core.task_pool import Request, TaskPool, prompt_token_ids
+from repro.core.task_pool import (TERMINAL_STATES, Request, TaskPool,
+                                  prompt_token_ids)
 
 SEQUENTIAL = "sequential"
 SOFT = "soft"
@@ -128,6 +130,12 @@ class SchedulerConfig:
     # cross-request prefix cache (docs/PERF.md §D10): content-addressed
     # block sharing across requests; admission discounts cache hits.
     prefix_cache: bool = False
+    # overload backstop (§D11): cap on queued-but-unplaced requests.
+    # Beyond it the scheduler SHEDS the lowest-priority newest arrivals
+    # (terminal 'shed' state, KV-free by construction) instead of
+    # letting the backlog wedge the pool. None disables the cap — the
+    # front door normally owns admission control; this is the last line.
+    max_waiting: Optional[int] = None
 
 
 @dataclass
@@ -163,6 +171,36 @@ class SchedulerDiagnostic:
     preempt_stats: Dict = field(default_factory=dict)
     quarantined: Tuple[int, ...] = ()
     health: Dict = field(default_factory=dict)  # island span -> miss count
+    # request lifecycle counters (§D11): aborted / expired / shed
+    lifecycle: Dict = field(default_factory=dict)
+    incidents: Tuple[Dict, ...] = ()   # audit log (snapshots elided)
+
+    def to_dict(self) -> Dict:
+        """JSON-safe snapshot. Nested incident snapshots are elided —
+        the top-level diagnostic already IS one, and a quarantine
+        incident's embedded ``SchedulerDiagnostic`` would otherwise
+        recurse into the serializer."""
+        return {
+            "t": self.t, "tick": self.tick, "layout": self.layout,
+            "islands": [dict(isl) for isl in self.islands],
+            "waiting": list(self.waiting),
+            "running": list(self.running),
+            "paused": list(self.paused),
+            "pool_free": list(self.pool_free),
+            "preempt_stats": dict(self.preempt_stats),
+            "quarantined": list(self.quarantined),
+            "health": dict(self.health),
+            "lifecycle": dict(self.lifecycle),
+            "incidents": [
+                {k: v for k, v in inc.items() if k != "snapshot"}
+                for inc in self.incidents],
+        }
+
+    def to_json(self) -> str:
+        """The structured artifact ``serve.py`` writes to
+        ``diagnostic.json`` on shutdown and on ``SchedulerWedged``."""
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True,
+                          default=str)
 
     def describe(self) -> str:
         lines = [f"  t={self.t:.3f} tick={self.tick} layout={self.layout}"]
@@ -178,6 +216,8 @@ class SchedulerDiagnostic:
         lines.append(f"  quarantined={list(self.quarantined)} "
                      f"health={self.health}")
         lines.append(f"  preempt_stats={self.preempt_stats}")
+        if self.lifecycle:
+            lines.append(f"  lifecycle={self.lifecycle}")
         return "\n".join(lines)
 
 
@@ -272,6 +312,12 @@ class DynamicScheduler:
         self._degraded_tick = False
         self._recovered_tick: set = set()  # req_ids recovered this pass
         self.incidents: List[Dict] = []    # audit log of faults handled
+        # -- request lifecycle (docs/PERF.md §D11) ----------------------
+        # terminal exits other than 'done': client aborts, deadline
+        # expiries, load sheds. The front door drives these; the
+        # counters live here so diagnostics see one accounting.
+        self.lifecycle: Dict[str, int] = {
+            "aborted": 0, "expired": 0, "shed": 0}
 
     # ------------------------------------------------------------------
     @property
@@ -292,6 +338,57 @@ class DynamicScheduler:
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.pool.submit(req)
+
+    def abort(self, req_id: str, reason: str = "aborted") -> bool:
+        """Terminal mid-flight abort (§D11): client cancellation
+        (``aborted``), deadline expiry (``expired``), or load shedding
+        (``shed``). Safe at ANY phase — queued, mid-prefill, decoding,
+        or paused across a rebind:
+
+        - every KV block returns through the same transactional release
+          path a completion uses (``KVCacheAdaptor.release``): private
+          segments — including a partially-written live tail — go back
+          to their write-time owners' free sets; shared-prefix segments
+          drop a refcount and park in the eviction pool (§D10);
+        - the backend's ``abort_request`` hook retires the request's
+          decode row WITHOUT draining its island (in-flight tokens are
+          tombstoned, not synchronized);
+        - the request never resurrects: rollback and resume paths skip
+          terminal states.
+
+        Returns False when the request is unknown or already terminal
+        (cancel/expiry races are expected and benign)."""
+        r = self.pool.all.get(req_id)
+        if r is None or r.state in TERMINAL_STATES:
+            return False
+        self.pool.remove(req_id)
+        for lst in (self.waiting, self.running, self.paused):
+            if r in lst:
+                lst.remove(r)
+        # free KV wherever the entries actually live — LIVE rebinds
+        # keep the blocks on the request's HOME adaptor while
+        # engine_group tracks the new island lead, and quarantine
+        # recovery can leave engine_group == -1 entirely, so sweep
+        # the whole fleet rather than trusting the group index
+        for a in self.adaptors:
+            if req_id in a.table:
+                a.release(req_id)
+        hook = getattr(self.backend, "abort_request", None)
+        if hook is not None:
+            hook(r)
+        self._tok_cache.pop(req_id, None)
+        # already-built worklists this tick must shed the request too
+        # (abort called from a backend hook or mid-tick sweep)
+        self._recovered_tick.add(req_id)
+        r.state = reason
+        r.engine_group = -1
+        if r.finish_t is None:
+            r.finish_t = self.now
+        self.lifecycle[reason] = self.lifecycle.get(reason, 0) + 1
+        self.incidents.append({
+            "t": self.now, "tick": self._tick, "kind": "abort",
+            "req": req_id, "why": reason})
+        return True
 
     def run(self, until_drained: bool = True, max_steps: int = 2_000_000,
             t_end: Optional[float] = None) -> None:
@@ -374,6 +471,8 @@ class DynamicScheduler:
         self.waiting.extend(self.pool.pull(self.now, 1 << 30))
         # ② Global Synchronization: one agreed order
         self.waiting.sort(key=lambda r: (-r.priority, r.arrival))
+        if self.cfg.max_waiting is not None:
+            self._shed_overflow()
 
         # ③ Mode Determination (policy layer; Flag_SetTP / Flag_ResetTP)
         switched = False
@@ -421,6 +520,22 @@ class DynamicScheduler:
         if not (progressed or switched):
             return False
         return True
+
+    def _shed_overflow(self) -> None:
+        """Bounded admission backstop (§D11): beyond ``cfg.max_waiting``
+        queued-but-unplaced requests, shed the lowest-priority newest
+        arrivals. Placed (mid-prefill) requests are never shed here —
+        their KV is live; the backpressure path owns those. Overload
+        thus ends in structured ``shed`` exits, never a wedged pool."""
+        unplaced = [r for r in self.waiting
+                    if r.prefilled == 0 and r.engine_group < 0]
+        excess = len(unplaced) - self.cfg.max_waiting
+        if excess <= 0:
+            return
+        victims = sorted(unplaced,
+                         key=lambda r: (r.priority, -r.arrival))[:excess]
+        for r in victims:
+            self.abort(r.req_id, reason="shed")
 
     # ------------------------------------------------------------------
     def _as_layout(self, target: Union[FleetLayout, int]) -> FleetLayout:
@@ -649,7 +764,8 @@ class DynamicScheduler:
         # a WIDER group also qualifies (its step programs read the old
         # segments in place); the pending slot then re-issues under the
         # group's mode.
-        back = [r for r in self.paused if self._group_restored(r, target)]
+        back = [r for r in self.paused if r.state not in TERMINAL_STATES
+                and self._group_restored(r, target)]
         for r in back:
             self.paused.remove(r)
             if r.prefilled < r.prompt_len:
@@ -688,6 +804,11 @@ class DynamicScheduler:
             if r in self.paused:
                 self.paused.remove(r)
             self.preempt_stats["paused"] -= 1
+            if r.state in TERMINAL_STATES:
+                # aborted/expired while the attempt was in flight: its
+                # KV is already released — reinstating would resurrect
+                # a terminal request into the running set (§D11)
+                continue
             if origin == "running":
                 r.state = "running"
                 self.running.append(r)
@@ -801,6 +922,14 @@ class DynamicScheduler:
         reserved: Dict[int, int] = {}   # blocks promised this tick
         fits = getattr(self.backend, "request_fits", None)
         widest = self.plan.valid_merges()[-1]
+        # while priority traffic is live anywhere in the system, the
+        # widest islands are its bind (§D7 Fig. 3): background work
+        # admitted there during a lull would hold batch rows for its
+        # whole decode and stall the next priority burst's TTFT —
+        # admit it to the narrow islands only (when any exist)
+        prio_live = any(r.priority > 0 and not r.done
+                        for r in self.running) or \
+            any(r.priority > 0 for r in self.waiting)
         for r in list(self.waiting):
             if r.state not in ("queued", "spec_dp"):
                 continue
@@ -855,6 +984,11 @@ class DynamicScheduler:
                     cands = leads
             else:
                 cands = leads
+                if prio_live and layout.max_merge > 1:
+                    narrow = [il for il in leads
+                              if il[0].merge < layout.max_merge]
+                    if narrow:
+                        cands = narrow
             order = sorted(
                 cands, key=lambda il: (
                     -il[0].merge if r.priority > 0 else il[0].merge,
@@ -1265,12 +1399,15 @@ class DynamicScheduler:
         ``recover_request`` hook reports how many generated tokens
         actually survived (an async engine's un-harvested ring dies
         with its island)."""
-        g = r.engine_group
         hook = getattr(self.backend, "recover_request", None)
         kept = r.generated if hook is None else min(hook(r), r.generated)
+        # a LIVE rebind leaves the blocks on the HOME adaptor while
+        # engine_group tracks the new island lead — drop the entry
+        # wherever it lives or the stale copy leaks past completion
         dropped = 0
-        if g >= 0:
-            dropped = self._adaptor(g).drop_for_recompute(r.req_id)
+        for a in self.adaptors:
+            if r.req_id in a.table:
+                dropped += a.drop_for_recompute(r.req_id)
         for lst in (self.running, self.paused, self.waiting):
             if r in lst:
                 lst.remove(r)
@@ -1320,7 +1457,9 @@ class DynamicScheduler:
             preempt_stats=dict(self.preempt_stats),
             quarantined=tuple(sorted(self.quarantined)),
             health={f"[{i.start},{i.stop})": m
-                    for i, m in self._health.items()})
+                    for i, m in self._health.items()},
+            lifecycle=dict(self.lifecycle),
+            incidents=tuple(self.incidents))
 
     def _log(self, phase: str) -> None:
         ps = self.prefix_cache.stats if self.prefix_cache is not None \

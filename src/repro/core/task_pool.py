@@ -15,6 +15,14 @@ import numpy as np
 PRIORITY_HIGH = 1
 PRIORITY_NORMAL = 0
 
+# terminal lifecycle states (§D11): once here, a request never re-enters
+# any scheduler list — rollback/resume paths skip them, metrics close
+# over them. 'done' is the only successful exit; the others record WHY
+# the request left (client abort, deadline expiry, load shed, admission
+# rejection).
+TERMINAL_STATES = frozenset(
+    {"done", "aborted", "expired", "shed", "rejected"})
+
 
 @dataclass
 class Request:
@@ -33,6 +41,15 @@ class Request:
     # content addressing finds them without any workload-level hints.
     prefix_seed: Optional[int] = None
     prefix_len: int = 0
+    # SLO class (§D11): the front door maps tier names onto scheduler
+    # priority (island placement) and per-tier deadlines. Deadlines are
+    # RELATIVE: TTFT in seconds from arrival, TPOT in seconds per output
+    # token (enforced on the running average). ``cancel_at`` scripts a
+    # client cancellation at an absolute virtual time (workload replay).
+    tier: str = "standard"
+    deadline_ttft: Optional[float] = None
+    deadline_tpot: Optional[float] = None
+    cancel_at: Optional[float] = None
 
     # runtime bookkeeping
     state: str = "queued"  # queued|prefilling|running|paused|spec_dp|done
@@ -48,6 +65,7 @@ class Request:
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     sched_t: Optional[float] = None      # first scheduling (queue time)
+    admitted_t: Optional[float] = None   # front-door admission (§D11)
     token_times: List[float] = field(default_factory=list)
 
     @property
@@ -94,6 +112,17 @@ class TaskPool:
             while q and len(out) < k and q[0].arrival <= now:
                 out.append(q.popleft())
         return out
+
+    def remove(self, req_id: str) -> bool:
+        """Drop a not-yet-pulled request from the arrival queues (client
+        cancellation before admission, §D11). The ``all`` index keeps
+        the request so metrics and lifecycle accounting still see it."""
+        for q in (self._hq, self._q):
+            for r in q:
+                if r.req_id == req_id:
+                    q.remove(r)
+                    return True
+        return False
 
     def peek_arrived(self, now: float) -> List[Request]:
         return [r for r in itertools.chain(self._hq, self._q)

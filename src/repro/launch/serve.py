@@ -42,6 +42,29 @@ def main():
                     metavar="KIND@TICK[:eng,eng...]",
                     help="scripted fault, e.g. kill@40:3 stall@20:0,1 "
                          "rebind_fail@10 pool_exhaust@30:2 (repeatable)")
+    # front door (§D11): continuous admission, SLO deadlines, shedding
+    ap.add_argument("--frontdoor", action="store_true",
+                    help="serve through the §D11 front door (lifecycle "
+                         "states, deadlines, tiered shedding, drain)")
+    ap.add_argument("--no-shed", action="store_true",
+                    help="disable overload protection (baseline mode)")
+    ap.add_argument("--queue-cap", type=int, default=512)
+    ap.add_argument("--ttft-deadline", type=float, default=0.0,
+                    help="priority-tier TTFT SLO in seconds (0 = none)")
+    ap.add_argument("--tpot-deadline", type=float, default=0.0,
+                    help="priority-tier TPOT SLO in seconds (0 = none)")
+    ap.add_argument("--arrival", default="phased",
+                    choices=["phased", "poisson", "bursty"])
+    ap.add_argument("--rate", type=float, default=10.0,
+                    help="arrival rate (req/s) for poisson/bursty")
+    ap.add_argument("--background-frac", type=float, default=0.0,
+                    help="fraction of traffic in the sheddable tier")
+    ap.add_argument("--cancel-frac", type=float, default=0.0,
+                    help="fraction of requests with scripted cancels")
+    ap.add_argument("--diagnostic", default="",
+                    metavar="PATH",
+                    help="write the structured SchedulerDiagnostic "
+                         "JSON here on shutdown AND on a wedge")
     args = ap.parse_args()
 
     from repro.core.faults import FaultInjector, FaultSpec
@@ -127,9 +150,53 @@ def main():
             spec.prefix_hit = args.prefix_hit
             spec.prefix_range = (512, 2048)
 
-    for r in generate(spec):
-        sched.submit(copy.deepcopy(r))
-    sched.run()
+    spec.arrival = args.arrival
+    spec.rate = args.rate
+    spec.background_frac = args.background_frac
+    spec.cancel_frac = args.cancel_frac
+
+    import json
+
+    from repro.core.scheduler import SchedulerWedged
+
+    def write_diag(diag: dict):
+        if args.diagnostic:
+            with open(args.diagnostic, "w") as f:
+                json.dump(diag, f, indent=2, sort_keys=True, default=str)
+                f.write("\n")
+            print(f"  diagnostic    : {args.diagnostic}")
+
+    frontdoor = None
+    if args.frontdoor:
+        from repro.serving.frontdoor import (FrontDoor, FrontDoorConfig,
+                                             SLOClass)
+        from repro.serving.metrics import tier_report
+        tiers = (SLOClass("priority", priority=1,
+                          deadline_ttft=args.ttft_deadline or None,
+                          deadline_tpot=args.tpot_deadline or None),
+                 SLOClass("standard"),
+                 SLOClass("background", sheddable=True))
+        frontdoor = FrontDoor(sched, FrontDoorConfig(
+            queue_cap=args.queue_cap, shed=not args.no_shed,
+            enforce_deadlines=not args.no_shed, tiers=tiers))
+        try:
+            for r in generate(spec):
+                frontdoor.submit(copy.deepcopy(r))
+            frontdoor.run()
+        except SchedulerWedged as w:
+            print(f"WEDGED: {w.args[0]}")
+            write_diag(frontdoor.diagnostic("wedged"))
+            raise
+    else:
+        for r in generate(spec):
+            sched.submit(copy.deepcopy(r))
+        try:
+            sched.run()
+        except SchedulerWedged as w:
+            print(f"WEDGED: {w.args[0]}")
+            write_diag(w.diagnostic.to_dict()
+                       if w.diagnostic is not None else {})
+            raise
     m = summarize(sched.pool.all.values())
     print(f"arch={args.arch} strategy={args.strategy} "
           f"fixed_merge={args.fixed_merge or 'dynamic'}")
@@ -160,6 +227,23 @@ def main():
                      if k not in ("t", "tick", "kind", "snapshot")}
             print(f"    incident t={inc['t']:.3f} tick={inc['tick']} "
                   f"{inc['kind']}: {extra}")
+    if frontdoor is not None:
+        print(f"  lifecycle     : {sched.lifecycle} "
+              f"rejected={frontdoor.counters['rejected']}")
+        for tier, row in tier_report(
+                list(frontdoor.requests.values())).items():
+            print(f"  tier {tier:<10}: n={row['n']} done={row['done']} "
+                  f"shed={row['shed']} expired={row['expired']} "
+                  f"p99_ttft={row['p99_ttft_s'] * 1e3:.1f}ms "
+                  f"goodput={row['goodput']:.2f}")
+        # graceful drain: admission is already empty here, so this just
+        # emits the structured shutdown artifact
+        diag = frontdoor.shutdown(args.diagnostic or None)
+        if args.diagnostic:
+            print(f"  diagnostic    : {args.diagnostic}")
+        del diag
+    elif args.diagnostic:
+        write_diag(sched._diagnostic().to_dict())
 
 
 if __name__ == "__main__":

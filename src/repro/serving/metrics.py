@@ -1,5 +1,7 @@
 """Streaming-inference metrics (paper §6.1.4): TTFT, TPOT, ILT, queue
-time, peak generation throughput."""
+time, peak generation throughput — plus the per-tier SLO report the
+front door's lifecycle accounting feeds (§D11: p50/p99 per tier,
+lifecycle counters, goodput = met-SLO completions / admitted)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -28,7 +30,10 @@ class Summary:
 
 def summarize(reqs: Sequence[Request], *, window: float = 5.0,
               priority_only: bool = False) -> Summary:
-    done = [r for r in reqs if r.finish_t is not None]
+    # terminal non-done exits (§D11: aborted/expired/shed) carry a
+    # finish_t too — only completions count toward serving metrics
+    done = [r for r in reqs if r.finish_t is not None
+            and r.state == "done"]
     if priority_only:
         done = [r for r in done if r.priority == PRIORITY_HIGH]
     if not done:
@@ -65,3 +70,53 @@ def summarize(reqs: Sequence[Request], *, window: float = 5.0,
         total_tokens=int(sum(r.generated for r in done)),
         makespan=float(makespan),
     )
+
+
+def met_slo(r: Request) -> bool:
+    """Did a COMPLETED request meet every deadline its tier set? The
+    goodput numerator (§D11). Unset deadlines don't constrain."""
+    if r.state != "done" or r.first_token_t is None:
+        return False
+    if r.deadline_ttft is not None \
+            and r.first_token_t - r.arrival > r.deadline_ttft:
+        return False
+    if r.deadline_tpot is not None and r.generated > 1:
+        tpot = (r.finish_t - r.first_token_t) / max(r.generated - 1, 1)
+        if tpot > r.deadline_tpot:
+            return False
+    return True
+
+
+def _pct(vals: List[float], q: float) -> float:
+    return float(np.percentile(np.array(vals), q)) if vals \
+        else float("nan")
+
+
+def tier_report(reqs: Sequence[Request]) -> Dict[str, Dict]:
+    """Per-tier lifecycle + latency report (§D11): p50/p99 TTFT and
+    TPOT over completions, terminal-state counters, and goodput
+    (done-within-SLO / admitted — requests the front door let into the
+    scheduler, whatever their fate)."""
+    out: Dict[str, Dict] = {}
+    for tier in sorted({r.tier for r in reqs}):
+        rs = [r for r in reqs if r.tier == tier]
+        done = [r for r in rs if r.state == "done"
+                and r.first_token_t is not None]
+        ttft = [r.first_token_t - r.arrival for r in done]
+        tpot = [(r.finish_t - r.first_token_t) / max(r.generated - 1, 1)
+                for r in done if r.generated > 1]
+        admitted = [r for r in rs if r.admitted_t is not None]
+        met = sum(1 for r in done if met_slo(r))
+        out[tier] = {
+            "n": len(rs),
+            "admitted": len(admitted),
+            "done": len(done),
+            "aborted": sum(1 for r in rs if r.state == "aborted"),
+            "expired": sum(1 for r in rs if r.state == "expired"),
+            "shed": sum(1 for r in rs if r.state == "shed"),
+            "rejected": sum(1 for r in rs if r.state == "rejected"),
+            "p50_ttft_s": _pct(ttft, 50), "p99_ttft_s": _pct(ttft, 99),
+            "p50_tpot_s": _pct(tpot, 50), "p99_tpot_s": _pct(tpot, 99),
+            "goodput": met / max(len(admitted), 1),
+        }
+    return out

@@ -392,3 +392,100 @@ def test_seize_restore_roundtrip():
     ad.restore(taken)
     assert ad.free_blocks() == 3
     ad.append_slots("r0", 1)            # pool serves again
+
+
+# ---------------------------------------------------------------------------
+# lifecycle exits under chaos (§D11 satellite: abort / expiry / shed
+# interleaved with every switch strategy AND injected faults)
+# ---------------------------------------------------------------------------
+
+def _frontdoor(strategy, injector=None, blocks=40000, **cfg_kw):
+    from repro.serving.frontdoor import (FrontDoor, FrontDoorConfig,
+                                         SLOClass)
+    s = make_sched(strategy=strategy, injector=injector, blocks=blocks)
+    tiers = (SLOClass("priority", priority=PRIORITY_HIGH,
+                      deadline_ttft=30.0),
+             SLOClass("standard"),
+             SLOClass("background", sheddable=True))
+    return FrontDoor(s, FrontDoorConfig(tiers=tiers, **cfg_kw))
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_chaos_matrix_abort_expiry_shed_under_faults(strategy):
+    """The full §D11 exit zoo — client cancels, TTFT/TPOT expiry, and
+    background shedding — racing an engine KILL and a scripted pool
+    burst, across every switch strategy. Everything must end terminal
+    (no stranded requests, no wedge) and the fleet must stay clean."""
+    from repro.core.task_pool import TERMINAL_STATES, Request
+    inj = FaultInjector([
+        FaultSpec(kind=KILL, tick=10, engines=(5,)),
+        FaultSpec(kind=POOL_EXHAUST, tick=20, blocks=500, duration=10),
+    ])
+    fd = _frontdoor(strategy, injector=inj, queue_cap=12)
+    for i in range(48):
+        tier = ("priority", "standard", "background")[i % 3]
+        fd.submit(Request(
+            req_id=f"r{i}", arrival=i / 40.0, prompt_len=1024,
+            output_len=128, tier=tier,
+            cancel_at=i / 40.0 + 0.4 if i % 4 == 0 else None,
+            deadline_tpot=1e-9 if i % 9 == 1 else None))
+    fd.run()
+    states = {r.req_id: r.state for r in fd.requests.values()}
+    assert all(v in TERMINAL_STATES for v in states.values()), states
+    assert fd.sched.lifecycle["aborted"] >= 1
+    assert fd.sched.lifecycle["expired"] >= 1
+    assert 5 in fd.sched.quarantined
+    for ad in fd.sched.adaptors:
+        assert not ad.table              # every exit released its KV
+    assert not fd.sched._seized
+
+
+def test_mid_rebind_abort_not_resurrected_by_rollback():
+    """A request paused for a transition then aborted must stay
+    terminal when the transition rolls back — rollback restores the
+    survivors, never the dead."""
+    s = make_sched(strategy=HARD)
+    for r in burst(6, rate=100.0, prompt=2048, out=256):
+        s.submit(r)
+    while not s.running:
+        s.step()
+    victim = s.running[0]
+    newly = s._pause(list(s.running))
+    assert victim in s.paused
+    assert s.abort(victim.req_id)
+    assert victim.state == "aborted"
+    s._rollback_transition(s.layout, newly, "test rollback")
+    assert victim.state == "aborted"     # not resurrected
+    assert victim not in s.paused and victim not in s.running
+    assert victim.req_id not in [q.req_id for q in s.waiting]
+    assert all(victim.req_id not in ad.table for ad in s.adaptors)
+    s.run()                              # survivors still finish
+    done = [r for r in s.pool.all.values() if r.state == "done"]
+    assert len(done) == 5
+
+
+@pytest.mark.parametrize("strategy", [HARD, LIVE])
+def test_abort_while_paused_across_switch_frees_blocks(strategy):
+    """Cancel a request that is parked in ``paused`` mid-switch: the
+    release path must find its adaptor by searching the fleet (its
+    engine_group may point at a dissolved island)."""
+    s = make_sched(strategy=strategy)
+    for r in burst(8, rate=100.0, prompt=2048, out=256, prio_every=4):
+        s.submit(r)
+    aborted = None
+    for _ in range(2000):
+        s.step()
+        if s.paused and aborted is None:
+            aborted = s.paused[0]
+            assert s.abort(aborted.req_id)
+        if all(r.state != "waiting" and not r.req_id in
+               [q.req_id for q in s.running]
+               for r in s.pool.all.values()) and s.pool.empty() \
+                and not s.waiting and not s.running and not s.paused:
+            break
+    s.run()
+    if aborted is not None:
+        assert aborted.state == "aborted"
+        assert all(aborted.req_id not in ad.table for ad in s.adaptors)
+    for ad in s.adaptors:
+        assert not ad.table

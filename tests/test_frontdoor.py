@@ -1,0 +1,420 @@
+"""Overload-hardened front door (docs/PERF.md §D11).
+
+Lifecycle state machine, SLO deadlines, client cancellation with safe
+mid-flight abort, tiered load shedding, bounded-queue rejection,
+graceful drain with the structured diagnostic artifact — and the
+abort-path KV conservation regression: aborting ~100 requests at
+random phases (queued / prefill / decode / paused-mid-rebind) across
+LIVE rebinds must leave the pools, refcounts and eviction pools
+bit-identical to a scheduler that never admitted anything."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.kv_adaptor import PoolGeometry, bind_fleet
+from repro.core.modes import FleetLayout, ParallelPlan
+from repro.core.policy import FlyingPolicy
+from repro.core.scheduler import (HARD, LIVE, SEQUENTIAL, SOFT,
+                                  DynamicScheduler, SchedulerConfig,
+                                  SchedulerWedged)
+from repro.core.task_pool import TERMINAL_STATES, Request
+from repro.serving.frontdoor import (DEFAULT_TIERS, FrontDoor,
+                                     FrontDoorConfig, SLOClass)
+from repro.serving.metrics import met_slo, tier_report
+from repro.serving.simulator import CostModel, SimBackend
+from repro.serving.workload import WorkloadSpec, generate
+
+CFG = get_config("llama3-8b")
+PLAN = ParallelPlan(engine_rows=1, tp_base=16, data_rows=16)
+
+
+def make_sched(strategy=LIVE, blocks=40000, policy="flying",
+               prefix_cache=False, injector=None):
+    geom = PoolGeometry(CFG, PLAN, num_blocks=blocks, block_base=16)
+    be = SimBackend(CostModel(CFG, PLAN), switch_mode="flying",
+                    injector=injector)
+    sc = SchedulerConfig(strategy=strategy, prefix_cache=prefix_cache)
+    return DynamicScheduler(
+        PLAN, geom, be, sc,
+        policy=FlyingPolicy() if policy == "flying" else None)
+
+
+def make_door(sched=None, **kw):
+    sched = sched or make_sched()
+    tiers = kw.pop("tiers", (
+        SLOClass("priority", priority=1, deadline_ttft=10.0),
+        SLOClass("standard", deadline_ttft=60.0),
+        SLOClass("background", sheddable=True),
+    ))
+    return FrontDoor(sched, FrontDoorConfig(tiers=tiers, **kw))
+
+
+def req(i, arrival=0.0, prompt=512, out=32, tier="standard", **kw):
+    return Request(req_id=f"r{i}", arrival=arrival, prompt_len=prompt,
+                   output_len=out, tier=tier, **kw)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle state machine
+# ---------------------------------------------------------------------------
+
+def test_state_machine_progression():
+    fd = make_door()
+    s = fd.sched
+    r = req(0)
+    assert fd.submit(r)
+    assert fd.state_of("r0") == "QUEUED"
+    fd._admit()
+    assert fd.state_of("r0") == "ADMITTED"
+    assert r.admitted_t is not None
+    while r.state not in TERMINAL_STATES:
+        seen = fd.state_of("r0")
+        assert seen in {"ADMITTED", "PREFILL", "DECODE"}
+        if not s.step():
+            break
+    assert r.state == "done"
+    assert fd.state_of("r0") == "DONE"
+    assert r.generated == r.output_len
+
+
+def test_tier_stamps_priority_and_deadlines():
+    fd = make_door()
+    hi, bg = req(0, tier="priority"), req(1, tier="background")
+    fd.submit(hi)
+    fd.submit(bg)
+    assert hi.priority == 1 and hi.deadline_ttft == 10.0
+    assert bg.priority == 0 and fd.tiers["background"].sheddable
+    # explicit per-request deadlines win over the tier default
+    own = req(2, tier="priority", deadline_ttft=0.5)
+    fd.submit(own)
+    assert own.deadline_ttft == 0.5
+
+
+def test_unknown_tier_defaults_to_standard_class():
+    fd = make_door()
+    r = req(0, tier="mystery")
+    assert fd.submit(r)
+    assert r.priority == 0 and r.deadline_ttft is None
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_while_queued_never_touches_scheduler():
+    fd = make_door()
+    r = req(0, arrival=100.0)          # future arrival: stays queued
+    fd.submit(r)
+    assert fd.cancel("r0")
+    assert r.state == "aborted" and fd.state_of("r0") == "ABORTED"
+    assert "r0" not in fd.sched.pool.all
+    assert fd.sched.lifecycle["aborted"] == 1
+    assert not fd.cancel("r0")         # idempotent on terminal
+
+
+def test_cancel_mid_flight_releases_kv_and_retires_row():
+    fd = make_door()
+    s = fd.sched
+    r = req(0, prompt=2048, out=256)
+    fd.submit(r)
+    fd._admit()
+    while fd.state_of("r0") != "DECODE":
+        s.step()
+    assert any(r.req_id in ad.table for ad in s.adaptors)
+    assert fd.cancel("r0")
+    assert r.state == "aborted" and r.finish_t is not None
+    assert all(r.req_id not in ad.table for ad in s.adaptors)
+    assert r.req_id not in s.running and r.req_id not in [
+        q.req_id for q in s.waiting]
+    s.run()                            # the fleet keeps serving after
+
+
+def test_scripted_cancel_at_fires_during_run():
+    fd = make_door()
+    rs = [req(i, arrival=i * 0.001, prompt=2048, out=256,
+              cancel_at=0.02 if i % 2 else None) for i in range(8)]
+    for r in rs:
+        fd.submit(r)
+    fd.run()
+    states = {r.req_id: r.state for r in rs}
+    assert all(v in TERMINAL_STATES for v in states.values())
+    assert sum(1 for r in rs if r.state == "aborted") >= 1
+    assert fd.sched.lifecycle["aborted"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_ttft_deadline_expires_queued_request():
+    fd = make_door(admit_cap=1)
+    blocker = req(0, prompt=4000, out=512)
+    starved = req(1, tier="priority")   # deadline_ttft=10 from the tier
+    fd.submit(blocker)
+    fd.submit(starved)
+    fd.run()
+    assert blocker.state == "done"
+    assert starved.state in {"done", "expired"}
+    # tiny deadline on a blocked request must expire, not wedge
+    fd2 = make_door(admit_cap=1)
+    b2 = req(0, prompt=4000, out=512)
+    s2 = req(1, deadline_ttft=1e-6)
+    fd2.submit(b2)
+    fd2.submit(s2)
+    fd2.run()
+    assert s2.state == "expired" and s2.first_token_t is None
+    assert fd2.sched.lifecycle["expired"] == 1
+
+
+def test_tpot_deadline_aborts_slow_decode():
+    fd = make_door()
+    r = req(0, prompt=1024, out=512, deadline_tpot=1e-9)
+    fd.submit(r)
+    fd.run()
+    assert r.state == "expired"
+    assert r.generated < r.output_len   # cut off mid-decode
+    assert all(r.req_id not in ad.table for ad in fd.sched.adaptors)
+
+
+def test_enforce_deadlines_off_ignores_expiry():
+    fd = make_door(enforce_deadlines=False)
+    r = req(0, prompt=1024, out=64, deadline_tpot=1e-9)
+    fd.submit(r)
+    fd.run()
+    assert r.state == "done"
+    assert not met_slo(r)               # finished, but blew its SLO
+
+
+# ---------------------------------------------------------------------------
+# shedding + bounded queue
+# ---------------------------------------------------------------------------
+
+def test_shed_order_background_first_priority_never():
+    fd = make_door(queue_cap=4, admit_cap=1)
+    blocker = req(99, prompt=4000, out=512)
+    fd.submit(blocker)
+    fd._admit()
+    mix = [req(0, tier="priority"), req(1, tier="background"),
+           req(2, tier="standard"), req(3, tier="background"),
+           req(4, tier="standard"), req(5, tier="priority"),
+           req(6, tier="background")]
+    ok = [fd.submit(r) for r in mix]
+    # each over-cap submit displaces the newest background entry: r4's
+    # arrival sheds r3, r5 (priority!) sheds r1 instead of being
+    # refused, and r6 — itself background and newest — sheds itself
+    assert ok == [True, True, True, True, True, True, False]
+    shed = {r.req_id for r in mix if r.state == "shed"}
+    assert shed == {"r1", "r3", "r6"}
+    assert all(r.state not in TERMINAL_STATES for r in mix
+               if r.tier != "background")
+    assert fd.sched.lifecycle["shed"] == 3
+
+
+def test_queue_overflow_rejects_newest_non_sheddable():
+    fd = make_door(queue_cap=2, admit_cap=1)
+    fd.submit(req(99, prompt=4000, out=512))
+    fd._admit()
+    rs = [req(i) for i in range(4)]
+    accepted = [fd.submit(r) for r in rs]
+    # the backlog was at cap when r2/r3 arrived: refused with reason
+    assert accepted == [True, True, False, False]
+    assert rs[3].state == "rejected"
+    assert fd.reject_reasons["r3"] == "queue_full"
+    assert fd.counters["rejected"] == 2
+
+
+def test_shed_disabled_admits_everything():
+    fd = make_door(queue_cap=1, shed=False)
+    rs = [req(i, prompt=256, out=16) for i in range(6)]
+    for r in rs:
+        fd.submit(r)
+    fd.run()
+    assert all(r.state == "done" for r in rs)
+    assert fd.counters["rejected"] == 0
+
+
+def test_admit_ctx_cap_holds_arrivals_in_queue():
+    fd = make_door(admit_ctx_frac=1e-6)  # room for nothing
+    r = req(0)
+    fd.submit(r)
+    assert not fd._admit()
+    assert fd.state_of("r0") == "QUEUED"
+
+
+# ---------------------------------------------------------------------------
+# overload never wedges
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", [SEQUENTIAL, SOFT, HARD, LIVE])
+def test_saturating_burst_ends_terminal_never_wedged(strategy):
+    sched = make_sched(strategy=strategy, blocks=3000)
+    fd = make_door(sched, queue_cap=16)
+    spec = WorkloadSpec(n_requests=200, arrival="bursty", rate=60.0,
+                        burst_mult=10.0, phase_seconds=1.0,
+                        prompt_range=(512, 4000),
+                        output_range=(64, 512),
+                        priority_frac=0.2, background_frac=0.4,
+                        length_dist="lognormal", cancel_frac=0.05,
+                        seed=5)
+    for r in generate(spec):
+        fd.submit(r)
+    fd.run()                            # must not raise SchedulerWedged
+    rep = tier_report(list(fd.requests.values()))
+    assert all(r.state in TERMINAL_STATES for r in fd.requests.values())
+    assert rep["priority"]["shed"] == 0
+    assert rep["priority"]["rejected"] == 0
+    assert not sched._seized
+
+
+def test_max_waiting_backstop_sheds_inside_scheduler():
+    # direct submission (no front door) with the scheduler-side cap:
+    # overflow is shed lowest-priority newest-first, never wedged
+    geom = PoolGeometry(CFG, PLAN, num_blocks=40000, block_base=16)
+    be = SimBackend(CostModel(CFG, PLAN), switch_mode="flying")
+    s = DynamicScheduler(PLAN, geom, be,
+                         SchedulerConfig(strategy=HARD, max_waiting=8),
+                         policy=None)
+    for i in range(32):
+        s.submit(req(i, arrival=0.0, prompt=4000, out=64,
+                     priority=1 if i < 4 else 0))
+    s.run()
+    assert s.lifecycle["shed"] > 0
+    done = [r for r in s.pool.all.values() if r.state == "done"]
+    assert all(r.priority == 1 or r.state in {"done", "shed"}
+               for r in s.pool.all.values())
+    assert all(r.state == "done" for r in s.pool.all.values()
+               if r.priority == 1)
+    assert len(done) + s.lifecycle["shed"] == 32
+
+
+# ---------------------------------------------------------------------------
+# graceful drain + diagnostic artifact
+# ---------------------------------------------------------------------------
+
+def test_graceful_drain_writes_diagnostic(tmp_path):
+    fd = make_door()
+    live = [req(i, prompt=1024, out=64) for i in range(4)]
+    queued = [req(i + 10, arrival=1e9) for i in range(3)]
+    for r in live + queued:
+        fd.submit(r)
+    fd._admit()
+    fd.sched.step()
+    path = tmp_path / "diagnostic.json"
+    diag = fd.shutdown(str(path))
+    assert not fd.submit(req(50))       # admission closed
+    assert fd.reject_reasons["r50"] == "draining"
+    assert all(r.state == "done" for r in live)       # drained out
+    assert all(r.state == "shed" for r in queued)     # not admitted
+    blob = json.loads(path.read_text())
+    assert blob == json.loads(json.dumps(diag, default=str))
+    f = blob["frontdoor"]
+    assert f["counters"]["submitted"] == 7  # snapshot predates r50
+    assert f["lifecycle"]["shed"] == 3
+    assert "standard" in f["tiers"]
+    assert blob["lifecycle"]["shed"] == 3
+
+
+def test_drain_grace_cutoff_aborts_stragglers():
+    fd = make_door(drain_grace=0.0)
+    r = req(0, prompt=4000, out=512)
+    fd.submit(r)
+    fd._admit()
+    fd.sched.step()
+    fd.shutdown()
+    assert r.state == "aborted"
+    assert all(not ad.table for ad in fd.sched.adaptors)
+
+
+def test_scheduler_diagnostic_json_roundtrip():
+    s = make_sched()
+    s.submit(req(0))
+    s.run()
+    s.abort_reason = None
+    d = s._diagnostic()
+    blob = json.loads(d.to_json())
+    assert blob["layout"] == s.layout.describe()
+    assert blob["lifecycle"] == {"aborted": 0, "expired": 0, "shed": 0}
+    assert isinstance(blob["pool_free"], list)
+    # incident snapshots are elided from the JSON view, kind/why stay
+    for inc in blob["incidents"]:
+        assert "snapshot" not in inc and "kind" in inc
+
+
+# ---------------------------------------------------------------------------
+# abort-path KV conservation (satellite 1)
+# ---------------------------------------------------------------------------
+
+def _pool_fingerprint(s):
+    """Canonical allocator state, comparable across runs: rebind to the
+    same uniform layout, evict every parked refcount-0 cached block
+    (seize drains the evict pool and refuses refcount>0 blocks — a
+    leaked reference would surface right here), then snapshot."""
+    bind_fleet(s.adaptors, FleetLayout.uniform(PLAN, 1))
+    for ad in s.adaptors:
+        taken = ad.seize(-1)
+        ad.restore(taken)
+    fp = []
+    for ad in s.adaptors:
+        # the free STACK may carry stale duplicates by design (lazily
+        # dropped on pop) — the free SET is the conserved quantity
+        assert set(ad.free) >= ad._free_set
+        fp.append((set(ad._free_set), dict(ad._evict_pool),
+                   dict(ad.table)))
+    return fp
+
+
+def test_abort_conservation_100_random_phases_across_live_rebinds():
+    """Abort ~100 requests at random lifecycle phases (queued, prefill,
+    decode, paused mid-LIVE-rebind) in a shared-prefix workload; after
+    the dust settles the KV pools must be bit-identical to a scheduler
+    that never admitted a single request. Zero leaked blocks, zero
+    leaked refcounts, zero resurrected table entries."""
+    rng = np.random.default_rng(17)
+    reqs = []
+    for i in range(140):
+        arrival = float(rng.uniform(0.0, 2.0))
+        r = Request(
+            req_id=f"r{i}", arrival=arrival,
+            prompt_len=int(rng.integers(256, 3000)),
+            output_len=int(rng.integers(64, 512)),
+            priority=1 if i % 5 == 0 else 0,
+            tier="priority" if i % 5 == 0 else "standard",
+            # ~100/140 cancel at a time spanning a request's life:
+            # some fire while queued, some mid-prefill, some deep in
+            # decode, some while paused across a rebind
+            cancel_at=(arrival + float(rng.uniform(0.0, 0.8)))
+            if i % 7 != 0 else None,
+            prefix_seed=int(i % 3) if i % 2 == 0 else None,
+            prefix_len=192 if i % 2 == 0 else 0)
+        reqs.append(r)
+
+    dirty = make_sched(strategy=LIVE, blocks=6000, prefix_cache=True)
+    fd = FrontDoor(dirty, FrontDoorConfig(tiers=DEFAULT_TIERS))
+    for r in reqs:
+        fd.submit(r)
+    fd.run()
+    assert all(r.state in TERMINAL_STATES for r in reqs)
+    aborted = sum(1 for r in reqs if r.state == "aborted")
+    assert aborted >= 60                # the chaos really happened
+    assert dirty.switches >= 1          # rebinds really interleaved
+
+    clean = make_sched(strategy=LIVE, blocks=6000, prefix_cache=True)
+    assert _pool_fingerprint(dirty) == _pool_fingerprint(clean)
+    assert not dirty.prefix_cache.index  # fully evicted => no leaks
+    assert not dirty._seized
+
+
+def test_abort_during_prefill_returns_partial_blocks():
+    fd = make_door()
+    s = fd.sched
+    free0 = [ad.free_blocks() for ad in s.adaptors]
+    r = req(0, prompt=3999, out=256)
+    fd.submit(r)
+    fd._admit()
+    while fd.state_of("r0") != "PREFILL":
+        s.step()
+    assert 0 < r.prefilled < r.prompt_len
+    fd.cancel("r0")
+    assert [ad.free_blocks() for ad in s.adaptors] == free0
