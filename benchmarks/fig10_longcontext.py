@@ -1,7 +1,33 @@
 """Fig. 10: ultra-long-context stress at each model's maximum supported
 context (8K / 128K / 1M in the paper): peak prompt throughput, TTFT, ILT
-for static TP, static DP, and flying."""
+for static TP, static DP, and flying.
+
+The ``flying-sp`` row (docs/PERF.md §D12) serves the same stress trace
+on a pool deliberately sized so the context exceeds the WIDEST merge
+group's per-request KV capacity — the regime where every other system
+is structurally unable to hold a single request and only an elastic
+sequence-parallel island (engines pooling KV by token range at write
+tag 1) can admit it.
+
+``run_guard`` is the --smoke acceptance path: (a) the roofline cost
+model must show decode TPOT <= 0.7x per SP doubling at the fig10
+context (KV reads shard ``1/sp``; only the LSE combine is added);
+(b) an end-to-end sim serve at reduced scale completes every pooled
+request with zero pauses; (c) the reduced-scale REAL-ENGINE row runs
+``tests/md_scripts/check_seq_parallel.py`` in a subprocess (8 emulated
+host devices) and requires token identity with the big-pool reference
+across a live SP2->SP4 rebind. Results land in BENCH_longcontext.json.
+"""
 from __future__ import annotations
+
+import copy
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import csv_row, run_workload
 from repro.serving.workload import WorkloadSpec
@@ -11,6 +37,65 @@ STRESS = {
     "GPT-OSS-120B": ("paper-gpt-oss-120b", 131072),
     "Nemotron-8B": ("paper-nemotron-8b", 1048576),
 }
+
+GUARD_TPOT_RATIO = 0.7          # per SP doubling, at fig10 context
+
+
+def _build_sp_sched(arch: str, blocks: int = 8):
+    """A flying-sp scheduler on a deliberately tiny pool, plus the
+    reduced-scale stress context: strictly larger than the WIDEST merge
+    group's per-request capacity (so SP islands are the only admit
+    path) yet within the widest SP degree's pooled budget. The sim
+    tracks SP placements per block, so the row runs at pool-relative
+    scale rather than the paper's absolute token counts — the capacity
+    REGIME is the same."""
+    from repro.configs import get_config
+    from repro.core.kv_adaptor import PoolGeometry
+    from repro.core.modes import ParallelPlan
+    from repro.core.policy import FlyingPolicy
+    from repro.core.scheduler import (LIVE, DynamicScheduler,
+                                      SchedulerConfig)
+    from repro.serving.simulator import CostModel, SimBackend
+
+    cfg = get_config(arch)
+    plan = ParallelPlan(engine_rows=cfg.engine_rows, tp_base=16,
+                        data_rows=16)
+    widest = plan.valid_merges()[-1]
+    geom = PoolGeometry(cfg, plan, num_blocks=blocks, block_base=16,
+                        layout="head")
+    cap_w, cap_1 = geom.capacity(widest), geom.capacity(1)
+    if widest * cap_1 <= cap_w:
+        return None, 0      # head split never saturates: SP buys nothing
+    merge_pool = cap_w * (blocks - 1)
+    sp_pool = widest * cap_1 * (blocks - 1)
+    ctx_sp = min(merge_pool + max(merge_pool // 2, 256),
+                 sp_pool - 256)
+    if ctx_sp <= merge_pool:
+        return None, 0
+    be = SimBackend(CostModel(cfg, plan), switch_mode="flying")
+    sched = DynamicScheduler(
+        plan, geom, be, SchedulerConfig(strategy=LIVE),
+        policy=FlyingPolicy(live=True, sp=True))
+    return sched, ctx_sp
+
+
+def _run_sp_workload(arch: str, n_requests: int, seed: int):
+    from repro.serving.metrics import summarize
+    from repro.serving.workload import generate
+
+    sched, ctx_sp = _build_sp_sched(arch)
+    if sched is None:
+        return None
+    spec = WorkloadSpec(
+        n_requests=n_requests, seed=seed,
+        prompt_range=(ctx_sp - 64, ctx_sp - 63), output_range=(32, 64),
+        low_rate=(0.2, 0.5), burst_rate=(0.5, 1.0),
+        phase_seconds=60.0)
+    for r in generate(spec):
+        sched.submit(copy.deepcopy(r))
+    sched.run()
+    return {"summary": summarize(sched.pool.all.values()),
+            "sched": sched, "ctx": ctx_sp}
 
 
 def run(n_requests: int = 60, seed: int = 14):
@@ -38,6 +123,137 @@ def run(n_requests: int = 60, seed: int = 14):
             rows.append(csv_row(
                 "fig10", f"{tag}/prompt_throughput_tok_s",
                 f"{done * ctx / max(m.makespan, 1e-9):.0f}"))
+        # flying-sp (§D12): the same stress REGIME at pool-relative
+        # scale — every request's context exceeds the widest merge
+        # group's per-request KV capacity, so only SP islands can admit
+        # it. Reduced request count: admission serializes on the few
+        # islands that fit
+        n_sp = max(min(n_requests // 10, 8), 2)
+        out = _run_sp_workload(arch, n_sp, seed)
+        if out is not None:
+            m = out["summary"]
+            s = out["sched"]
+            done = sum(1 for r in s.pool.all.values()
+                       if r.state == "done")
+            tag = f"{label}@{out['ctx']}/flying-sp"
+            rows.append(csv_row("fig10", f"{tag}/done", f"{done}/{n_sp}",
+                                "context > widest merge pool"))
+            rows.append(csv_row("fig10", f"{tag}/mean_ilt_ms",
+                                f"{m.mean_ilt * 1e3:.2f}"))
+            rows.append(csv_row("fig10", f"{tag}/paused",
+                                str(s.preempt_stats["paused"])))
+    return rows
+
+
+# ---------------------------------------------------------------------
+# --smoke acceptance guards (§D12)
+# ---------------------------------------------------------------------
+
+def _tpot_curve(arch: str, ctx: int, batch: int = 1):
+    """Roofline decode step time at write tag 1 for rising SP degree."""
+    from repro.configs import get_config
+    from repro.core.modes import ParallelPlan
+    from repro.serving.simulator import CostModel
+
+    cfg = get_config(arch)
+    plan = ParallelPlan(engine_rows=cfg.engine_rows, tp_base=16,
+                        data_rows=16)
+    cost = CostModel(cfg, plan)
+    return {sp: cost.decode_step_sp(1, sp, batch, float(ctx))
+            for sp in (1, 2, 4, 8, 16)}
+
+
+def _force_devices(flags: str) -> str:
+    want = "--xla_force_host_platform_device_count=8"
+    if "xla_force_host_platform_device_count" in flags:
+        return flags
+    return f"{flags} {want}".strip()
+
+
+def _real_engine_row():
+    """Reduced-scale real-execution row: the §D12 md-script in a fresh
+    interpreter (8 emulated host devices), its SEQ_PARALLEL_JSON line
+    parsed into the artifact."""
+    script = os.path.join(os.path.dirname(__file__), "..", "tests",
+                          "md_scripts", "check_seq_parallel.py")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = _force_devices(env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    out = subprocess.run([sys.executable, os.path.abspath(script)],
+                         env=env, capture_output=True, text=True,
+                         timeout=1500)
+    if out.returncode != 0:
+        raise RuntimeError(f"check_seq_parallel failed:\n"
+                           f"{out.stdout[-3000:]}\n{out.stderr[-3000:]}")
+    for ln in out.stdout.splitlines():
+        if ln.startswith("SEQ_PARALLEL_JSON "):
+            return json.loads(ln[len("SEQ_PARALLEL_JSON "):])
+    raise RuntimeError("check_seq_parallel produced no JSON row")
+
+
+def run_guard(out: dict | None = None, real: bool = True):
+    """--smoke path: sublinear-TPOT + end-to-end + token-identity guards."""
+    rows = []
+    data = out if out is not None else {}
+
+    # (a) roofline: decode TPOT <= 0.7x per SP doubling at the fig10
+    # ultra-long point (Nemotron-8B @ 1M — the KV-dominated regime SP
+    # exists for) at the island's decode batch. Shorter-context models
+    # are weight-dominated, so their curves are reported as info only.
+    batch = 4
+    for label, (arch, ctx) in STRESS.items():
+        curve = _tpot_curve(arch, ctx, batch)
+        for sp in (2, 4, 8, 16):
+            rows.append(csv_row(
+                "fig10_sp",
+                f"{label}@{ctx}/tpot_ratio/sp{sp // 2}->sp{sp}",
+                f"{curve[sp] / curve[sp // 2]:.3f}"))
+    arch, ctx = STRESS["Nemotron-8B"]
+    curve = _tpot_curve(arch, ctx, batch)
+    data["sp_tpot_s"] = {str(k): v for k, v in curve.items()}
+    data["sp_tpot_context"] = ctx
+    data["sp_tpot_batch"] = batch
+    worst = max(curve[sp] / curve[sp // 2] for sp in (2, 4, 8, 16))
+    data["sp_tpot_worst_doubling_ratio"] = worst
+    rows.append(csv_row("fig10_sp", "tpot_worst_doubling_ratio",
+                        f"{worst:.3f}",
+                        f"guard: <= {GUARD_TPOT_RATIO} @ ctx={ctx}"))
+    assert worst <= GUARD_TPOT_RATIO, \
+        f"SP doubling cut TPOT only {worst:.3f}x at ctx={ctx} " \
+        f"(guard {GUARD_TPOT_RATIO})"
+
+    # (b) end-to-end sim at pool-relative scale: pooled requests
+    # complete with zero pauses on a pool no merge group can hold
+    sim = _run_sp_workload(arch, 3, seed=7)
+    assert sim is not None, "SP sim row unavailable for the guard arch"
+    s = sim["sched"]
+    done = sum(1 for r in s.pool.all.values() if r.state == "done")
+    rows.append(csv_row("fig10_sp", "sim/done", f"{done}/3",
+                        f"context {sim['ctx']} > widest merge pool"))
+    rows.append(csv_row("fig10_sp", "sim/paused",
+                        str(s.preempt_stats["paused"]), "guard: == 0"))
+    data["sim_done"] = done
+    data["sim_paused"] = s.preempt_stats["paused"]
+    assert done == 3, {r.req_id: r.state for r in s.pool.all.values()}
+    assert s.preempt_stats["paused"] == 0
+    assert any(i.sp > 1 for i in s.layout.islands) or s.switches >= 1
+
+    # (c) real engine, reduced scale: token identity across a live
+    # SP2->SP4 rebind vs the big-pool reference
+    if real:
+        rr = _real_engine_row()
+        data["real_engine"] = rr
+        rows.append(csv_row("fig10_sp", "real/context_tokens",
+                            str(rr["context_tokens"]),
+                            f"one engine pool: "
+                            f"{rr['one_engine_pool_tokens']}"))
+        rows.append(csv_row("fig10_sp", "real/token_identity",
+                            "PASS" if rr["token_identical"] else "FAIL",
+                            "vs big-pool merge-1 reference"))
+        assert rr["token_identical"]
+        assert rr["context_tokens"] > rr["one_engine_pool_tokens"]
+    rows.append(csv_row("fig10_sp", "guard", "PASS"))
     return rows
 
 

@@ -100,6 +100,18 @@ def main() -> None:
         for row in frontdoor.run(guard=True, out=ddata):
             print(row)
         print(f"frontdoor,elapsed_s,{time.time() - t0:.1f},")
+        # elastic-SP guard (§D12, roofline + sim + real execution in a
+        # subprocess): decode TPOT <= 0.7x per SP doubling at the fig10
+        # ultra-long context, pooled sim requests complete with zero
+        # pauses on a pool no merge group can hold, and the real-engine
+        # row is token-identical to the big-pool reference across a
+        # live SP2->SP4 rebind; metrics land in BENCH_longcontext.json
+        t0 = time.time()
+        from benchmarks import fig10_longcontext
+        ldata = {}
+        for row in fig10_longcontext.run_guard(out=ldata):
+            print(row)
+        print(f"fig10_sp,elapsed_s,{time.time() - t0:.1f},")
         # perf trajectory artifacts: future PRs diff against these files
         import jax
         meta = {"devices": len(jax.devices()),
@@ -109,11 +121,13 @@ def main() -> None:
         fdata["meta"] = meta
         xdata["meta"] = meta
         ddata["meta"] = meta
+        ldata["meta"] = meta
         for fname, d in (("BENCH_decode.json", data),
                          ("BENCH_prefill.json", pdata),
                          ("BENCH_faults.json", fdata),
                          ("BENCH_prefix.json", xdata),
-                         ("BENCH_frontdoor.json", ddata)):
+                         ("BENCH_frontdoor.json", ddata),
+                         ("BENCH_longcontext.json", ldata)):
             path = os.path.join(os.path.dirname(__file__), "..", fname)
             with open(path, "w") as f:
                 json.dump(d, f, indent=2, sort_keys=True)

@@ -148,15 +148,20 @@ class CommunicatorPool:
         tracks live context, even when the engine is configured for a
         long-context ``max_blocks``.
 
-        ``live`` (§D8) selects the cross-layout read variant: the sorted
-        tag tuple of the block segments the batch may carry (the
-        per-tag table widths ride in the traced batch shapes). ``None``
-        is the unchanged single-view program.
+        ``live`` (§D8/§D12) selects the cross-layout read variant: the
+        ordered lane-tag tuple of the block segments the batch may carry
+        (the per-lane table widths ride in the traced batch shapes).
+        ``None`` is the unchanged single-view program. A
+        sequence-parallel island (``island.sp > 1``) compiles the SP
+        write variant of the live program — ``sp`` is part of the
+        runner key, so an SP island never shares an executable with a
+        plain merge island of the same shape.
         """
         island = self._as_island(island)
         amesh = island_abstract_mesh(self.plan, island.shape)
+        sp = island.sp
         key = (island.merge, phase, sampled, donate, batch_bucket,
-               seq_bucket, mb_bucket, island.n_engines, live)
+               seq_bucket, mb_bucket, island.n_engines, live, sp)
         if amesh is None:  # pragma: no cover - pre-AbstractMesh jax
             key = key + (island.start,)
         if key not in self._runners:
@@ -166,7 +171,7 @@ class CommunicatorPool:
                 self.model, island_mode(self.plan, island), self.geom,
                 phase=phase, window=self.window, use_kernel=self.use_kernel,
                 chunked=(phase == "prefill" and self.chunked),
-                sample=self.sample if sampled else None, live=live,
+                sample=self.sample if sampled else None, live=live, sp=sp,
                 mesh=amesh if amesh is not None
                 else self.island_mesh(island))
             self._runners[key] = jax.jit(

@@ -704,19 +704,42 @@ class FlyingEngine:
         # mb bucket: block-table width tracks the widest live request
         T = bucket_pow2(max(int(chunk.max()), 1))
         nblocks = max(len(e.block_ids) for e in entries)
-        assert nblocks <= self.max_blocks, \
-            f"request needs {nblocks} blocks > max_blocks_per_req=" \
-            f"{self.max_blocks}"
-        mb = max(self._mb_bucket(nblocks), mb_min)
-        live = self._live_tags(entries, isl.merge)
+        if isl.sp > 1:
+            # blocks spread across sp lanes; each lane's table is bounded
+            assert -(-nblocks // isl.sp) <= self.max_blocks, \
+                f"request needs {-(-nblocks // isl.sp)} blocks/lane > " \
+                f"max_blocks_per_req={self.max_blocks}"
+            mb = max(self._mb_bucket(-(-nblocks // isl.sp)), mb_min)
+        else:
+            assert nblocks <= self.max_blocks, \
+                f"request needs {nblocks} blocks > max_blocks_per_req=" \
+                f"{self.max_blocks}"
+            mb = max(self._mb_bucket(nblocks), mb_min)
+        live = self._live_tags(entries, isl)
         bufs = self._bufs(("prefill", isl, B, mb, T))
         toks, slots, btab = bufs["toks"], bufs["slots"], bufs["btab"]
         toks.fill(0)
         slots.fill(-1)
         btab.fill(0)
-        cap = self.geom.capacity(isl.merge)
+        cap = self.geom.capacity(isl.write_tag if isl.sp > 1
+                                 else isl.merge)
+        write_segs: List = [None] * n
         if live is None:
             self._fill_block_tables(btab, rows, reqs)
+        if isl.sp > 1:
+            # §D12: each chunk lands in exactly ONE per-block SP segment
+            # (the write program carries one owner shard per row), so
+            # the scheduler must issue block-aligned chunks on SP islands
+            for i, (r, e) in enumerate(zip(reqs, entries)):
+                lo, hi = int(prior[i]), int(end[i])
+                if hi <= lo:
+                    continue
+                assert lo // cap == (hi - 1) // cap, \
+                    (r.req_id, "SP chunk spans blocks", lo, hi, cap)
+                sg = next(s2 for s2 in reversed(e.segments)
+                          if s2.start <= lo < s2.start + cap
+                          and s2.shard >= 0)
+                write_segs[i] = sg
         if int(chunk.sum()):
             rowcat = np.repeat(np.arange(n), chunk)
             offcat = ragged_arange(chunk)
@@ -729,6 +752,16 @@ class FlyingEngine:
                 # global positions index the staged table directly
                 blockcat = btab[rcat, poscat // cap].astype(np.int64)
                 slots[rcat, offcat] = blockcat * cap + poscat % cap
+            elif isl.sp > 1:
+                # slot = write block * cap + block-local offset
+                blk = np.fromiter(
+                    (sg.ids[0] if sg is not None else 0
+                     for sg in write_segs), np.int64, n)
+                st = np.fromiter(
+                    (sg.start if sg is not None else 0
+                     for sg in write_segs), np.int64, n)
+                slots[rcat, offcat] = np.repeat(blk, chunk) * cap \
+                    + (poscat - np.repeat(st, chunk))
             else:
                 # §D8: chunk write slots are RUN-LOCAL against each
                 # entry's live (current-tag) run — a rebind froze
@@ -770,6 +803,19 @@ class FlyingEngine:
         if live is None:
             batch["block_table"] = self._h2d(btab)
             batch["prior_len"] = self._h2d(priorb)
+        elif isl.sp > 1:
+            lt = self._sp_lanes(isl, reqs, entries, rows, B, prior,
+                                write_segs)
+            for k, v in lt.items():
+                batch[k] = self._h2d(v)
+            wown = np.zeros((B,), np.int32)
+            for i, (r, sg) in enumerate(zip(reqs, write_segs)):
+                if sg is None:
+                    continue
+                g_lead = isl.start + ((r.engine_group - isl.start)
+                                      // isl.merge) * isl.merge
+                wown[rows[i]] = min(o.engine_id for o in sg.owners) - g_lead
+            batch["write_own"] = self._h2d(wown)
         else:
             cur_start = np.fromiter(
                 (self._seg_runs(e)[-1][1] for e in entries), np.int64, n)
@@ -817,14 +863,21 @@ class FlyingEngine:
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------
-    def request_fits(self, r: Request, merge: int) -> bool:
+    def request_fits(self, r: Request, merge) -> bool:
         """Admission gate: can this request's full context EVER sit in
-        one ``max_blocks_per_req``-wide block table under ``merge``?
-        Chunked prefill streams the whole prompt (no more silent
-        truncation), so over-cap requests must be rejected up front —
-        otherwise they would crash the serve loop mid-stream once their
-        block count outgrows the table."""
-        cap = self.geom.capacity(merge)
+        one ``max_blocks_per_req``-wide block table under ``merge`` (a
+        bare merge or an Island)? Chunked prefill streams the whole
+        prompt (no more silent truncation), so over-cap requests must be
+        rejected up front — otherwise they would crash the serve loop
+        mid-stream once their block count outgrows the table. On an SP
+        island the blocks round-robin across ``sp`` lanes, so the gate
+        is per-LANE width: context capacity scales with shard count."""
+        if isinstance(merge, Island) and merge.sp > 1:
+            cap = self.geom.capacity(merge.write_tag)
+            need = -(-r.total_context() // cap)
+            return -(-need // merge.sp) <= self.max_blocks
+        m = merge.merge if isinstance(merge, Island) else merge
+        cap = self.geom.capacity(m)
         need = -(-r.total_context() // cap)
         return need <= self.max_blocks
 
@@ -869,7 +922,7 @@ class FlyingEngine:
         assert self.fused, "mixed step requires fused sampling"
         ents = [self.adaptors[r.engine_group].table[r.req_id]
                 for r in list(prefills) + list(decodes)]
-        if self._live_tags(ents, isl.merge) is not None:
+        if self._live_tags(ents, isl) is not None:
             # cross-tag segments in the tick (§D8): the fused program
             # has no live variant — run the token-identical sequential
             # prefill->decode pair for this transient phase instead
@@ -934,13 +987,25 @@ class FlyingEngine:
     # ------------------------------------------------------------------
     # live cross-layout staging (§D8)
     # ------------------------------------------------------------------
-    def _live_tags(self, entries, merge: int):
-        """Sorted tag tuple when any entry's KV spans segments beyond
-        the island's current merge; None selects the single-view fast
-        path (the seed-era staging, byte-identical). Same-tag shared
-        prefix segments DON'T trigger the live path: their blocks are
-        full and block-aligned under the same capacity, so the flat
-        concatenated table stays position-correct."""
+    def _live_tags(self, entries, island):
+        """Lane-tag tuple when the step must run a live (multi-lane)
+        program; None selects the single-view fast path (the seed-era
+        staging, byte-identical). ``island`` is the serving Island (or
+        a bare merge for seed-era callers).
+
+        Two triggers: (a) any entry's KV spans segments tagged beyond
+        the island's current merge (§D8) — lanes are the sorted
+        distinct tags, one per tag; (b) the island is sequence-parallel
+        (§D12) — lanes are one per SP shard, ALL carrying the write tag
+        (repeated tags are fine: lane identity is positional), and the
+        island is always live because blocks round-robin across shards,
+        so flat concatenated position math never applies. Same-tag
+        shared prefix segments alone DON'T trigger the live path: their
+        blocks are full and block-aligned under the same capacity, so
+        the flat concatenated table stays position-correct."""
+        if isinstance(island, Island) and island.sp > 1:
+            return (island.write_tag,) * island.sp
+        merge = island.merge if isinstance(island, Island) else island
         tags = {s.tag for e in entries for s in e.segments}
         if tags <= {merge}:
             return None
@@ -965,18 +1030,21 @@ class FlyingEngine:
 
     def _seg_arrays(self, isl: Island, reqs: Sequence[Request], entries,
                     rows: np.ndarray, B: int, tags, cur_len):
-        """Per-tag (block table, token count, owner offset) host arrays
-        for the live step. ``cur_len[i]`` is the current-tag RUN's
-        token count contribution for entry i (decode: incl. the incoming
-        token; prefill: prior tokens only). Owner offsets are merge-axis
-        engine offsets of the group that wrote the run — derived from
-        the owners' fleet positions when recorded (an attached shared
-        prefix may be owned by a group unrelated to the reader's lead
-        engine), falling back to the buddy-alignment formula."""
+        """Per-LANE (block table, token count, owner offset) host arrays
+        for the live step — lane ``i`` carries tag ``tags[i]`` and emits
+        ``lt{i}_bt``/``lt{i}_len``/``lt{i}_own`` (matching
+        ``build_serve_step``'s positional lane convention). ``cur_len[i]``
+        is the current-tag RUN's token count contribution for entry i
+        (decode: incl. the incoming token; prefill: prior tokens only).
+        Owner offsets are merge-axis engine offsets of the group that
+        wrote the run — derived from the owners' fleet positions when
+        recorded (an attached shared prefix may be owned by a group
+        unrelated to the reader's lead engine), falling back to the
+        buddy-alignment formula."""
         m = isl.merge
         out: Dict[str, np.ndarray] = {}
         runs_of = [self._seg_runs(e) for e in entries]
-        for t in tags:
+        for lane, t in enumerate(tags):
             per = []
             for i, (r, e) in enumerate(zip(reqs, entries)):
                 runs = runs_of[i]
@@ -1009,9 +1077,65 @@ class FlyingEngine:
                 bt[row, :len(ids)] = ids
                 ln[row] = ntok
                 ow[row] = own
-            out[f"lt_bt{t}"] = bt
-            out[f"lt_len{t}"] = ln
-            out[f"lt_own{t}"] = ow
+            out[f"lt{lane}_bt"] = bt
+            out[f"lt{lane}_len"] = ln
+            out[f"lt{lane}_own"] = ow
+        return out
+
+    def _sp_lanes(self, isl: Island, reqs: Sequence[Request], entries,
+                  rows: np.ndarray, B: int, upto, write_segs):
+        """Per-lane host arrays for a sequence-parallel island (§D12):
+        lane j holds shard j's resident blocks of each request, in
+        allocation order. ``upto[i]`` bounds the token count credited
+        per lane for entry i (decode: ``entry.length`` incl. the pending
+        token; prefill: prior tokens only — the chunk's keys enter via
+        the causal lane). ``write_segs[i]`` (or None) is the row's
+        write-block segment: its shard is ROTATED to the LAST lane slot,
+        which the prefill program treats as the causal lane — lane-local
+        key positions stay consistent because every block of a lane
+        before its last is full. Lane lens/tables stay valid across an
+        SP-degree rebind: lanes are resolved from each segment's OWNERS
+        relative to the group lead, not from the rotation slot recorded
+        at write time."""
+        m, t, s = isl.merge, isl.write_tag, isl.sp
+        n = len(reqs)
+        cap = self.geom.capacity(t)
+        ids_rl: List[List[List[int]]] = [[[] for _ in range(s)]
+                                         for _ in range(n)]
+        len_rl = np.zeros((n, s), np.int64)
+        perm = np.tile(np.arange(s), (n, 1))
+        for i, (r, e) in enumerate(zip(reqs, entries)):
+            g_lead = isl.start + ((r.engine_group - isl.start) // m) * m
+            for sg in e.segments:
+                assert sg.tag == t and sg.shard >= 0, \
+                    (r.req_id, "non-SP segment on an SP island",
+                     sg.tag, sg.shard)
+                lane = (min(o.engine_id for o in sg.owners) - g_lead) // t
+                assert 0 <= lane < s, (r.req_id, lane, s)
+                ids_rl[i][lane].extend(sg.ids)
+                len_rl[i][lane] += min(
+                    max(int(upto[i]) - sg.start, 0), cap * len(sg.ids))
+            w = write_segs[i]
+            if w is not None:
+                wl = (min(o.engine_id for o in w.owners) - g_lead) // t
+                perm[i] = [j for j in range(s) if j != wl] + [wl]
+        mb_l = bucket_pow2(max(
+            [len(ids) for per in ids_rl for ids in per] + [1]))
+        out: Dict[str, np.ndarray] = {}
+        for q in range(s):
+            bt = np.zeros((B, mb_l), np.int32)
+            ln = np.zeros((B,), np.int32)
+            ow = np.zeros((B,), np.int32)
+            for i in range(n):
+                j = int(perm[i][q])
+                row = rows[i]
+                ids = ids_rl[i][j]
+                bt[row, :len(ids)] = ids
+                ln[row] = len_rl[i][j]
+                ow[row] = j * t
+            out[f"lt{q}_bt"] = bt
+            out[f"lt{q}_len"] = ln
+            out[f"lt{q}_own"] = ow
         return out
 
     # ------------------------------------------------------------------
@@ -1044,7 +1168,10 @@ class FlyingEngine:
                    for r in reqs]
         cap = self.geom.capacity(isl.merge)
         lengths = np.fromiter((e.length for e in entries), np.int64, n)
-        live = self._live_tags(entries, isl.merge)
+        live = self._live_tags(entries, isl)
+        if isl.sp > 1:
+            return self._decode_build_sp(rt, key, reqs, entries, rows,
+                                         lengths, live)
         if live is not None:
             return self._decode_build_live(rt, key, reqs, entries, rows,
                                            lengths, live)
@@ -1107,6 +1234,51 @@ class FlyingEngine:
         rt.steady = c
         return c
 
+    def _decode_build_sp(self, rt: _IslandRT, key, reqs, entries,
+                         rows: np.ndarray, lengths: np.ndarray,
+                         live) -> _DecodeCache:
+        """Stage a decode batch on a sequence-parallel island (§D12):
+        the incoming token's write slot is block-local against the LIVE
+        per-block segment and ``write_own`` names its owner shard; each
+        SP lane gets its own (table, count, owner) row set via
+        ``_sp_lanes``. Re-staged every step like the live cross-tag path
+        (per-lane tables shift as blocks rotate across shards), but the
+        cache KEY is preserved so the device token ring still feeds back
+        without a host round trip."""
+        isl = rt.island
+        assert self.geom.layout == "head", \
+            "SP staging covers the head-layout pool"
+        B = rt.B
+        n = len(reqs)
+        cap = self.geom.capacity(isl.write_tag)
+        bufs = {
+            "toks": np.zeros((B, 1), np.int32),
+            "pos": np.zeros((B, 1), np.int32),
+            "slots": np.full((B,), -1, np.int32),
+            "write_own": np.zeros((B,), np.int32),
+        }
+        for i, (r, e) in enumerate(zip(reqs, entries)):
+            sg = e.segments[-1]
+            assert sg.shard >= 0 and sg.tag == isl.write_tag, \
+                (r.req_id, "pending slot not SP-placed", sg.tag, sg.shard)
+            p = int(lengths[i]) - 1          # absolute (rope) position
+            assert sg.start <= p < sg.start + cap, (r.req_id, p, sg.start)
+            row = rows[i]
+            bufs["pos"][row, 0] = p
+            bufs["slots"][row] = sg.ids[0] * cap + (p - sg.start)
+            g_lead = isl.start + ((r.engine_group - isl.start)
+                                  // isl.merge) * isl.merge
+            bufs["write_own"][row] = \
+                min(o.engine_id for o in sg.owners) - g_lead
+        bufs.update(self._sp_lanes(isl, reqs, entries, rows, B, lengths,
+                                   [None] * n))
+        row_reqs = tuple((int(row), r.req_id) for row, r in zip(rows, reqs))
+        nblk = np.fromiter((len(e.block_ids) for e in entries), np.int64, n)
+        c = _DecodeCache(key, rows, row_reqs, entries, lengths, nblk,
+                         cap, bufs, 0, live=live)
+        rt.steady = c
+        return c
+
     def _decode_advance(self, c: _DecodeCache) -> None:
         """Steady-state step: O(1) whole-array numpy ops. The scheduler
         appended exactly one slot per request since the last step, so
@@ -1161,9 +1333,9 @@ class FlyingEngine:
             batch["context_len"] = self._h2d(bufs["ctxl"])
         else:
             # no total context length: the live program masks entirely
-            # from the per-tag segment counts
+            # from the per-lane segment counts
             for k in bufs:
-                if k.startswith("lt_"):
+                if k.startswith("lt") or k == "write_own":
                     batch[k] = self._h2d(bufs[k])
         seeds = self._sample_seeds(B, reqs, c.rows, "decode")
         if seeds is not None:

@@ -10,20 +10,35 @@ stored FLAT ``[num_blocks, block_elems]``; each compiled mode *views*
 them ``[num_blocks, B(m), kvh_dev/m, hd]`` — a metadata reshape, no
 reallocation, no migration.
 
-The host side is the ``LogicalTable``: request -> ordered *segments* of
-``(mode_tag, block_ids)``. Each segment's blocks are written under one
-mode and FROZEN when the request crosses a rebind: new tokens append
-into a fresh segment under the current mode's capacity. The per-segment
-contract (§4.2 extended, docs/PERF.md §D8): a block is *written* only
-under the mode that opened its segment, but it may be *read* under any
-later mode by a TP group that contains the segment's owner group — each
-owner computes partial attention over the head slice it physically
-holds and the serve step LSE-combines partials across the group. That
-is what lets the LIVE transition strategy carry running decodes across
-a rebind with zero pauses and zero recomputation; Hard-Preempt
-(suspend, blocks resident) and Soft-Preempt (recompute) remain the
-fallbacks for architectures whose layout is not tag-readable
-(``PoolGeometry.live_readable``).
+The host side is the ``LogicalTable``: request -> ordered *segments*,
+each carrying a PLACEMENT TAG ``(mode_tag, shard)`` and the block ids
+plus owner group that realize it. Each segment's blocks are written
+under one placement and FROZEN when the request crosses a rebind: new
+tokens append into a fresh segment under the current placement's
+capacity. A request is NOT bound to one TP group: its segments may be
+owned by different groups of the same island — the only invariant is
+that every owner group is inside the island that serves the request.
+The per-segment contract (§4.2 extended, docs/PERF.md §D8/§D12): a
+block is *written* only under the placement that opened its segment,
+but it may be *read* under any later mode by an island that contains
+the segment's owner group — each owner computes partial attention over
+the (head slice, token range) it physically holds and the serve step
+LSE-combines partials across the island. That is what lets the LIVE
+transition strategy carry running decodes across a rebind with zero
+pauses and zero recomputation; Hard-Preempt (suspend, blocks resident)
+and Soft-Preempt (recompute) remain the fallbacks for architectures
+whose layout is not tag-readable (``PoolGeometry.live_readable``).
+
+Sequence-parallel placements (§D12): an SP island (``Island.sp > 1``)
+splits its merge group into ``sp`` shards of ``write_tag`` engines.
+Each shard is its own allocation group; new blocks round-robin across
+the shard ring (one single-block segment per block, ``Segment.shard``
+recording the rotation slot) so ONE request pools ALL shards' block
+budgets — context capacity scales with engine count even after
+head-splitting is exhausted. Attention is the same per-segment partial
++ LSE-merge collective, just with token-range (rather than head-slice)
+disjointness, and elastic SP-degree changes are ordinary LIVE rebinds:
+the live block keeps filling, only future rotation widens.
 
 Allocation is a free-list over physical block ids PER ENGINE. When
 engines are bound into a TP group (``bind_group``), a group allocation
@@ -217,13 +232,23 @@ class Segment:
     ``shared`` marks a refcounted prefix-cache segment: its blocks are
     immutable (copy-on-write — appends always open a fresh private
     segment) and release/truncate DETACH its ``cached`` entries instead
-    of freeing the ids."""
+    of freeing the ids.
+
+    ``(tag, shard)`` together form the segment's PLACEMENT TAG
+    (docs/PERF.md §D12). ``shard >= 0`` marks a sequence-parallel
+    placement: the segment holds exactly ONE block, written by shard
+    ``shard`` of the island's SP ring at allocation time — ``owners``
+    are that shard's ``tag``-wide TP group, so the block stores the
+    full ``tag``-slice of KV heads for its token range and nothing
+    else. ``shard == -1`` is the classic head-sharded placement (the
+    whole merge group owns every token)."""
     tag: int
     start: int
     ids: List[int] = field(default_factory=list)
     owners: Tuple["KVCacheAdaptor", ...] = ()
     shared: bool = False
     cached: Tuple["CachedBlock", ...] = ()
+    shard: int = -1
 
 
 @dataclass
@@ -231,6 +256,11 @@ class RequestKV:
     mode_tag: int                  # tag of the CURRENT (write) segment
     segments: List[Segment] = field(default_factory=list)
     length: int = 0                # tokens currently cached (all segments)
+    # sequence-parallel rotation cursor: blocks allocated so far under
+    # SP placements — block k lands on ring shard ``k % len(ring)``.
+    # Survives SP-degree rebinds (the rotation just continues over the
+    # wider/narrower ring), so growth stays balanced across shards.
+    sp_cursor: int = 0
     _ids_np: Optional[np.ndarray] = field(default=None, repr=False,
                                           compare=False)
 
@@ -397,6 +427,10 @@ class KVCacheAdaptor:
         # fleet position, stamped by bind_fleet — cross-group owner
         # offsets in the engine's per-segment staging need it.
         self.engine_id = 0
+        # sequence-parallel ring (§D12): shard-lead adaptors of this
+        # engine's SP island, in shard order, or None outside SP islands.
+        # Set by bind_fleet; new blocks round-robin across the ring.
+        self._sp_ring: Optional[Tuple["KVCacheAdaptor", ...]] = None
 
     # -- O(1) mode switch --------------------------------------------------
     def switch_mode(self, merge: int) -> None:
@@ -490,6 +524,20 @@ class KVCacheAdaptor:
         segment already holds, so resumed/chunked requests are admitted
         exactly when ``allocate`` would succeed."""
         m = merge if merge is not None else self.merge
+        ring = self._sp_ring
+        if ring and len(ring) > 1 and m == self.merge:
+            cap = self.geom.capacity(m)
+            room, cur = 0, 0
+            if req_id is not None:
+                e = self.table.get(req_id)
+                if e:
+                    cur = e.sp_cursor
+                    seg = e.segments[-1] if e.segments else None
+                    if seg and not seg.shared and seg.shard >= 0 \
+                            and seg.tag == m:
+                        room = cap * len(seg.ids) - (e.length - seg.start)
+            per = self._sp_plan(max(n_tokens - room, 0), cur)
+            return all(a.free_blocks() >= p for a, p in zip(ring, per))
         cap = self.geom.capacity(m)
         have = 0
         seg_tok = n_tokens
@@ -569,6 +617,8 @@ class KVCacheAdaptor:
         leaves the entry, the free stacks and the shared group-free set
         exactly as they were (the backpressure path retries after
         evicting a victim and must see clean state)."""
+        if self._sp_ring and len(self._sp_ring) > 1:
+            return self._allocate_sp(req_id, n_tokens)
         cap = self.capacity
         entry = self.table.get(req_id)
         seg = entry.segments[-1] if entry and entry.segments else None
@@ -597,13 +647,83 @@ class KVCacheAdaptor:
             entry._ids_np = None
         return entry
 
+    # -- sequence-parallel allocation (§D12) -------------------------------
+    def _sp_plan(self, need_tokens: int, cursor: int) -> List[int]:
+        """Per-shard block need for ``need_tokens`` NEW tokens (live-block
+        room already subtracted), starting the rotation at ``cursor``."""
+        ring = self._sp_ring
+        per = [0] * len(ring)
+        for j in range(-(-need_tokens // self.capacity) if need_tokens else 0):
+            per[(cursor + j) % len(ring)] += 1
+        return per
+
+    def _allocate_sp(self, req_id: str, n_tokens: int) -> RequestKV:
+        """Sequence-parallel ``allocate``: one SEGMENT PER BLOCK, blocks
+        round-robined across the island's SP ring (``sp_cursor`` keeps
+        rotation across calls and across SP-degree rebinds). The live
+        block's free room is consumed first; each overflow block opens a
+        fresh ``(tag, shard)``-placed segment owned by the next shard's
+        TP group. Transactional like ``allocate``: every shard's budget
+        is checked BEFORE any block is taken or any entry mutates."""
+        ring = self._sp_ring
+        cap = self.capacity
+        entry = self.table.get(req_id)
+        seg = entry.segments[-1] if entry and entry.segments else None
+        live = (seg is not None and not seg.shared and seg.shard >= 0
+                and seg.tag == self.merge)
+        room = cap * len(seg.ids) - (entry.length - seg.start) if live else 0
+        cur = entry.sp_cursor if entry else 0
+        per = self._sp_plan(max(n_tokens - room, 0), cur)
+        for j, (a, p) in enumerate(zip(ring, per)):
+            if p > a.free_blocks():
+                raise MemoryError(
+                    f"KV pool exhausted on SP shard {j} for {req_id}")
+        if entry is None:
+            entry = RequestKV(mode_tag=self.merge)
+            self.table[req_id] = entry
+        nblocks = sum(per)
+        if nblocks:
+            pos = seg.start + cap * len(seg.ids) if live else entry.length
+            for j in range(nblocks):
+                shard = (cur + j) % len(ring)
+                a = ring[shard]
+                bid = a._take_blocks(1)[0]
+                entry.segments.append(Segment(
+                    tag=self.merge, start=pos + j * cap, ids=[bid],
+                    owners=a.group, shard=shard))
+            entry.sp_cursor = cur + nblocks
+            entry._ids_np = None
+        entry.mode_tag = self.merge
+        return entry
+
     def append_slots(self, req_id: str, n_tokens: int) -> np.ndarray:
         """Flat device slots for the next n_tokens (allocating as needed).
         Slot = block_id * capacity + segment-local offset, matching the
-        current mode's view (writes only ever target the live segment)."""
+        current mode's view (writes only ever target the live segment —
+        under SP, the covering run of per-block segments)."""
         entry = self.allocate(req_id, n_tokens)
-        seg = entry.segments[-1]
         cap = self.capacity
+        if self._sp_ring and len(self._sp_ring) > 1:
+            if n_tokens <= 0:
+                return np.empty((0,), np.int32)
+            # tokens span the tail run of single-block SP segments whose
+            # block reaches past the current length
+            L = entry.length
+            cov: List[Segment] = []
+            for sg in reversed(entry.segments):
+                if sg.shard < 0 or sg.tag != self.merge \
+                        or sg.start + cap <= L:
+                    break
+                cov.append(sg)
+            cov.reverse()
+            starts = np.asarray([sg.start for sg in cov], np.int64)
+            ids = np.asarray([sg.ids[0] for sg in cov], np.int64)
+            pos = L + np.arange(n_tokens, dtype=np.int64)
+            k = np.searchsorted(starts, pos, side="right") - 1
+            slots = ids[k] * cap + (pos - starts[k])
+            entry.length += n_tokens
+            return slots.astype(np.int32)
+        seg = entry.segments[-1]
         pos = (entry.length - seg.start) + np.arange(n_tokens)
         ids = np.asarray(seg.ids, np.int64)
         slots = ids[pos // cap] * cap + pos % cap
@@ -617,12 +737,20 @@ class KVCacheAdaptor:
         surplus) and append it to a fresh current-tag segment. Called by
         the scheduler for requests riding a LIVE rebind — their next
         decode write must land under the new view. Raises MemoryError if
-        the new segment's first block cannot be taken."""
+        the new segment's first block cannot be taken.
+
+        Placement-aware (§D12): the no-op condition is that the tail
+        segment's PLACEMENT matches the current one — same tag AND same
+        sequence-parallel-ness. An SP tail under an SP ring stays put
+        even across an SP-degree rebind (the live block's owners are
+        unchanged; only future rotation widens), so an SP2→SP4 rebind
+        re-issues nothing."""
         entry = self.table.get(req_id)
         if not entry or not entry.segments:
             return
         seg = entry.segments[-1]
-        if seg.tag == self.merge:
+        sp = bool(self._sp_ring and len(self._sp_ring) > 1)
+        if seg.tag == self.merge and (seg.shard >= 0) == sp:
             return
         assert entry.length > seg.start, "no pending token to retag"
         self.truncate(req_id, 1)
@@ -650,6 +778,8 @@ class KVCacheAdaptor:
                 else:
                     for a in owners:
                         a._give_back(seg.ids)
+                if seg.shard >= 0:
+                    entry.sp_cursor = max(entry.sp_cursor - 1, 0)
                 entry.segments.pop()
                 continue
             cap = self.geom.capacity(seg.tag)
@@ -666,6 +796,8 @@ class KVCacheAdaptor:
                     for a in owners:
                         a._give_back((b,))
             if entry.length == seg.start and not seg.ids:
+                if seg.shard >= 0:
+                    entry.sp_cursor = max(entry.sp_cursor - 1, 0)
                 entry.segments.pop()
             break
         if entry.segments:
@@ -737,6 +869,35 @@ class KVCacheAdaptor:
             lens = np.full((n,), int(n_tokens), np.int64)
         else:
             lens = np.asarray(n_tokens, np.int64)
+        ring = self._sp_ring
+        if ring and len(ring) > 1:
+            # SP batch: aggregate the per-SHARD need across rows before
+            # any row allocates (same transactional contract as below,
+            # but the budget is per shard, not one group pool)
+            cap = self.capacity
+            per = [0] * len(ring)
+            for rid, t in zip(req_ids, lens):
+                e = self.table.get(rid)
+                room, cur = 0, 0
+                if e:
+                    cur = e.sp_cursor
+                    seg = e.segments[-1] if e.segments else None
+                    if seg and not seg.shared and seg.shard >= 0 \
+                            and seg.tag == self.merge:
+                        room = cap * len(seg.ids) - (e.length - seg.start)
+                for j, p in enumerate(
+                        self._sp_plan(max(int(t) - room, 0), cur)):
+                    per[j] += p
+            for j, (a, p) in enumerate(zip(ring, per)):
+                if p > a.free_blocks():
+                    raise MemoryError(
+                        f"KV pool exhausted on SP shard {j}: batch of "
+                        f"{n} needs {p} blocks, {a.free_blocks()} free")
+            T = int(lens.max()) if n else 0
+            out = np.full((n, T), -1, np.int32)
+            for i, (rid, t) in enumerate(zip(req_ids, lens)):
+                out[i, : int(t)] = self.append_slots(rid, int(t))
+            return out
         # transactional pre-check: total block need vs the group-free
         # budget BEFORE any entry mutates. The per-request allocates
         # below draw from the same budget sequentially, so a shortfall
@@ -1011,9 +1172,16 @@ class KVCacheAdaptor:
         self._give_back(ids)
 
     # -- capacity accounting (paper §6.4 Table 2) -----------------------------
-    def max_context_tokens(self, merge: int) -> int:
+    def max_context_tokens(self, merge: int, sp: int = 1) -> int:
         """Max context a single request can hold when merging m engines:
-        the TP group pools the per-engine block budget."""
+        the TP group pools the per-engine block budget. With ``sp > 1``
+        (a sequence-parallel island, §D12), the merge group splits into
+        ``sp`` shards of width ``merge // sp`` and the request pools ALL
+        shards' block budgets — capacity scales with engine COUNT even
+        when head-splitting is exhausted, which is the whole point."""
+        if sp > 1:
+            return sp * (self.geom.num_blocks - 1) \
+                * self.geom.capacity(merge // sp)
         cap = self.geom.capacity(merge)
         # merging m engines gives the request m engines' pools: blocks are
         # symmetric per device, so the request sees num_blocks * B(m)
@@ -1029,12 +1197,32 @@ def bind_fleet(adaptors: Sequence[KVCacheAdaptor], layout) -> None:
     derives the owner lead from ``engine_id``."""
     for i, a in enumerate(adaptors):
         a.engine_id = i
+        a._sp_ring = None
     for isl in layout.islands:
+        sp = getattr(isl, "sp", 1)
         for lead in isl.lead_engines():
-            members = [adaptors[e] for e in range(lead, lead + isl.merge)]
-            for a in members:
-                a.switch_mode(isl.merge)
-                a.bind_group(members)
+            if sp > 1:
+                # sequence-parallel island (§D12): the merge group splits
+                # into ``sp`` shards of width ``write_tag``; each shard is
+                # its own allocation group writing under the narrow tag,
+                # and every member carries the ring of shard leads so
+                # allocation can round-robin new blocks across shards.
+                t = isl.write_tag
+                ring = tuple(adaptors[lead + j * t] for j in range(sp))
+                for j in range(sp):
+                    shard = [adaptors[e] for e in
+                             range(lead + j * t, lead + (j + 1) * t)]
+                    for a in shard:
+                        a.switch_mode(t)
+                        a.bind_group(shard)
+                for e in range(lead, lead + isl.merge):
+                    adaptors[e]._sp_ring = ring
+            else:
+                members = [adaptors[e]
+                           for e in range(lead, lead + isl.merge)]
+                for a in members:
+                    a.switch_mode(isl.merge)
+                    a.bind_group(members)
     # recount the parked-clean reclaim credit under the NEW groups: a
     # block parked clean under the old layout may now straddle groups
     # (not cheaply reclaimable) and vice versa. O(parked) per rebind.

@@ -17,6 +17,18 @@ holds island-locally: reinterpreting an island's merge moves no bytes,
 and islands untouched by a rebind keep their buffers (and their async
 in-flight windows) untouched.
 
+An island may additionally carry a *sequence-parallel* degree ``sp``
+(docs/PERF.md §D12): its ``merge`` engines split into ``sp`` shards of
+``write_tag = merge // sp`` engines each, and a request's KV spreads
+across the shards BY TOKEN RANGE instead of (only) by head. A request
+served by an SP island is therefore no longer bounded by one engine's
+pool — its per-request context capacity is ``sp x`` a write-tag
+group's. ``sp=1`` (the default) is the plain TP/DP island; ``sp ==
+merge`` is a pure-SP island whose shards each hold ALL kv heads (write
+tag 1). ``group_of`` returns ``(lead, group_merge, shard)`` so callers
+can address the shard ring, and ``changed_engines`` treats an
+SP-degree change like any other reshape.
+
 Mode meshes reinterpret the SAME device order, so arrays placed under one
 mode's sharding are physically identical under every other mode's — the
 zero-copy invariant the Model Weights Manager relies on (verified by
@@ -123,10 +135,23 @@ class Island:
     bound to one merge. ``n_engines // merge`` independent DP groups of
     ``merge`` engines each; a pure TP island has ``n_engines == merge``.
     Two islands with the same ``shape`` run the same compiled programs
-    (the Communicator Pool keys runners by shape, not position)."""
+    (the Communicator Pool keys runners by shape, not position).
+
+    ``sp`` adds the sequence-parallel axis (docs/PERF.md §D12): each
+    merge group splits into ``sp`` *shards* of ``merge // sp`` engines.
+    KV is written under the shard-width tag (``write_tag``) and new
+    blocks round-robin across the shards, so one request's context pools
+    the whole group's block budget instead of a single engine's.
+    Attention still runs as ONE merge-wide collective — each shard
+    computes partial attention over its resident tokens and the existing
+    LSE merge combines them — so the mesh (and the zero-copy invariant)
+    is exactly that of a plain merge-``m`` island. ``sp=1`` is the
+    classic head-sharded island and keeps equality/hash with pre-SP
+    layouts."""
     start: int       # absolute first engine tile
     n_engines: int   # pow2 tile count; start % n_engines == 0
     merge: int       # pow2 TP binding, 1 <= merge <= n_engines
+    sp: int = 1      # pow2 sequence-parallel degree, divides merge
 
     def __post_init__(self):
         if not _is_pow2(self.n_engines):
@@ -135,9 +160,18 @@ class Island:
             raise ValueError(
                 f"merge={self.merge} invalid for a {self.n_engines}-engine "
                 f"island")
+        if not _is_pow2(self.sp) or self.merge % self.sp != 0:
+            raise ValueError(
+                f"sp={self.sp} invalid: must be a pow2 dividing "
+                f"merge={self.merge}")
         if self.start % self.n_engines != 0:
             raise ValueError(
                 f"island [{self.start}, {self.stop}) not buddy-aligned")
+
+    @property
+    def write_tag(self) -> int:
+        """Tag (engines per SP shard) new KV blocks are written under."""
+        return self.merge // self.sp
 
     @property
     def stop(self) -> int:
@@ -158,14 +192,21 @@ class Island:
         """Absolute lead engine of each DP group within the island."""
         return range(self.start, self.stop, self.merge)
 
-    def group_of(self, engine: int) -> Tuple[int, int]:
-        """(absolute lead engine, merge) of the group serving `engine` —
-        the identity that decides whether a rebind reshapes it."""
+    def group_of(self, engine: int) -> Tuple[int, int, int]:
+        """(absolute lead engine, merge, sp) of the group serving
+        `engine` — the identity that decides whether a rebind reshapes
+        it. ``sp`` is part of the identity: changing only the SP degree
+        of a group changes its write placement and compiled programs, so
+        its engines must ride a transition like any other rebind."""
         lead = self.start + ((engine - self.start) // self.merge) * self.merge
-        return (lead, self.merge)
+        return (lead, self.merge, self.sp)
 
     def describe(self) -> str:
-        kind = f"TP{self.merge}" if self.merge > 1 else "DP"
+        if self.sp > 1:
+            t = self.write_tag
+            kind = f"SP{self.sp}" if t == 1 else f"TP{t}xSP{self.sp}"
+        else:
+            kind = f"TP{self.merge}" if self.merge > 1 else "DP"
         return f"{self.groups}x{kind}" if self.groups > 1 else kind
 
 
@@ -215,11 +256,13 @@ class FleetLayout:
 
     @staticmethod
     def of(plan: ParallelPlan,
-           shapes: Sequence[Tuple[int, int]]) -> "FleetLayout":
-        """Build from ordered (n_engines, merge) shapes."""
+           shapes: Sequence[Tuple[int, ...]]) -> "FleetLayout":
+        """Build from ordered (n_engines, merge[, sp]) shapes."""
         islands, pos = [], 0
-        for n, m in shapes:
-            islands.append(Island(pos, n, m))
+        for shp in shapes:
+            n, m = shp[0], shp[1]
+            sp = shp[2] if len(shp) > 2 else 1
+            islands.append(Island(pos, n, m, sp))
             pos += n
         return FleetLayout(plan, tuple(islands))
 
@@ -254,13 +297,17 @@ class FleetLayout:
         return "[" + " | ".join(i.describe() for i in self.islands) + "]"
 
     # -- layout algebra --------------------------------------------------
-    def carve(self, start: int, n_engines: int, merge: int) -> "FleetLayout":
-        """Bind engines [start, start+n) into one island of `merge`,
-        splitting any partially-overlapped island into buddy pieces that
-        KEEP their old merge where the piece still holds a whole group
-        (those engines' group assignment — hence their serving state —
-        is untouched)."""
-        target = Island(start, n_engines, merge)
+    def carve(self, start: int, n_engines: int, merge: int,
+              sp: int = 1) -> "FleetLayout":
+        """Bind engines [start, start+n) into one island of `merge`
+        (optionally sequence-parallel of degree `sp`), splitting any
+        partially-overlapped island into buddy pieces that KEEP their
+        old merge where the piece still holds a whole group (those
+        engines' group assignment — hence their serving state — is
+        untouched). Remainder pieces that cannot hold a whole group of
+        the old island fall back to sp=1 (an SP placement narrower than
+        its group is meaningless)."""
+        target = Island(start, n_engines, merge, sp)
         out = []
         for isl in self.islands:
             if isl.stop <= target.start or isl.start >= target.stop:
@@ -271,7 +318,9 @@ class FleetLayout:
             for lo, hi in ((isl.start, min(isl.stop, target.start)),
                            (max(isl.start, target.stop), isl.stop)):
                 for ps, pn in _buddy_pieces(lo, hi):
-                    out.append(Island(ps, pn, min(isl.merge, pn)))
+                    pm = min(isl.merge, pn)
+                    out.append(Island(ps, pn, pm,
+                                      isl.sp if pm == isl.merge else 1))
         out.append(target)
         out.sort(key=lambda i: i.start)
         return FleetLayout(self.plan, tuple(out))
@@ -300,7 +349,7 @@ class FleetLayout:
         return out
 
     def changed_engines(self, new: "FleetLayout") -> frozenset:
-        """Engines whose GROUP assignment (lead engine, merge) differs
+        """Engines whose GROUP assignment (lead engine, merge, sp) differs
         under `new` — the partial-rebind scope: only requests on these
         engines are incompatible with the transition, and only islands
         containing them drain. Splitting a DP island leaves its engines

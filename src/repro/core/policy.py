@@ -7,7 +7,12 @@ decide() returns the target FleetLayout for the next step:
       rest of the fleet keeps serving DP traffic through the bind.
   UC3 (long context): a queued request whose context exceeds every live
       island's per-request KV capacity -> merge ONE island until it fits
-      (pooled KV); probes the least-loaded group, not group 0.
+      (pooled KV); probes the least-loaded group, not group 0. With
+      ``sp=True`` (§D12) a context too large for even the WIDEST merge
+      is admitted by carving a pure sequence-parallel island instead of
+      staying queued forever: ``s`` engines each hold ``1/s`` of the
+      tokens at write tag 1, so the per-request capacity scales with
+      the island size rather than one engine's pool.
   UC1 (load): queue builds -> dissolve islands to DP in place to drain;
       idle -> merge the fleet wide for latency. Hysteresis avoids
       flapping.
@@ -40,6 +45,11 @@ class FlyingPolicy:
     # pre-bind no longer needs the fleet to be empty — only merge-downs
     # (dissolve) still pause, and those keep the usual pressure gates.
     live: bool = False
+    # elastic sequence parallelism (§D12): allow UC3 to carve pure-SP
+    # islands for contexts no merge group's pool can hold. Requires a
+    # backend whose step programs implement the SP write/lane variants
+    # (the real engine); simulation backends model the cost directly.
+    sp: bool = False
 
     def __post_init__(self):
         self._last_switch_t = -1e9
@@ -73,7 +83,10 @@ class FlyingPolicy:
         bg_live = any(r.priority == 0 for r in sched.running) or \
             any(r.priority == 0 for r in sched.waiting)
         for isl in layout.islands:
-            if isl.merge < m:
+            if isl.merge < m or isl.sp > 1:
+                # an SP island's merge is wide but its WRITE tag is
+                # merge // sp — it serves pooled-KV contexts, not the
+                # priority latency SLO a TP binding buys (§D12)
                 continue
             # reuse a live >=m binding (sticky — re-carving every tick
             # would flap) UNLESS it spans the whole fleet while
@@ -85,12 +98,42 @@ class FlyingPolicy:
         for r in sched.running + sched.waiting:
             if r.engine_group >= 0:
                 isl = layout.island_of(r.engine_group)
-                lead, gm = isl.group_of(r.engine_group)
+                lead, gm = isl.group_of(r.engine_group)[:2]
                 for e in range(lead, min(lead + gm, len(occ))):
                     occ[e] += 1
         start = min(range(0, layout.total_engines, m),
                     key=lambda s: (sum(occ[s:s + m]), s))
         return layout.carve(start, m, m)
+
+    def _bind_sp_island(self, sched, s: int) -> FleetLayout:
+        """Carve a pure sequence-parallel island (§D12): ``s`` engines,
+        merge ``s``, SP degree ``s`` — every engine holds all KV heads
+        (write tag 1) for ``1/s`` of the request's tokens, so the pooled
+        per-request capacity is ``s x`` one engine's. Sticky like
+        ``_bind_island``: reuse a live island whose SP pool is already
+        at least as deep; otherwise carve the least-occupied aligned
+        region so the bind reshapes as little background as possible."""
+        layout = sched.layout
+        for isl in layout.islands:
+            if isl.sp >= s:
+                return layout
+        occ = [0] * layout.total_engines
+        for r in sched.running + sched.waiting:
+            if r.engine_group >= 0:
+                isl = layout.island_of(r.engine_group)
+                lead, gm = isl.group_of(r.engine_group)[:2]
+                for e in range(lead, min(lead + gm, len(occ))):
+                    occ[e] += 1
+        # an SP ring must be whole: a quarantined tile inside the carve
+        # would be sheared off by _sanitize and the island shattered, so
+        # only aligned regions clear of dead engines are candidates
+        quar = getattr(sched, "quarantined", frozenset())
+        cands = [st for st in range(0, layout.total_engines, s)
+                 if not any(e in quar for e in range(st, st + s))]
+        if not cands:
+            return layout    # no intact region: stay queued (structured)
+        start = min(cands, key=lambda st: (sum(occ[st:st + s]), st))
+        return layout.carve(start, s, s, sp=s)
 
     def decide(self, sched) -> FleetLayout:
         plan = sched.plan
@@ -136,6 +179,20 @@ class FlyingPolicy:
                 while m < widest and \
                         geom.capacity(m) * (geom.num_blocks - 1) < need:
                     m *= 2
+                if self.sp and self.islands and \
+                        geom.capacity(m) * (geom.num_blocks - 1) < need:
+                    # no merge pools enough KV for this context: shard
+                    # it by SEQUENCE instead (§D12) — a pure-SP island
+                    # of s engines holds s x cap(1) x (nb-1) tokens
+                    s = 1
+                    while s < widest and \
+                            s * geom.capacity(1) * (geom.num_blocks - 1) \
+                            < need:
+                        s *= 2
+                    if s * geom.capacity(1) * (geom.num_blocks - 1) \
+                            >= need:
+                        return self._bind_sp_island(sched, s)
+                    continue  # nothing in the fleet can hold it
                 best = layout.max_merge
                 if best >= m:
                     # a wide-enough island exists; if EVERY one of its

@@ -551,10 +551,18 @@ class DynamicScheduler:
         the live layout — the rest of the fleet keeps its shape. (The
         owner lead is the tag-aligned engine at or below the request's
         recorded lead: a live-ridden request's lead need not be aligned
-        to tags it acquired later.)"""
+        to tags it acquired later.) A request whose KV is SP-placed
+        (§D12) resumes onto an island with the SAME write placement:
+        its owners span write_tag x sp engines, so the carve restores
+        sp = span // write_tag rather than a plain TP group."""
         m = self._tag(r)
         start = (r.engine_group // m) * m if r.engine_group >= 0 else 0
-        return self._sanitize(self.layout.carve(start, m, m))
+        sp = 1
+        entry = self._entry(r)
+        if entry is not None and any(
+                getattr(s, "shard", -1) >= 0 for s in entry.segments):
+            sp = max(m // max(entry.max_tag, 1), 1)
+        return self._sanitize(self.layout.carve(start, m, m, sp=sp))
 
     def _sanitize(self, target: FleetLayout) -> FleetLayout:
         """Re-carve any transition target around the quarantined tiles:
@@ -580,9 +588,20 @@ class DynamicScheduler:
         entry = self._entry(r)
         if entry is None or not entry.segments:
             return True
-        lead2, m_new = target.island_of(g).group_of(g)
+        isl2 = target.island_of(g)
+        lead2, m_new, _sp2 = isl2.group_of(g)
         if entry.max_tag > m_new:
             return False         # merge-down: owners outside the group
+        # SP placements (§D12) are readable only by an SP island with
+        # the SAME write tag (lane staging keys on the shard owners);
+        # conversely plain placements cannot ride onto an SP island —
+        # its staging path requires every segment to be SP-placed
+        sp_placed = any(getattr(s, "shard", -1) >= 0
+                        for s in entry.segments)
+        if (isl2.sp > 1) != sp_placed:
+            return False
+        if sp_placed and isl2.write_tag != entry.max_tag:
+            return False
         # attached shared prefixes may be owned by a group NOT derivable
         # from this request's lead by buddy alignment — check each
         # recorded owner's fleet position against the new group span
@@ -590,8 +609,10 @@ class DynamicScheduler:
             for o in s.owners:
                 if not lead2 <= o.engine_id < lead2 + m_new:
                     return False
+        # the tag new writes land under: the island's write tag — for a
+        # sequence-parallel group (§D12) that is merge // sp, not merge
         return all(self.geom.live_readable(t)
-                   for t in set(entry.tags()) | {m_new})
+                   for t in set(entry.tags()) | {isl2.write_tag})
 
     def _incompatible(self, target: FleetLayout) -> List[Request]:
         """Requests whose KV layout the transition would reshape:
@@ -832,9 +853,19 @@ class DynamicScheduler:
             return True
         m = self._tag(r)
         isl = layout.island_of(g)
+        entry = self._entry(r)
+        sp_placed = entry is not None and any(
+            getattr(s, "shard", -1) >= 0 for s in entry.segments)
         if self.cfg.strategy == LIVE and self._live_ok(r, layout):
+            # _live_ok already enforced the SP placement match (§D12)
             return isl.group_of(g)[1] >= m
-        return isl.merge == m and (g - isl.start) % m == 0
+        if sp_placed:
+            # SP KV resumes only onto an SP island with the same write
+            # tag whose group spans every shard owner
+            return isl.sp > 1 and isl.write_tag == entry.max_tag \
+                and isl.merge == m and (g - isl.start) % m == 0
+        return isl.sp == 1 and isl.merge == m \
+            and (g - isl.start) % m == 0
 
     def _tag(self, r: Request) -> int:
         """The merge a request's KV needs to be readable: the widest
@@ -952,19 +983,29 @@ class DynamicScheduler:
                 continue
 
             if fits is not None and not fits(r, widest):
-                # over the per-request block cap under EVERY mode: no
-                # future layout could hold it — reject outright
-                r.state = "rejected"
-                self.waiting.remove(r)
-                continue
+                # over the per-request block cap under EVERY mode — but
+                # with elastic SP (§D12) the best placement is a pure-SP
+                # island at the widest degree, whose per-engine block
+                # need is 1/sp of a TP group's; only reject when even
+                # that cannot hold it
+                if not (getattr(self.policy, "sp", False)
+                        and fits(r, Island(0, widest, widest, sp=widest))):
+                    r.state = "rejected"
+                    self.waiting.remove(r)
+                    continue
             if fits is not None and not any(
-                    fits(r, isl.merge) for isl in layout.islands):
+                    fits(r, isl) for isl in layout.islands):
                 # block capacity B(m) grows with merge: too big for
                 # every LIVE island, but some valid mode could hold it —
                 # keep it queued for a future layout (the same
                 # wait-for-resources stance as pool exhaustion)
                 continue
-            wide = r.priority > 0 and layout.max_merge > 1
+            # the latency-class bind is the widest TP island; an SP
+            # island's merge is wide but its write tag (merge // sp) is
+            # what sets decode latency — never the priority bind (§D12)
+            tp_merges = [il.merge for il in layout.islands if il.sp == 1]
+            max_tp = max(tp_merges) if tp_merges else 1
+            wide = r.priority > 0 and max_tp > 1
             if wide:
                 # a TP binding exists for this latency class: place ONLY
                 # there — leaking onto a DP island because the bound
@@ -973,7 +1014,7 @@ class DynamicScheduler:
                 # queued the tick or two until its island's clock
                 # arrives.
                 cands = [il for il in leads
-                         if il[0].merge == layout.max_merge]
+                         if il[0].merge == max_tp and il[0].sp == 1]
                 if self.quarantined and not any(
                         not (set(range(lead, lead + isl.merge))
                              & self.quarantined)
@@ -1003,7 +1044,7 @@ class DynamicScheduler:
                     continue  # group lost an engine: never admit to it
                 if group_load[lead] >= self.cfg.max_batch_per_group:
                     continue
-                if fits is not None and not fits(r, isl.merge):
+                if fits is not None and not fits(r, isl):
                     continue
                 # RESERVE the full-context block need: two prompts
                 # admitted to one group in the same tick must not both
@@ -1015,16 +1056,28 @@ class DynamicScheduler:
                 # folded (recovered) prompts embed harvested output
                 # tokens that prompt_token_ids cannot regenerate — no
                 # content identity, so they bypass the cache entirely
-                use_pc = self.prefix_cache is not None and not r.folded
+                use_pc = self.prefix_cache is not None and not r.folded \
+                    and isl.sp == 1  # SP lanes carry only SP placements
                 ad = self._adaptor(lead)
                 cached = 0
                 if use_pc:
                     cached = ad.cached_prefix_tokens(
                         self._prompt_ids(r),
                         cross_tag_ok=self._live_backend)
-                need = -(-max(r.total_context() - cached, 0)
-                         // ad.capacity)
-                if ad.free_blocks() - reserved.get(lead, 0) >= need:
+                blocks = -(-max(r.total_context() - cached, 0)
+                           // ad.capacity)
+                if isl.sp > 1:
+                    # SP placement (§D12): blocks round-robin across the
+                    # island's shard pools — the reservation is the
+                    # per-shard share, checked against the tightest pool
+                    need = -(-blocks // isl.sp)
+                    free = min(
+                        self.adaptors[lead + j * isl.write_tag]
+                        .free_blocks() for j in range(isl.sp))
+                else:
+                    need = blocks
+                    free = ad.free_blocks()
+                if free - reserved.get(lead, 0) >= need:
                     r.engine_group = lead  # absolute lead engine
                     group_load[lead] += 1
                     reserved[lead] = reserved.get(lead, 0) + need
@@ -1093,6 +1146,12 @@ class DynamicScheduler:
                         r.sched_t = self.now
                     chunk = min(self.cfg.prefill_chunk,
                                 r.prompt_len - r.prefilled)
+                    if isl.sp > 1:
+                        # SP islands (§D12) stage one KV block per chunk
+                        # per row (a chunk's slots must stay within one
+                        # shard's block): clamp to the next block edge
+                        cap = self._adaptor(r.engine_group).capacity
+                        chunk = min(chunk, cap - r.prefilled % cap)
                     chunk_of[r.req_id] = chunk
                     chunks.setdefault(r.engine_group, []).append(
                         (r.req_id, chunk))
@@ -1321,7 +1380,7 @@ class DynamicScheduler:
         request whose KV owner span overlaps group ``g``'s engines —
         evicting it actually frees blocks this group can take."""
         isl = self.layout.island_of(g)
-        lead, m = isl.group_of(g)
+        lead, m = isl.group_of(g)[:2]
         span = set(range(lead, lead + m))
         cands = []
         for r in (self.running + self.paused

@@ -98,18 +98,29 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
                      chunked: bool = False,
                      sample: Optional[Tuple[float, int]] = None,
                      live: Optional[Tuple[int, ...]] = None,
+                     sp: int = 1,
                      mesh=None):
     """Build the shard_map step fn for (arch, mode, phase).
 
-    ``live`` (docs/PERF.md §D8) compiles the cross-layout read variant:
-    a sorted tuple of the mode tags whose block segments the batch may
-    contain (always including the current merge). The batch then
-    carries, per tag t, ``lt_bt{t}`` [B, mb_t] segment block tables,
-    ``lt_len{t}`` [B] segment token counts, and ``lt_own{t}`` [B]
-    merge-axis owner offsets; attention runs per-segment partial sweeps
-    plus one LSE-combine collective over the merge axis instead of the
-    single-view sweep. ``live=None`` (or the single current tag) is the
-    unchanged fast path.
+    ``live`` (docs/PERF.md §D8/§D12) compiles the cross-layout read
+    variant: an ordered tuple of placement LANES — one per (tag,
+    owner-shard) slice of the batch's KV, possibly with repeated tags.
+    The batch then carries, per lane i of tag t=live[i], ``lt{i}_bt``
+    [B, mb_i] segment block tables, ``lt{i}_len`` [B] segment token
+    counts, and ``lt{i}_own`` [B] merge-axis owner offsets; attention
+    runs per-lane partial sweeps plus one LSE-combine collective over
+    the merge axis instead of the single-view sweep. A plain rebind
+    rider has one lane per distinct tag; ``live=None`` (or the single
+    current tag) is the unchanged fast path.
+
+    ``sp`` > 1 (§D12) compiles the sequence-parallel variant of the live
+    program: each merge group holds ``sp`` shards of ``merge // sp``
+    engines, new KV is written under the SHARD-width tag to the per-row
+    owner shard only (batch key ``write_own`` [B] carries each row's
+    owner merge-offset; non-owner ranks park the write in the reserved
+    scratch block), and prefill's causal current-chunk sweep is the LAST
+    lane (each row's owner shard — the host rotates lanes per row so the
+    static lane choice holds for every row).
 
     ``mesh`` overrides the default ``mode_mesh(mode)``: island runners
     pass an AbstractMesh of the island SHAPE, so one traced program
@@ -155,6 +166,11 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
     striped = geom.layout == "striped"
     impl = {None: "auto", True: "force", False: "ref"}[use_kernel]
 
+    assert sp >= 1 and merge % sp == 0, (sp, merge)
+    wtag = merge // sp
+    if sp > 1:
+        assert live is not None, \
+            "sequence-parallel serving always runs the live lane program"
     if live is not None:
         assert phase in ("decode", "prefill"), \
             "live cross-layout reads cover the paged decode/prefill " \
@@ -162,14 +178,16 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
         assert not striped and cfg.enc_dec is None and cfg.mla is None, \
             "live reads need the head-layout paged pool"
         assert window is None, "live reads do not support sliding windows"
-        assert merge in live and all(t <= merge for t in live), live
+        # sp=1: the write tag IS the merge and exactly one lane carries
+        # it. sp>1: the write-tag lanes are the sp shard lanes.
+        assert wtag in live and all(t <= merge for t in live), (live, sp)
         for t in live:
             assert geom.live_readable(t) and geom.live_readable(merge), \
                 (t, merge, "architecture is not tag-readable (§D8)")
 
     def live_segs(batch):
-        return tuple((t, batch[f"lt_bt{t}"], batch[f"lt_len{t}"],
-                      batch[f"lt_own{t}"]) for t in live)
+        return tuple((t, batch[f"lt{i}_bt"], batch[f"lt{i}_len"],
+                      batch[f"lt{i}_own"]) for i, t in enumerate(live))
 
     def mixed_step(params, states, batch):
         """One launch per scheduler tick (§Perf D6): chunked prefill for
@@ -228,12 +246,14 @@ def build_serve_step(model: Model, mode: FlyingMode, geom: PoolGeometry, *,
             from repro.models.cache import LiveDecodeBackend
             backend = LiveDecodeBackend(
                 ctx=ctx, slots=batch["slots"], segs=live_segs(batch),
-                merge=merge, block_base=geom.block_base, impl=impl)
+                merge=merge, block_base=geom.block_base, impl=impl,
+                sp=sp, write_own=batch.get("write_own"))
         elif live is not None:
             from repro.models.cache import LivePrefillBackend
             backend = LivePrefillBackend(
                 ctx=ctx, slots=batch["slots"], segs=live_segs(batch),
-                merge=merge, block_base=geom.block_base, impl=impl)
+                merge=merge, block_base=geom.block_base, impl=impl,
+                sp=sp, write_own=batch.get("write_own"))
         elif phase == "decode" and striped:
             from repro.models.striped import StripedDecodeBackend
             backend = StripedDecodeBackend(

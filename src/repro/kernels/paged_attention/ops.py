@@ -80,8 +80,13 @@ def paged_attention_with_lse(q, k_pool, v_pool, block_table, context_len, *,
     """Partial paged decode attention over ONE block segment: returns
     (out [B,H,hd] fp32, lse [B,H] fp32) so the live cross-layout read
     path (§D8) can merge sweeps over differently-tagged segments — and
-    across TP ranks — with a flash-style LSE combine. Rows with
-    ``context_len == 0`` contribute nothing (lse = -inf)."""
+    across TP ranks — with a flash-style LSE combine. The same entry
+    point serves sequence-parallel placements (§D12): a segment there
+    is one SHARD's resident token range, the non-owner ranks sweep it
+    with zero ``context_len``, and the final cross-shard combine is the
+    identical LSE merge — the kernel never needs to know a placement
+    tag from a mode tag. Rows with ``context_len == 0`` contribute
+    nothing (lse = -inf)."""
     impl = resolve_impl(impl)
     if impl == "ref":
         return paged_attention_with_lse_ref(

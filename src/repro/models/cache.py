@@ -352,21 +352,30 @@ def _merge_sweeps(outs_lses):
 class LiveDecodeBackend:
     """Decode over a request set whose KV spans mode-tagged segments.
 
-    ``segs``: one static entry per tag — (tag, block_table [B, mb_t],
-    seg_len [B], owner [B]) where ``seg_len`` is the segment's token
-    count per row (0 = row has no such segment) and ``owner`` the
-    merge-axis index where the segment's owner group starts within the
-    current group. The current tag's entry carries the live segment
-    (its count INCLUDES the new token, appended before the sweep) —
-    all masking derives from the per-tag counts, so no separate total
-    context length is carried."""
+    ``segs``: one static entry per placement LANE — (tag, block_table
+    [B, mb_t], seg_len [B], owner [B]) where ``seg_len`` is the lane's
+    token count per row (0 = row has no such lane) and ``owner`` the
+    merge-axis index where the lane's owner group starts within the
+    current group. Tags may REPEAT across lanes (§D12 sequence
+    parallelism: one lane per SP shard). The write-tag lane holding each
+    row's live segment carries a count that INCLUDES the new token
+    (appended before the sweep) — all masking derives from the per-lane
+    counts, so no separate total context length is carried.
+
+    ``sp`` > 1 selects the sequence-parallel write: the new token is
+    written under the SHARD-width tag ``merge // sp`` to the per-row
+    owner shard (``write_own`` [B], merge-axis offset) only; non-owner
+    ranks park the write in the reserved scratch block. ``sp=1`` keeps
+    the classic whole-group write, byte-identical to the pre-SP path."""
     ctx: "TPContext"
-    slots: jax.Array          # [B] current-view write slot of the new token
+    slots: jax.Array          # [B] write-view slot of the new token
     segs: Tuple[Tuple[int, jax.Array, jax.Array, jax.Array], ...]
     merge: int                # current mode (the state view's tag)
     block_base: int           # B_base: tokens/block at merge=1
     window: Optional[int] = None
     impl: Optional[str] = None
+    sp: int = 1               # sequence-parallel degree (divides merge)
+    write_own: Optional[jax.Array] = None   # [B] owner shard offset
     stored_frame = True       # gqa_attention: project q/k/v un-view-sliced
 
     def attend(self, state, q, k, v, *, positions, window=None):
@@ -383,21 +392,58 @@ class LiveDecodeBackend:
         v_idx = self.ctx.view_rank()
         scale = hd ** -0.5
 
-        # write the new token under the CURRENT view: this device's
-        # current-mode head slice of the stored-frame projection
-        kv_loc = KV_st // m
-        k_new = lax.dynamic_slice_in_dim(k[:, 0], v_idx * kv_loc, kv_loc, 1)
-        v_new = lax.dynamic_slice_in_dim(v[:, 0], v_idx * kv_loc, kv_loc, 1)
-        if pa_ops.resolve_impl(self.impl) == "ref":
-            k_pool = paged_append(k_pool, k_new[:, None], self.slots[:, None])
-            v_pool = paged_append(v_pool, v_new[:, None], self.slots[:, None])
+        if self.sp == 1:
+            # write the new token under the CURRENT view: this device's
+            # current-mode head slice of the stored-frame projection
+            kv_loc = KV_st // m
+            k_new = lax.dynamic_slice_in_dim(k[:, 0], v_idx * kv_loc,
+                                             kv_loc, 1)
+            v_new = lax.dynamic_slice_in_dim(v[:, 0], v_idx * kv_loc,
+                                             kv_loc, 1)
+            if pa_ops.resolve_impl(self.impl) == "ref":
+                k_pool = paged_append(k_pool, k_new[:, None],
+                                      self.slots[:, None])
+                v_pool = paged_append(v_pool, v_new[:, None],
+                                      self.slots[:, None])
+            else:
+                from repro.kernels.paged_attention.kernel import \
+                    paged_append_token_kernel
+                interp = pa_ops.resolve_impl(self.impl) == "interpret"
+                k_pool, v_pool = paged_append_token_kernel(
+                    (k_pool, v_pool), (k_new, v_new), self.slots,
+                    interpret=interp)
         else:
-            from repro.kernels.paged_attention.kernel import \
-                paged_append_token_kernel
-            interp = pa_ops.resolve_impl(self.impl) == "interpret"
-            k_pool, v_pool = paged_append_token_kernel(
-                (k_pool, v_pool), (k_new, v_new), self.slots,
-                interpret=interp)
+            # §D12 sequence-parallel write: shard-width tag, per-row
+            # owner shard. The parking (non-owner ranks write the
+            # reserved scratch slot) is computed HERE, outside the
+            # kernels, so both the reference and Pallas append paths run
+            # unchanged.
+            wt = m // self.sp
+            cap_w = self.block_base * wt
+            kvh_w = KV_st // wt
+            own = self.write_own
+            is_owner = (own <= v_idx) & (v_idx < own + wt)       # [B]
+            v_w = jnp.clip(v_idx - own, 0, wt - 1)
+            idx = v_w[:, None] * kvh_w + jnp.arange(kvh_w)[None, :]
+            k_new = jnp.take_along_axis(k[:, 0], idx[:, :, None], axis=1)
+            v_new = jnp.take_along_axis(v[:, 0], idx[:, :, None], axis=1)
+            park = nb * cap_w - 1   # last slot of the reserved block
+            slots_w = jnp.where(is_owner, self.slots, park).astype(
+                self.slots.dtype)
+            kp_w = k_pool.reshape(nb, cap_w, kvh_w, hd)
+            vp_w = v_pool.reshape(nb, cap_w, kvh_w, hd)
+            if pa_ops.resolve_impl(self.impl) == "ref":
+                kp_w = paged_append(kp_w, k_new[:, None], slots_w[:, None])
+                vp_w = paged_append(vp_w, v_new[:, None], slots_w[:, None])
+            else:
+                from repro.kernels.paged_attention.kernel import \
+                    paged_append_token_kernel
+                interp = pa_ops.resolve_impl(self.impl) == "interpret"
+                kp_w, vp_w = paged_append_token_kernel(
+                    (kp_w, vp_w), (k_new, v_new), slots_w,
+                    interpret=interp)
+            k_pool = kp_w.reshape(k_pool.shape)
+            v_pool = vp_w.reshape(v_pool.shape)
 
         flat_k = k_pool.reshape(nb, -1)
         flat_v = v_pool.reshape(nb, -1)
@@ -432,18 +478,23 @@ class LiveDecodeBackend:
 class LivePrefillBackend:
     """Chunked prefill whose PRIOR context spans mode-tagged segments.
 
-    The chunk itself always lands in the current-tag segment: its pages
-    are in the current tag's ``segs`` table and the causal in-chunk +
-    current-segment-prior attention is one sweep (``seg_len`` for the
-    current tag = prior tokens within that segment, NOT counting the
-    chunk). Frozen older segments get prior-only sweeps."""
+    The chunk itself always lands in the write-tag lane: its pages are
+    in that lane's ``segs`` table and the causal in-chunk +
+    lane-prior attention is one sweep (``seg_len`` for the causal lane
+    = prior tokens within that lane, NOT counting the chunk). All other
+    lanes get prior-only sweeps. With ``sp=1`` the causal lane is the
+    (unique) current-tag lane; with ``sp>1`` it is the LAST lane — the
+    host stages each row's owner shard there (§D12), and the chunk is
+    written shard-width to the per-row owner (``write_own``) only."""
     ctx: "TPContext"
-    slots: jax.Array          # [B,T] current-view chunk write slots
+    slots: jax.Array          # [B,T] write-view chunk write slots
     segs: Tuple[Tuple[int, jax.Array, jax.Array, jax.Array], ...]
     merge: int
     block_base: int
     window: Optional[int] = None
     impl: Optional[str] = None
+    sp: int = 1               # sequence-parallel degree (divides merge)
+    write_own: Optional[jax.Array] = None   # [B] owner shard offset
     stored_frame = True
 
     def attend(self, state, q, k, v, *, positions, window=None):
@@ -459,24 +510,56 @@ class LivePrefillBackend:
         v_idx = self.ctx.view_rank()
         scale = hd ** -0.5
 
-        kv_loc = KV_st // m
-        k_new = lax.dynamic_slice_in_dim(k, v_idx * kv_loc, kv_loc, 2)
-        v_new = lax.dynamic_slice_in_dim(v, v_idx * kv_loc, kv_loc, 2)
-        if pa_ops.resolve_impl(self.impl) == "ref":
-            k_pool = paged_append(k_pool, k_new, self.slots)
-            v_pool = paged_append(v_pool, v_new, self.slots)
+        if self.sp == 1:
+            kv_loc = KV_st // m
+            k_new = lax.dynamic_slice_in_dim(k, v_idx * kv_loc, kv_loc, 2)
+            v_new = lax.dynamic_slice_in_dim(v, v_idx * kv_loc, kv_loc, 2)
+            if pa_ops.resolve_impl(self.impl) == "ref":
+                k_pool = paged_append(k_pool, k_new, self.slots)
+                v_pool = paged_append(v_pool, v_new, self.slots)
+            else:
+                from repro.kernels.paged_attention.kernel import \
+                    paged_append_chunk_kernel
+                interp = pa_ops.resolve_impl(self.impl) == "interpret"
+                k_pool, v_pool = paged_append_chunk_kernel(
+                    (k_pool, v_pool), (k_new, v_new), self.slots,
+                    interpret=interp)
         else:
-            from repro.kernels.paged_attention.kernel import \
-                paged_append_chunk_kernel
-            interp = pa_ops.resolve_impl(self.impl) == "interpret"
-            k_pool, v_pool = paged_append_chunk_kernel(
-                (k_pool, v_pool), (k_new, v_new), self.slots,
-                interpret=interp)
+            # §D12: shard-width owner-masked chunk write (the engine
+            # guarantees each row's chunk lies within ONE block, so one
+            # owner shard covers the whole row); parking is computed
+            # outside the kernels.
+            wt = m // self.sp
+            cap_w = self.block_base * wt
+            kvh_w = KV_st // wt
+            own = self.write_own
+            is_owner = (own <= v_idx) & (v_idx < own + wt)       # [B]
+            v_w = jnp.clip(v_idx - own, 0, wt - 1)
+            idx = v_w[:, None] * kvh_w + jnp.arange(kvh_w)[None, :]
+            k_new = jnp.take_along_axis(k, idx[:, None, :, None], axis=2)
+            v_new = jnp.take_along_axis(v, idx[:, None, :, None], axis=2)
+            park = nb * cap_w - 1
+            slots_w = jnp.where(is_owner[:, None] & (self.slots >= 0),
+                                self.slots, park).astype(self.slots.dtype)
+            kp_w = k_pool.reshape(nb, cap_w, kvh_w, hd)
+            vp_w = v_pool.reshape(nb, cap_w, kvh_w, hd)
+            if pa_ops.resolve_impl(self.impl) == "ref":
+                kp_w = paged_append(kp_w, k_new, slots_w)
+                vp_w = paged_append(vp_w, v_new, slots_w)
+            else:
+                from repro.kernels.paged_attention.kernel import \
+                    paged_append_chunk_kernel
+                interp = pa_ops.resolve_impl(self.impl) == "interpret"
+                kp_w, vp_w = paged_append_chunk_kernel(
+                    (kp_w, vp_w), (k_new, v_new), slots_w,
+                    interpret=interp)
+            k_pool = kp_w.reshape(k_pool.shape)
+            v_pool = vp_w.reshape(v_pool.shape)
 
         flat_k = k_pool.reshape(nb, -1)
         flat_v = v_pool.reshape(nb, -1)
         partials = []
-        for tag, bt_t, len_t, own_t in self.segs:
+        for i, (tag, bt_t, len_t, own_t) in enumerate(self.segs):
             cap_t = self.block_base * tag
             kvh_t = KV_st // tag
             Hq_t = H_st // tag
@@ -487,13 +570,14 @@ class LivePrefillBackend:
             v_old = jnp.clip(v_idx - own_t, 0, tag - 1)
             idx = v_old[:, None] * Hq_t + jnp.arange(Hq_t)[None, :]
             q_sub = jnp.take_along_axis(q, idx[:, None, :, None], axis=2)
-            cur = tag == m
+            cur = (tag == m) if self.sp == 1 \
+                else (i == len(self.segs) - 1)
             out_t, lse_t = fp_ops.paged_prefill_sweep_with_lse(
                 q_sub, view_k, view_v, bt_t, eff, prior_only=not cur,
                 softmax_scale=scale, impl=self.impl)
-            # the current-tag sweep is causal over [prior, prior+T): it
-            # always contributes (the chunk row itself); old-tag sweeps
-            # only where the segment exists
+            # the causal-lane sweep is causal over [prior, prior+T): it
+            # always contributes (the chunk row itself, on the owner
+            # ranks); other lanes only where the lane exists
             ok_any = ok if cur else (ok & (len_t > 0))
             partials.append(_seg_scatter(out_t, lse_t, v_old, ok_any,
                                          H_st, 2))

@@ -36,6 +36,7 @@ import json
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.modes import Island
 from repro.core.scheduler import DynamicScheduler, SchedulerWedged
 from repro.core.task_pool import (PRIORITY_HIGH, PRIORITY_NORMAL,
                                   TERMINAL_STATES, Request)
@@ -129,6 +130,12 @@ class FrontDoor:
         self.counters["submitted"] += 1
         if not self._admission_open:
             return self._reject(req, "draining")
+        if self._kv_never_fits(req):
+            # structural refusal (§D12): no reachable placement — not
+            # even the widest merge, nor (with elastic SP) a fleet-wide
+            # pure-SP island — can hold this context's KV. Queueing it
+            # would wait forever; the client gets the reason instead.
+            return self._reject(req, "kv_never_fits")
         self._queue.append(req)
         if self.cfg.shed:
             # tiered shed pass runs NOW so a high-tier arrival can
@@ -152,6 +159,36 @@ class FrontDoor:
                 self.sched.lifecycle.get(reason, 0) + 1
             return True
         return self.sched.abort(req_id, reason)
+
+    def _kv_never_fits(self, req: Request) -> bool:
+        """Can the request's FULL context fit the fleet's best
+        placement (§D12)? The widest merge pools ``cap(m)``-token
+        blocks over one group's budget; with elastic SP enabled
+        (``policy.sp``) the best placement is instead a fleet-wide
+        pure-SP island — ``sp`` engines' pools at write tag 1 — and a
+        long prompt ROUTES there (the UC3 policy carves the island)
+        rather than being refused. Both the pool capacity and the
+        backend's per-request block-table cap are checked; only a
+        context beyond every reachable placement is structurally
+        unservable."""
+        sched = self.sched
+        widest = sched.plan.valid_merges()[-1]
+        ad = sched.adaptors[0]
+        need = req.total_context()
+        sp_on = bool(getattr(sched.policy, "sp", False))
+        best = ad.max_context_tokens(widest)
+        if sp_on:
+            best = max(best, ad.max_context_tokens(widest, sp=widest))
+        if need > best:
+            return True
+        fits = getattr(sched.backend, "request_fits", None)
+        if fits is not None:
+            ok = fits(req, widest)
+            if not ok and sp_on:
+                ok = fits(req, Island(0, widest, widest, sp=widest))
+            if not ok:
+                return True
+        return False
 
     def _reject(self, req: Request, why: str) -> bool:
         req.state = "rejected"

@@ -49,6 +49,40 @@ class CostModel:
         t_comm = self._comm(tp, batch_per_group, 1)
         return max(t_mem, t_flop) + t_comm
 
+    # -- decode on a sequence-parallel island (§D12) ---------------------
+    def decode_step_sp(self, write_merge: int, sp: int,
+                       batch_per_group: int, avg_ctx: float) -> float:
+        """One decode token on an SP island: weights are sharded only by
+        the WRITE tag's TP degree (each shard is a ``write_merge``-wide
+        TP group), while the KV read — the long-context term — splits
+        across ``sp`` shards on top of TP: every shard scans only its
+        1/sp of the resident tokens. Doubling sp therefore halves the
+        KV-bytes term but not the weights term, which is exactly the
+        sublinear-TPOT shape fig10 measures. The cross-shard flash-style
+        LSE combine adds one small collective over the sp ring."""
+        tp = self.tp(write_merge)
+        wbytes = self.n_active * self.dtype_bytes / tp
+        kv = (self.kv_token_bytes * avg_ctx * batch_per_group
+              / (tp * max(sp, 1)))
+        t_mem = (wbytes + kv) / (self.hw.hbm_bw * self.hw.mfu_decode_bw)
+        t_flop = (2 * self.n_active * batch_per_group
+                  / (tp * self.hw.peak_flops_bf16 * self.hw.mfu_prefill))
+        t_comm = self._comm(tp, batch_per_group, 1) \
+            + self._lse_comm(sp, batch_per_group)
+        return max(t_mem, t_flop) + t_comm
+
+    def _lse_comm(self, sp: int, batch: int) -> float:
+        """Cross-shard LSE merge (§D12): per layer, each rank exchanges
+        its [B, heads, hd] partial attention output plus [B, heads]
+        stats over the sp ring — tiny next to the KV scan it replaces."""
+        if sp <= 1:
+            return 0.0
+        L = self.cfg.num_layers
+        vol = (L * batch * self.cfg.d_model * self.dtype_bytes
+               * 2 * (sp - 1) / sp)
+        lat = L * self.hw.ici_latency * math.log2(max(sp, 2))
+        return vol / self.hw.ici_bw + lat
+
     # -- prefill: compute-bound -------------------------------------------
     def prefill_step(self, merge: int, tokens_per_group: int,
                      avg_ctx: float = 0.0) -> float:
@@ -87,6 +121,11 @@ def _merge_of(island) -> int:
     return getattr(island, "merge", island)
 
 
+def _sp_of(island) -> int:
+    """Sequence-parallel degree of an island handle (bare merges: 1)."""
+    return getattr(island, "sp", 1)
+
+
 @dataclass
 class SimBackend:
     """Scheduler Backend running on the cost model (no devices).
@@ -119,6 +158,11 @@ class SimBackend:
     def _prefill_cost(self, reqs: Sequence[Request], island,
                       chunk_tokens: int) -> float:
         merge = _merge_of(island)
+        sp = _sp_of(island)
+        if sp > 1:
+            # SP island: the chunk's MLP/QKV compute runs on one
+            # write-tag-wide shard; attention reads span all shards
+            merge = max(merge // sp, 1)
         groups: dict = {}
         for r in reqs:
             c = min(chunk_tokens, r.prompt_len)
@@ -128,6 +172,7 @@ class SimBackend:
 
     def _decode_cost(self, reqs: Sequence[Request], island) -> float:
         merge = _merge_of(island)
+        sp = _sp_of(island)
         groups: dict = {}
         ctx: dict = {}
         for r in reqs:
@@ -136,7 +181,11 @@ class SimBackend:
                 + r.prompt_len + r.generated - r.folded
         worst = 0.0
         for g, b in groups.items():
-            t = self.cost.decode_step(merge, b, ctx[g] / b)
+            if sp > 1:
+                t = self.cost.decode_step_sp(max(merge // sp, 1), sp,
+                                             b, ctx[g] / b)
+            else:
+                t = self.cost.decode_step(merge, b, ctx[g] / b)
             worst = max(worst, t)
         return worst / self.dp_throughput_penalty
 

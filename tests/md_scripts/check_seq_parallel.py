@@ -1,0 +1,197 @@
+"""Elastic sequence parallelism (docs/PERF.md §D12) under 8 forced host
+devices: ONE request's KV pooled BY SEQUENCE across an island's engines,
+serving a context strictly larger than any single engine's pool, with a
+live SP2 -> SP4 rebind mid-decode — token-identical to a big-pool
+merge-1 reference fleet on both kernel dispatch paths.
+
+Covered:
+  - pure-SP placement (write tag 1): every block-sized segment lands on
+    one shard's pool, round-robin across the ring, so the island pools
+    ``sp x`` one engine's KV capacity for a single request;
+  - per-shard partial attention + the §D8 flash-style LSE combine
+    reconstructing exact dense attention across the shards;
+  - elastic SP degree as an ordinary LIVE rebind: freezing nothing,
+    recomputing nothing — the SP2-era segments stay where they are and
+    new blocks rotate over the widened 4-ring;
+  - partial-rebind scoping: the untouched DP island (engines 4-7)
+    keeps serving through the rebind with zero drains;
+  - kernel dispatch parity: auto/ref vs forced (interpret-mode) Pallas.
+"""
+import copy
+import json
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.engine import FlyingEngine
+from repro.core.kv_adaptor import PoolGeometry
+from repro.core.modes import FleetLayout, ParallelPlan
+from repro.core.task_pool import Request
+from repro.models.model import build_model
+
+BPE = 2
+NB = 8           # blocks per engine pool — tiny on purpose
+BB = 4           # block_base -> one block holds 4 tokens at tag 1
+PROMPT = 40      # 10 blocks: far beyond the 7-block usable single pool
+STEPS1 = 6       # decode steps at SP2 before the rebind
+STEPS2 = 10      # decode steps at SP4 after it
+BG_PROMPT = 9
+
+
+def mkreq(g, rid, plen):
+    r = Request(req_id=rid, arrival=0.0, prompt_len=plen,
+                output_len=1 << 30)
+    r.engine_group = g
+    return r
+
+
+def start(eng, reqs, island):
+    for r in reqs:
+        eng.adaptors[r.engine_group].append_slots(r.req_id, r.prompt_len)
+    eng.prefill(reqs, island, max(r.prompt_len for r in reqs))
+    for r in reqs:
+        eng.adaptors[r.engine_group].append_slots(r.req_id, 1)
+
+
+def decode(eng, reqs, island, steps=1):
+    for _ in range(steps):
+        eng.decode(reqs, island)
+        for r in reqs:
+            eng.adaptors[r.engine_group].append_slots(r.req_id, 1)
+
+
+def sp_serve(model, params, cfg, plan, use_kernel):
+    """Serve the long request SP2 -> (live rebind) -> SP4."""
+    geom = PoolGeometry(cfg, plan, num_blocks=NB, block_base=BB)
+    L2 = FleetLayout.of(plan, [(2, 2, 2), (2, 1), (4, 1)])
+    L4 = L2.carve(0, 4, 4, sp=4)
+    eng = FlyingEngine(model, plan, geom, params, batch_per_engine=BPE,
+                       layout=L2, use_kernel=use_kernel,
+                       check_zero_copy=True)
+    ad = eng.adaptors[0]
+    cap = geom.capacity(1)
+    total_ctx = PROMPT + STEPS1 + STEPS2 + 1
+    one_pool = ad.max_context_tokens(1)
+    assert total_ctx > one_pool, \
+        f"context {total_ctx} must exceed one engine's pool {one_pool}"
+    assert ad.max_context_tokens(2, sp=2) >= PROMPT + STEPS1
+    assert ad.max_context_tokens(4, sp=4) >= total_ctx
+
+    r = mkreq(0, "long", PROMPT)
+    bg = [mkreq(4, "b4", BG_PROMPT), mkreq(6, "b6", BG_PROMPT)]
+    isl_bg = eng.layout.island_of(4)
+    start(eng, bg, isl_bg)
+
+    # block-aligned chunked prefill on the SP island: one block per chunk
+    isl_sp = eng.layout.island_of(0)
+    for lo in range(0, PROMPT, cap):
+        ad.append_slots_batch(["long"], [cap])
+        r.prefilled = lo
+        eng.prefill([r], isl_sp, cap)
+    r.prefilled = PROMPT
+    ad.append_slots("long", 1)
+
+    decode(eng, [r], isl_sp, STEPS1)
+    decode(eng, bg, isl_bg, STEPS1)
+
+    # segments so far rotate over the SP2 ring {0, 1}
+    shards2 = {min(o.engine_id for o in s.owners)
+               for s in ad.table["long"].segments}
+    assert shards2 == {0, 1}, shards2
+
+    # ---- live SP2 -> SP4 rebind mid-decode ---------------------------
+    eng.rebind(L4)
+    ad.retag_tail("long")     # no-op: SP tails survive SP-degree rebinds
+    isl_sp = eng.layout.island_of(0)
+    assert isl_sp.sp == 4 and isl_sp.write_tag == 1
+    assert eng.layout.island_of(4) == isl_bg, "bg island reshaped"
+
+    decode(eng, [r], isl_sp, STEPS2)
+    decode(eng, bg, isl_bg, STEPS2)
+
+    ent = ad.table["long"]
+    assert all(s.shard >= 0 and s.tag == 1 and len(s.ids) == 1
+               for s in ent.segments), "non-SP segment on the SP island"
+    shards4 = {min(o.engine_id for o in s.owners) for s in ent.segments}
+    assert shards4 & {2, 3}, \
+        f"post-rebind blocks never reached the new shards: {shards4}"
+    per_shard = {}
+    for s in ent.segments:
+        j = min(o.engine_id for o in s.owners)
+        per_shard[j] = per_shard.get(j, 0) + len(s.ids)
+    assert max(per_shard.values()) < NB, per_shard
+
+    b_stats = copy.copy(eng.island_sync_stats(isl_bg))
+    assert b_stats.drains == 0, f"untouched island drained: {b_stats}"
+    assert eng.sync_stats.host_argmax == 0
+    toks = {q.req_id: list(eng.generated_tokens(q.req_id))
+            for q in [r] + bg}
+    return toks, {"context": total_ctx, "one_pool": one_pool,
+                  "blocks_per_shard": per_shard}
+
+
+def reference(model, params, cfg, plan):
+    """Big-pool merge-1 reference: same requests, same decode schedule,
+    one engine holds the whole context."""
+    geom = PoolGeometry(cfg, plan, num_blocks=64, block_base=BB)
+    L1 = FleetLayout.of(plan, [(2, 1), (2, 1), (4, 1)])
+    eng = FlyingEngine(model, plan, geom, params, batch_per_engine=BPE,
+                       layout=L1)
+    r = mkreq(0, "long", PROMPT)
+    bg = [mkreq(4, "b4", BG_PROMPT), mkreq(6, "b6", BG_PROMPT)]
+    isl_bg = eng.layout.island_of(4)
+    start(eng, bg, isl_bg)
+    isl0 = eng.layout.island_of(0)
+    cap = geom.capacity(1)
+    for lo in range(0, PROMPT, cap):
+        eng.adaptors[0].append_slots_batch(["long"], [cap])
+        r.prefilled = lo
+        eng.prefill([r], isl0, cap)
+    r.prefilled = PROMPT
+    eng.adaptors[0].append_slots("long", 1)
+    decode(eng, [r], isl0, STEPS1)
+    decode(eng, bg, isl_bg, STEPS1)
+    decode(eng, [r], isl0, STEPS2)
+    decode(eng, bg, isl_bg, STEPS2)
+    return {q.req_id: list(eng.generated_tokens(q.req_id))
+            for q in [r] + bg}
+
+
+def main():
+    cfg = get_config("stablelm-1.6b").reduced()
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.key(0))
+    plan = ParallelPlan(engine_rows=1, tp_base=1, data_rows=8)
+
+    ref = reference(model, params, cfg, plan)
+    assert len(ref["long"]) == STEPS1 + STEPS2 + 1
+
+    results = {}
+    info = None
+    for uk, name in ((None, "auto/ref"), (True, "forced-kernel")):
+        toks, info = sp_serve(model, params, cfg, plan, uk)
+        diff = {k: (toks[k], ref[k]) for k in toks if toks[k] != ref[k]}
+        assert not diff, f"[{name}] diverged from big-pool ref: {diff}"
+        results[name] = toks
+    assert results["auto/ref"] == results["forced-kernel"]
+
+    print(f"SP island served a {info['context']}-token context "
+          f"(one engine's pool: {info['one_pool']} tokens) across a "
+          f"live SP2->SP4 rebind, token-identical to the big-pool "
+          f"merge-1 reference on both kernel impls; block spread "
+          f"{info['blocks_per_shard']}; untouched DP island drains=0")
+    print("SEQ_PARALLEL_JSON " + json.dumps({
+        "context_tokens": info["context"],
+        "one_engine_pool_tokens": info["one_pool"],
+        "sp_degrees": [2, 4],
+        "blocks_per_shard": info["blocks_per_shard"],
+        "token_identical": True}))
+    print("SEQ PARALLEL OK")
+
+
+if __name__ == "__main__":
+    main()

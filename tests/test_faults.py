@@ -185,6 +185,58 @@ def test_stall_detection_quarantines_island():
     assert hp.folded > 0 or hp.engine_group not in (0, 1)
 
 
+def test_kill_one_sp_shard_discards_or_recovers_without_leaks():
+    """§D12 chaos row: an engine holding ONE shard of a sequence-
+    parallel placement is killed mid-serve. The island quarantines and
+    the pooled request is discarded or fold-recovered onto survivors —
+    either way no SP shard block may leak on any surviving owner, and
+    the untouched background islands keep serving to completion."""
+    inj = FaultInjector([FaultSpec(kind=KILL, tick=30, engines=(1,))])
+    geom = PoolGeometry(CFG, PLAN, num_blocks=20, block_base=16)
+    be = SimBackend(CostModel(CFG, PLAN), switch_mode="flying",
+                    injector=inj)
+    s = DynamicScheduler(PLAN, geom, be, SchedulerConfig(strategy=LIVE),
+                         policy=FlyingPolicy(live=True, sp=True))
+    widest = PLAN.valid_merges()[-1]
+    # context beyond EVERY merge's pool: only an SP island can hold it,
+    # so UC3 carves one (engines 0..3) and engine 1 owns shard 1
+    need = geom.capacity(widest) * (geom.num_blocks - 1) + 500
+    s.submit(Request(req_id="long", arrival=0.0, prompt_len=need - 32,
+                     output_len=64))
+    for i in range(4):
+        s.submit(Request(req_id=f"bg{i}", arrival=0.2 + i * 0.01,
+                         prompt_len=64, output_len=16))
+    wedged = None
+    try:
+        s.run()
+    except SchedulerWedged as e:
+        wedged = e
+    assert 1 in s.quarantined
+    assert any(i["kind"] == "quarantine" for i in s.incidents)
+    states = {r.req_id: r.state for r in s.pool.all.values()}
+    # background islands were never part of the SP island: they finish
+    for i in range(4):
+        assert states[f"bg{i}"] == "done", states
+    if wedged is None:
+        # fold-recovery carved a fresh SP island out of the survivors
+        assert states["long"] == "done", states
+        assert s.preempt_stats["recovered"] >= 1
+        for ad in s.adaptors:
+            assert not ad.table          # every SP shard block released
+    else:
+        # structured wedge: the request is accounted, not stranded —
+        # and no SURVIVING engine still holds its shard blocks unless
+        # it is parked in paused with a valid resume carve
+        assert s.pool.all["long"] in s.paused or \
+            states["long"] != "done"
+    # the dead tile never serves again after the quarantine tick
+    q_tick = min(i["tick"] for i in s.incidents
+                 if i["kind"] == "quarantine")
+    for i in s.incidents:
+        if i["kind"] == "engine_fault":
+            assert i["tick"] <= q_tick
+
+
 @pytest.mark.parametrize("strategy", [SEQUENTIAL, HARD, LIVE])
 def test_pool_exhaust_degrades_gracefully(strategy):
     """A scripted full-pool memory burst mid-run becomes backpressure

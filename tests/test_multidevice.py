@@ -94,6 +94,16 @@ def test_heterogeneous_island_serving():
     assert "ISLAND SERVING OK" in out
 
 
+def test_elastic_sequence_parallel_serving():
+    """Elastic SP (§D12): one request's KV pooled by sequence across an
+    island, serving a context strictly larger than a single engine's
+    pool, across a live SP2->SP4 rebind mid-decode — token-identical to
+    a big-pool merge-1 reference on both kernel impls, untouched DP
+    island undrained."""
+    out = run_script("check_seq_parallel.py")
+    assert "SEQ PARALLEL OK" in out
+
+
 def test_fault_recovery_across_quarantine():
     """Self-healing (§D9): an engine tile is scripted dead mid-decode,
     its island quarantined, and its request recovered onto a surviving
