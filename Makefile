@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-md test-chaos bench bench-smoke bench-frontdoor \
-	quickstart
+	bench-server quickstart
 
 # tier-1 suite
 test:
@@ -46,6 +46,16 @@ bench-smoke:
 # seizure + scripted client cancels) must never wedge and leak zero KV
 bench-frontdoor:
 	$(PY) benchmarks/frontdoor.py
+
+# async serving core guard (docs/PERF.md §D13): the event-driven
+# continuous-batching loop must serve the 2x-saturation bursty
+# heavy-tail trace to IDENTICAL per-request outcomes within 1.1x of
+# the offline wall time; the forecast policy's converged-burst priority
+# p99 TTFT must beat the reactive policy on the same seed with >= 1
+# true pre-bind; and the real HTTP server must stream exact token
+# counts over a socket. Writes BENCH_server.json.
+bench-server:
+	$(PY) benchmarks/server_bench.py
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -138,8 +138,8 @@ def main() -> None:
     from benchmarks import (decode_attention, fault_recovery,
                             fig8_bursty, fig9_tpot, fig10_longcontext,
                             frontdoor, kernels_micro, prefill_attention,
-                            prefix_cache, steady_state, table1_priority,
-                            table2_context_switch)
+                            prefix_cache, server_bench, steady_state,
+                            table1_priority, table2_context_switch)
     suites = {
         "steady_state": lambda: steady_state.run(smoke=args.fast),
         "decode_attention": lambda: decode_attention.run(smoke=args.fast),
@@ -156,6 +156,8 @@ def main() -> None:
         "prefix": lambda: prefix_cache.run(),
         "frontdoor": lambda: frontdoor.run(
             n_requests=240 if args.fast else 720),
+        "server": lambda: server_bench.run(
+            n_requests=300 if args.fast else 600),
     }
     print("benchmark,metric,value,derived")
     for name, fn in suites.items():

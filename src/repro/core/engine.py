@@ -1421,3 +1421,13 @@ class FlyingEngine:
     def generated_tokens(self, req_id: str) -> List[int]:
         self.drain()
         return self._token_buf.get(req_id, [])
+
+    def harvested_tokens(self, req_id: str) -> List[int]:
+        """Non-draining peek at the tokens already surfaced for one
+        request (§D13 streaming). The async serve loop polls this every
+        tick: it must NEVER force a safe point, so it only sees tokens
+        the in-flight window has already harvested — the depth-2 ring
+        means the tail lags by a couple of tokens until the next
+        harvest, and the terminal flush (``generated_tokens``) drains
+        for the remainder once the request finishes."""
+        return list(self._token_buf.get(req_id, []))

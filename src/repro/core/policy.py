@@ -23,6 +23,7 @@ benchmarks so table1 can quantify what partial rebinds buy.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 from repro.core.modes import FleetLayout
@@ -72,14 +73,16 @@ class FlyingPolicy:
         return min(load, key=lambda g: (load[g],
                                         -sched._adaptor(g).free_blocks()))
 
-    def _bind_island(self, sched, m: int) -> FleetLayout:
+    def _bind_island(self, sched, m: int, base=None) -> FleetLayout:
         """Carve an m-engine TP island at the least-disruptive aligned
         position: reuse an existing >=m binding when one is live (sticky
         — re-carving every tick would flap), otherwise pick the aligned
         region currently serving the fewest requests so the bind pauses
         as little background as possible (carving engine 0 regardless
-        would reshape whatever happens to live there)."""
-        layout = sched.layout
+        would reshape whatever happens to live there).  ``base`` lets a
+        wrapping policy (ForecastPolicy §D13) carve into a target layout
+        it already decided on, rather than the scheduler's current one."""
+        layout = base if base is not None else sched.layout
         bg_live = any(r.priority == 0 for r in sched.running) or \
             any(r.priority == 0 for r in sched.waiting)
         for isl in layout.islands:
@@ -239,3 +242,275 @@ class FlyingPolicy:
             return layout
         self._last_switch_t = sched.now
         return target
+
+
+# ---------------------------------------------------------------------------
+# §D13: predictive rebind — forecast the arrival process, bind EARLY
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TierForecast:
+    """Holt-style (level + trend) arrival-intensity estimator on an
+    irregular event stream, plus an EWMA of per-request context length.
+
+    The level is an exponentially-decayed arrival counter: each arrival
+    adds ``1/tau`` and the whole estimate decays with time constant
+    ``tau``, so at steady state a Poisson stream of rate λ settles the
+    estimate at λ (the classic shot-noise intensity estimator — no
+    binning, O(1) per event).  The trend term is an EWMA of the level's
+    finite differences, letting ``forecast()`` extrapolate a ramp
+    ``horizon`` seconds out instead of only reporting the present.
+    """
+    tau: float = 4.0        # intensity decay time constant (seconds)
+    trend_tau: float = 8.0  # trend smoothing time constant (seconds)
+    ctx_alpha: float = 0.1  # context-length EWMA step (per event)
+
+    def __post_init__(self):
+        self.lam = 0.0        # arrivals/sec level
+        self.trend = 0.0      # d(lam)/dt
+        self.ctx = 0.0        # smoothed total_context per request
+        self.n = 0            # events observed
+        self.last_t = None
+
+    def observe(self, t: float, ctx: int = 0) -> None:
+        if self.last_t is None:
+            self.last_t = t
+        dt = max(t - self.last_t, 0.0)
+        decayed = self.lam * math.exp(-dt / self.tau)
+        new_lam = decayed + 1.0 / self.tau
+        if dt > 0.0:
+            a = 1.0 - math.exp(-dt / self.trend_tau)
+            self.trend += a * ((new_lam - self.lam) / dt - self.trend)
+        self.lam, self.last_t = new_lam, t
+        if ctx > 0:
+            self.n += 1
+            # seed the EWMA with the first sample (else it drags at 0)
+            step = 1.0 if self.n == 1 else self.ctx_alpha
+            self.ctx += step * (ctx - self.ctx)
+
+    def rate(self, now: float) -> float:
+        """Current intensity estimate (decayed to ``now``)."""
+        if self.last_t is None:
+            return 0.0
+        return self.lam * math.exp(-max(now - self.last_t, 0.0) / self.tau)
+
+    def forecast(self, now: float, horizon: float = 0.0) -> float:
+        """Holt extrapolation ``horizon`` seconds past ``now``."""
+        return max(self.rate(now) + self.trend * horizon, 0.0)
+
+
+@dataclass
+class ForecastPolicy:
+    """Predictive layer over :class:`FlyingPolicy` (§D13).
+
+    The inner policy is purely REACTIVE: it carves a priority TP island
+    only once a priority request is already sitting in the queue — that
+    first request eats the transition latency.  This wrapper watches the
+    offered arrival stream (``FrontDoor.submit`` feeds ``observe``),
+    keeps a per-tier :class:`TierForecast`, and asks the inner policy to
+    pre-carve the island when either
+
+      * the Holt forecast of the priority arrival rate ``horizon_s``
+        ahead crosses ``bind_rate`` (ramp detection), or
+      * a learned burst period predicts the next onset within ``lead_s``
+        (scripted / periodic traffic: fig8's square-wave bursts).
+
+    Hysteresis: once triggered, the bind is held for ``hold_s`` past the
+    last above-threshold evaluation so estimator jitter around the
+    threshold cannot thrash the fleet; the inner policy's stickiness
+    (reuse a live >=m island) makes repeat decisions free.
+
+    ``next_action_t`` exposes the predicted pre-bind instant so an
+    event-driven idle loop (FrontDoor/_next_event, AsyncServeLoop) wakes
+    up IN TIME to carve the island before the burst lands rather than
+    discovering it on the next arrival.
+    """
+    inner: FlyingPolicy = None
+    horizon_s: float = 1.0     # how far ahead decide() extrapolates
+    lead_s: float = 0.75       # pre-bind this early before a predicted onset
+    bind_rate: float = 1.5     # priority arrivals/sec that warrant a bind
+    hold_s: float = 4.0        # hysteresis hold after the signal drops
+    tau_s: float = 2.0         # intensity estimator time constant
+    periodic: bool = True      # learn onset periodicity (scripted bursts)
+    priority_tiers: tuple = ("priority",)
+
+    def __post_init__(self):
+        if self.inner is None:
+            self.inner = FlyingPolicy()
+        self.tiers = {}
+        self._active_until = -1e18
+        self._above = False         # onset edge-detector state
+        self._last_onset = None
+        self._period = None         # EWMA onset-to-onset interval
+        self._n_onsets = 0
+        self.stats = {"prebinds": 0, "forecast_binds": 0,
+                      "onsets": 0, "releases": 0}
+
+    # -- passthrough: scheduler/frontdoor introspect these on the policy
+    @property
+    def sp(self):
+        return self.inner.sp
+
+    @property
+    def live(self):
+        return self.inner.live
+
+    @property
+    def islands(self):
+        return self.inner.islands
+
+    # ------------------------------------------------------------------
+    def _tier(self, tier: str) -> TierForecast:
+        tf = self.tiers.get(tier)
+        if tf is None:
+            tf = self.tiers[tier] = TierForecast(tau=self.tau_s)
+        return tf
+
+    def observe(self, t: float, tier: str, ctx: int = 0) -> None:
+        """One offered arrival (called by FrontDoor when the virtual
+        clock reaches the request's arrival time — never at submit time,
+        which would leak future arrivals of a pre-scripted trace)."""
+        tf = self._tier(tier)
+        tf.observe(t, ctx)
+        if tier not in self.priority_tiers or not self.periodic:
+            return
+        # onset edge-detection with a low/high water band so a single
+        # straggler arrival mid-gap cannot register a spurious onset
+        r = tf.rate(t)
+        if not self._above and r >= self.bind_rate:
+            self._above = True
+            self.stats["onsets"] += 1
+            if self._last_onset is not None:
+                gap = t - self._last_onset
+                if self._period is None:
+                    self._period = gap
+                    self._n_onsets = 1
+                elif abs(gap - self._period) <= 0.5 * self._period:
+                    self._period += 0.3 * (gap - self._period)
+                    self._n_onsets += 1
+                else:       # pattern broke: restart the learner
+                    self._period, self._n_onsets = gap, 1
+            self._last_onset = t
+        elif self._above and r < 0.5 * self.bind_rate:
+            self._above = False
+
+    # ------------------------------------------------------------------
+    def _predicted_onset(self, now: float):
+        """Next predicted burst onset, or None when the learner has not
+        converged (needs >=2 consistent intervals) or the pattern broke
+        (the expected onset came and went with no burst)."""
+        if not self.periodic or self._period is None \
+                or self._n_onsets < 2 or self._last_onset is None:
+            return None
+        t = self._last_onset + self._period
+        if now > t + 0.5 * self._period:
+            return None
+        return t
+
+    def next_action_t(self, now: float):
+        """Wake-up instant for event-driven loops: the moment the fleet
+        should pre-bind for the next predicted burst."""
+        on = self._predicted_onset(now)
+        if on is None:
+            return None
+        t = on - self.lead_s
+        return t if t > now + 1e-9 else None
+
+    def _want_bind(self, now: float) -> bool:
+        hot = False
+        for tier in self.priority_tiers:
+            tf = self.tiers.get(tier)
+            if tf is not None and \
+                    tf.forecast(now, self.horizon_s) >= self.bind_rate:
+                hot = True
+                break
+        on = self._predicted_onset(now)
+        if on is not None and now >= on - self.lead_s:
+            hot = True
+        if hot:
+            self._active_until = now + self.hold_s
+            return True
+        return now < self._active_until
+
+    def _bind_merge(self, sched) -> int:
+        """Island width for the pre-bind: the inner policy's priority
+        merge, widened while the forecasted priority context would not
+        fit one group's KV pool (the UC3 capacity rule, driven by the
+        context-length forecast instead of a queued request)."""
+        widest = sched.plan.valid_merges()[-1]
+        m = self.inner.priority_merge or min(2, widest)
+        ctx = 0.0
+        for tier in self.priority_tiers:
+            tf = self.tiers.get(tier)
+            if tf is not None:
+                ctx = max(ctx, tf.ctx)
+        geom = sched.geom
+        while m < widest and \
+                geom.capacity(m) * (geom.num_blocks - 1) < ctx:
+            m *= 2
+        return m
+
+    @staticmethod
+    def _has_island(layout, m: int) -> bool:
+        return any(isl.merge >= m and isl.sp == 1
+                   for isl in layout.islands)
+
+    def _priority_live(self, sched) -> bool:
+        arrived = sched.waiting + sched.pool.peek_arrived(sched.now)
+        return any(r.priority == PRIORITY_HIGH and not r.done
+                   for r in arrived + sched.running)
+
+    def _maybe_release(self, sched, target):
+        """Forecast-driven RELEASE: the estimator went cold (past the
+        hysteresis hold), so an idle priority TP island is dissolved to
+        give its engines back to DP throughput — the inner policy would
+        hold it warm forever (stickiness), which is right reactively
+        but wrong when the forecast knows the next burst is a predicted
+        onset away (the pre-bind will re-carve it in time)."""
+        if target != sched.layout:
+            return target      # never second-guess an inner transition
+        if not any(t in self.tiers for t in self.priority_tiers):
+            return target      # no priority traffic ever observed
+        live = sched.running + sched.waiting + list(sched.paused)
+        if not live and not sched.pool.peek_arrived(sched.now):
+            # fully idle fleet: keeping the island is free, and the
+            # inner policy's idle-time wide pre-bind must not be fought
+            return target
+        occ: set = set()
+        for r in live:
+            if r.engine_group >= 0:
+                isl = target.island_of(r.engine_group)
+                lead, gm = isl.group_of(r.engine_group)[:2]
+                occ.update(range(lead, lead + gm))
+        for isl in target.islands:
+            if isl.merge >= 2 and isl.sp == 1 \
+                    and not occ.intersection(isl.engines()):
+                self.stats["releases"] += 1
+                return target.carve(isl.start, isl.n_engines, 1)
+        return target
+
+    def decide(self, sched) -> FleetLayout:
+        target = self.inner.decide(sched)
+        now = sched.now
+        if not self.inner.islands:
+            return target
+        if not self._want_bind(now):
+            return self._maybe_release(sched, target)
+        m = self._bind_merge(sched)
+        out = target
+        if not self._has_island(target, m):
+            # carve INTO the reactive target (not the current layout):
+            # if UC1 queue pressure just dissolved the fleet, the
+            # pre-bind rides on top of the dissolve, not against it
+            out = self.inner._bind_island(sched, m, base=target)
+            if out != target:
+                self.stats["forecast_binds"] += 1
+        if self._has_island(out, m) \
+                and not self._has_island(sched.layout, m) \
+                and not self._priority_live(sched):
+            # the payoff case: the fleet gains a priority-capable
+            # island while NO priority request exists yet — the next
+            # burst lands warm (whether the forecast carved it or
+            # adopted the inner policy's wide target at the wake tick)
+            self.stats["prebinds"] += 1
+        return out

@@ -392,67 +392,99 @@ class DynamicScheduler:
 
     def run(self, until_drained: bool = True, max_steps: int = 2_000_000,
             t_end: Optional[float] = None) -> None:
-        steps = 0
+        """Offline driver: tick until drained (or ``t_end``). The
+        per-tick machinery lives in ``step`` + ``idle_advance`` so
+        other drivers (the §D11 front door, the §D13 async serve loop)
+        reuse exactly the same engine; this loop only sequences them.
+        Exhausting ``max_steps`` with work still live raises
+        ``SchedulerWedged`` (with the full diagnostic) — the cap is a
+        livelock backstop, and hitting it is never a clean drain."""
         seen_wedges: set = set()
-        while steps < max_steps:
-            steps += 1
+        for _ in range(max_steps):
             progressed = self.step()
             if t_end is not None and self.now >= t_end:
                 break
-            if not progressed:
-                nxt = self.pool.next_arrival()
-                if nxt is None:
-                    if not (self.waiting or self.running or self.paused):
-                        break
-                    if not until_drained:
-                        break  # caller accepts undrained work
-                    if self._seized:
-                        # a scripted pool seizure still holds blocks: a
-                        # starved fleet here is the fault, not a wedge —
-                        # idle the tick clock forward until the window
-                        # closes and the blocks come back
-                        continue
-                    # cycle guard: two paused requests whose resume
-                    # carves conflict can ping-pong (each forced resume
-                    # re-pauses the other). Revisiting an already-seen
-                    # (paused set, layout) state means no net progress —
-                    # raise instead of livelocking to max_steps.
-                    state = (frozenset(r.req_id for r in self.paused),
-                             self.layout.shapes())
-                    if state in seen_wedges:
-                        raise SchedulerWedged(
-                            f"scheduler wedged in a resume cycle: "
-                            f"{len(self.paused)} paused requests' carves "
-                            f"conflict (layout {self.layout.describe()})",
-                            self._diagnostic())
-                    seen_wedges.add(state)
-                    # nothing runnable but work exists: a paused request
-                    # can be stranded when its opportunistic resume stays
-                    # blocked forever (e.g. no future arrivals ever make
-                    # the busy-island gate open). Force the minimal
-                    # resume transition directly; if even that cannot
-                    # make progress the scheduler is genuinely wedged —
-                    # surface it instead of silently returning with
-                    # requests stranded in 'paused'.
-                    forced = False
-                    for r in list(self.paused):
-                        if self._transition(self._resume_layout(r)) \
-                                and r not in self.paused:
-                            forced = True
-                            break
-                    if not forced:
-                        raise SchedulerWedged(
-                            f"scheduler wedged with no runnable work: "
-                            f"{len(self.waiting)} waiting, "
-                            f"{len(self.running)} running, "
-                            f"{len(self.paused)} paused "
-                            f"(layout {self.layout.describe()})",
-                            self._diagnostic())
-                    continue
-                self.now = max(self.now, nxt)
-        # async backends: surface in-flight generated tokens (the only
-        # other drain points are rebind safe boundaries, handled by the
-        # backend itself)
+            if not progressed and not self.idle_advance(
+                    seen_wedges, until_drained=until_drained):
+                break
+        else:
+            raise SchedulerWedged(
+                f"scheduler exhausted max_steps={max_steps} with work "
+                f"still live: {len(self.waiting)} waiting, "
+                f"{len(self.running)} running, {len(self.paused)} "
+                f"paused (layout {self.layout.describe()})",
+                self._diagnostic())
+        self.drain_backend()
+
+    def idle_advance(self, seen_wedges: Optional[set] = None,
+                     until_drained: bool = True) -> bool:
+        """One no-progress transition — the reusable half of the old
+        ``run`` loop: advance the clock to the next arrival, idle
+        through scripted pool-seizure windows, force-resume stranded
+        paused requests, or raise ``SchedulerWedged``. Returns False
+        when there is nothing left to drive (fully drained, or the
+        caller accepts undrained work); True means "tick again".
+        ``seen_wedges`` carries the resume-cycle guard state across
+        calls (pass the same set for the whole drive)."""
+        nxt = self.pool.next_arrival()
+        if nxt is not None:
+            self.now = max(self.now, nxt)
+            return True
+        if not (self.waiting or self.running or self.paused):
+            return False
+        if not until_drained:
+            return False  # caller accepts undrained work
+        if self._seized:
+            # a scripted pool seizure still holds blocks: a starved
+            # fleet here is the fault, not a wedge — idle the tick
+            # clock forward until the window closes and the blocks
+            # come back
+            return True
+        # cycle guard: two paused requests whose resume carves conflict
+        # can ping-pong (each forced resume re-pauses the other).
+        # Revisiting an already-seen (paused set, layout) state means
+        # no net progress — raise instead of livelocking to max_steps.
+        if seen_wedges is not None:
+            state = (frozenset(r.req_id for r in self.paused),
+                     self.layout.shapes())
+            if state in seen_wedges:
+                raise SchedulerWedged(
+                    f"scheduler wedged in a resume cycle: "
+                    f"{len(self.paused)} paused requests' carves "
+                    f"conflict (layout {self.layout.describe()})",
+                    self._diagnostic())
+            seen_wedges.add(state)
+        # nothing runnable but work exists: a paused request can be
+        # stranded when its opportunistic resume stays blocked forever
+        # (e.g. no future arrivals ever make the busy-island gate
+        # open). Force the minimal resume transition directly; if even
+        # that cannot make progress the scheduler is genuinely wedged —
+        # surface it instead of silently returning with requests
+        # stranded in 'paused'.
+        if not self.force_resume():
+            raise SchedulerWedged(
+                f"scheduler wedged with no runnable work: "
+                f"{len(self.waiting)} waiting, "
+                f"{len(self.running)} running, "
+                f"{len(self.paused)} paused "
+                f"(layout {self.layout.describe()})",
+                self._diagnostic())
+        return True
+
+    def force_resume(self) -> bool:
+        """Force the minimal resume transition for one stranded paused
+        request. Returns True when a request actually left the paused
+        set (progress)."""
+        for r in list(self.paused):
+            if self._transition(self._resume_layout(r)) \
+                    and r not in self.paused:
+                return True
+        return False
+
+    def drain_backend(self) -> None:
+        """Surface in-flight generated tokens from async backends (the
+        only other drain points are rebind safe boundaries, handled by
+        the backend itself)."""
         drain = getattr(self.backend, "drain", None)
         if drain is not None:
             drain()

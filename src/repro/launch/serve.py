@@ -1,73 +1,157 @@
 """Serving launcher.
 
-Two modes:
+Modes:
   --sim  (default): full-scale discrete-event run on the roofline cost
          model — the production mesh geometry, any arch, paper workloads.
   --real: actual execution of reduced configs on local devices (set
          XLA_FLAGS=--xla_force_host_platform_device_count=8 to emulate a
          small fleet on CPU).
+  --serve: boot the §D13 async serving core — the OpenAI-style HTTP/SSE
+         endpoint (`serving/server.py`) over the event-driven
+         continuous-batching loop — instead of replaying a trace.
 
-Examples:
+Every knob lives on the :class:`ServeConfig` dataclass and can come
+from a JSON file (``--config serve.json``) with CLI flags as overrides,
+so deployments pin a config artifact and experiments tweak one flag at
+a time:
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
       --requests 500 --strategy hard
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
-      python -m repro.launch.serve --arch llama3-8b --real --requests 12
+  PYTHONPATH=src python -m repro.launch.serve --config serve.json \
+      --rate 20
+  PYTHONPATH=src python -m repro.launch.serve --serve --port 8000 \
+      --frontdoor --forecast
+  curl -N localhost:8000/v1/completions -d \
+      '{"prompt": "hello", "max_tokens": 16, "stream": true}'
 """
 from __future__ import annotations
 
 import argparse
 import copy
+import json
+from dataclasses import dataclass, field, fields, replace
+from typing import Tuple
 
 
-def main():
+@dataclass
+class ServeConfig:
+    """Every launcher knob in one place (§D13 satellite: the flag set
+    had outgrown argparse). JSON-loadable; unknown keys are errors so a
+    typo'd config fails loudly, not silently as a default."""
+    arch: str = "llama3-8b"                  # model config name
+    real: bool = False                       # real engine vs sim backend
+    requests: int = 500                      # trace length (offline)
+    strategy: str = "hard"                   # hard|soft|sequential|live
+    fixed_merge: int = 0                     # pin the mode; 0 = dynamic
+    switch: str = "flying"                   # flying|restart|none
+    priority_frac: float = 0.0
+    prefix_cache: bool = False               # §D10 content-addressed KV
+    prefix_pool: int = 4
+    prefix_hit: float = 0.6
+    seed: int = 0
+    fault: Tuple[str, ...] = field(default_factory=tuple)
+    # front door (§D11)
+    frontdoor: bool = False
+    no_shed: bool = False
+    queue_cap: int = 512
+    ttft_deadline: float = 0.0               # priority TTFT SLO (0=none)
+    tpot_deadline: float = 0.0               # priority TPOT SLO (0=none)
+    arrival: str = "phased"                  # phased|poisson|bursty
+    rate: float = 10.0
+    background_frac: float = 0.0
+    cancel_frac: float = 0.0
+    diagnostic: str = ""                     # diagnostic JSON path
+    # async serving core (§D13)
+    serve: bool = False                      # boot the HTTP server
+    host: str = "127.0.0.1"
+    port: int = 8000
+    pace: str = "wall"                       # wall|virtual serve clock
+    forecast: bool = False                   # predictive rebind policy
+    stream_buf: int = 256                    # per-stream token buffer
+    wall_dilation: float = 1.0               # virtual s per wall s
+    metrics_window: float = 60.0             # rolling /metrics window
+
+    _CHOICES = {"strategy": ("hard", "soft", "sequential", "live"),
+                "switch": ("flying", "restart", "none"),
+                "arrival": ("phased", "poisson", "bursty"),
+                "pace": ("wall", "virtual")}
+
+    @classmethod
+    def load(cls, path: str) -> "ServeConfig":
+        with open(path) as f:
+            raw = json.load(f)
+        known = {f.name for f in fields(cls)}
+        bad = set(raw) - known
+        if bad:
+            raise SystemExit(f"unknown config keys in {path}: "
+                             f"{sorted(bad)}")
+        if "fault" in raw:
+            raw["fault"] = tuple(raw["fault"])
+        cfg = cls(**raw)
+        cfg.validate()
+        return cfg
+
+    def validate(self) -> None:
+        for name, opts in self._CHOICES.items():
+            v = getattr(self, name)
+            if v not in opts:
+                raise SystemExit(f"config: {name}={v!r} not in {opts}")
+
+    def policy(self):
+        """The layout policy this config asks for (None = pinned)."""
+        from repro.core.policy import FlyingPolicy, ForecastPolicy
+        if self.fixed_merge:
+            return None
+        inner = FlyingPolicy()
+        return ForecastPolicy(inner=inner) if self.forecast else inner
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    """argparse view over ServeConfig: every field is a flag whose
+    DEFAULT is the `unset` sentinel, so only flags the user actually
+    passed override a --config file."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--real", action="store_true")
-    ap.add_argument("--requests", type=int, default=500)
-    ap.add_argument("--strategy", default="hard",
-                    choices=["hard", "soft", "sequential", "live"])
-    ap.add_argument("--fixed-merge", type=int, default=0,
-                    help="pin the mode (static baseline); 0 = dynamic")
-    ap.add_argument("--switch", default="flying",
-                    choices=["flying", "restart", "none"])
-    ap.add_argument("--priority-frac", type=float, default=0.0)
-    ap.add_argument("--prefix-cache", action="store_true",
-                    help="content-addressed KV prefix sharing (§D10)")
-    ap.add_argument("--prefix-pool", type=int, default=4,
-                    help="distinct shared system prompts in the workload")
-    ap.add_argument("--prefix-hit", type=float, default=0.6,
-                    help="fraction of requests drawing a pool prefix")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--fault", action="append", default=[],
-                    metavar="KIND@TICK[:eng,eng...]",
-                    help="scripted fault, e.g. kill@40:3 stall@20:0,1 "
-                         "rebind_fail@10 pool_exhaust@30:2 (repeatable)")
-    # front door (§D11): continuous admission, SLO deadlines, shedding
-    ap.add_argument("--frontdoor", action="store_true",
-                    help="serve through the §D11 front door (lifecycle "
-                         "states, deadlines, tiered shedding, drain)")
-    ap.add_argument("--no-shed", action="store_true",
-                    help="disable overload protection (baseline mode)")
-    ap.add_argument("--queue-cap", type=int, default=512)
-    ap.add_argument("--ttft-deadline", type=float, default=0.0,
-                    help="priority-tier TTFT SLO in seconds (0 = none)")
-    ap.add_argument("--tpot-deadline", type=float, default=0.0,
-                    help="priority-tier TPOT SLO in seconds (0 = none)")
-    ap.add_argument("--arrival", default="phased",
-                    choices=["phased", "poisson", "bursty"])
-    ap.add_argument("--rate", type=float, default=10.0,
-                    help="arrival rate (req/s) for poisson/bursty")
-    ap.add_argument("--background-frac", type=float, default=0.0,
-                    help="fraction of traffic in the sheddable tier")
-    ap.add_argument("--cancel-frac", type=float, default=0.0,
-                    help="fraction of requests with scripted cancels")
-    ap.add_argument("--diagnostic", default="",
-                    metavar="PATH",
-                    help="write the structured SchedulerDiagnostic "
-                         "JSON here on shutdown AND on a wedge")
-    args = ap.parse_args()
+    ap.add_argument("--config", default="", metavar="serve.json",
+                    help="load a ServeConfig JSON; flags override it")
+    for f in fields(ServeConfig):
+        flag = "--" + f.name.replace("_", "-")
+        if f.name == "fault":
+            ap.add_argument("--fault", action="append", default=None,
+                            metavar="KIND@TICK[:eng,eng...]",
+                            help="scripted fault, e.g. kill@40:3 "
+                                 "(repeatable)")
+        elif f.type == "bool" or f.default is False:
+            ap.add_argument(flag, action="store_true", default=None)
+        else:
+            ap.add_argument(flag, type=type(f.default), default=None,
+                            choices=ServeConfig._CHOICES.get(f.name))
+    return ap
 
+
+def parse_config(argv=None) -> ServeConfig:
+    args = _build_parser().parse_args(argv)
+    cfg = ServeConfig.load(args.config) if args.config else ServeConfig()
+    over = {f.name: getattr(args, f.name) for f in fields(ServeConfig)
+            if getattr(args, f.name) is not None}
+    if "fault" in over:
+        over["fault"] = tuple(over["fault"])
+    cfg = replace(cfg, **over)
+    cfg.validate()
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# stack construction
+# ---------------------------------------------------------------------------
+
+def build_stack(cfg: ServeConfig):
+    """Scheduler + workload spec for this config (sim or real)."""
+    from repro.configs import get_config
     from repro.core.faults import FaultInjector, FaultSpec
+    from repro.core.kv_adaptor import PoolGeometry
+    from repro.core.modes import ParallelPlan
+    from repro.core.scheduler import DynamicScheduler, SchedulerConfig
+    from repro.serving.workload import WorkloadSpec
 
     def parse_fault(s: str) -> FaultSpec:
         kind, _, rest = s.partition("@")
@@ -75,18 +159,10 @@ def main():
         engines = tuple(int(e) for e in engs.split(",")) if engs else ()
         return FaultSpec(kind=kind, tick=int(tick), engines=engines)
 
-    injector = FaultInjector([parse_fault(s) for s in args.fault]) \
-        if args.fault else None
+    injector = FaultInjector([parse_fault(s) for s in cfg.fault]) \
+        if cfg.fault else None
 
-    from repro.configs import get_config
-    from repro.core.kv_adaptor import PoolGeometry
-    from repro.core.modes import ParallelPlan
-    from repro.core.policy import FlyingPolicy
-    from repro.core.scheduler import DynamicScheduler, SchedulerConfig
-    from repro.serving.metrics import summarize
-    from repro.serving.workload import WorkloadSpec, generate
-
-    if args.real:
+    if cfg.real:
         import jax
         import jax.numpy as jnp
         from repro.core.engine import FlyingEngine
@@ -94,91 +170,143 @@ def main():
         n = len(jax.devices())
         assert n >= 4, "run with XLA_FLAGS=--xla_force_host_platform" \
                        "_device_count=8 for a local fleet"
-        cfg = get_config(args.arch).reduced()
+        mcfg = get_config(cfg.arch).reduced()
         plan = ParallelPlan(engine_rows=1, tp_base=2, data_rows=n // 2)
-        geom = PoolGeometry(cfg, plan, num_blocks=64, block_base=4)
-        model = build_model(cfg, jnp.float32)
+        geom = PoolGeometry(mcfg, plan, num_blocks=64, block_base=4)
+        model = build_model(mcfg, jnp.float32)
         params = model.init(jax.random.key(0))
         backend = FlyingEngine(model, plan, geom, params,
                                batch_per_engine=2, prefill_len=8,
                                injector=injector)
         sched = DynamicScheduler(
             plan, geom, backend,
-            SchedulerConfig(strategy=args.strategy, max_batch_per_group=2,
+            SchedulerConfig(strategy=cfg.strategy, max_batch_per_group=2,
                             prefill_chunk=8,
-                            prefix_cache=args.prefix_cache,
-                            fixed_merge=args.fixed_merge or None),
-            policy=None if args.fixed_merge else FlyingPolicy())
-        # (the scheduler adopts the engine's adaptors automatically)
-        if args.fixed_merge and args.fixed_merge != 1:
+                            prefix_cache=cfg.prefix_cache,
+                            fixed_merge=cfg.fixed_merge or None),
+            policy=cfg.policy())
+        if cfg.fixed_merge and cfg.fixed_merge != 1:
             # static baseline: bind the engine (and shared adaptors) to
             # the pinned mode once at startup — the scheduler never
             # issues a transition for fixed_merge runs
-            backend.switch(1, args.fixed_merge)
-        spec = WorkloadSpec(n_requests=args.requests, seed=args.seed,
+            backend.switch(1, cfg.fixed_merge)
+        spec = WorkloadSpec(n_requests=cfg.requests, seed=cfg.seed,
                             prompt_range=(8, 8), output_range=(4, 8),
                             low_rate=(20, 50), burst_rate=(100, 200),
                             phase_seconds=0.5,
-                            priority_frac=args.priority_frac)
-        if args.prefix_cache:
-            spec.prefix_pool = args.prefix_pool
-            spec.prefix_hit = args.prefix_hit
+                            priority_frac=cfg.priority_frac)
+        if cfg.prefix_cache:
+            spec.prefix_pool = cfg.prefix_pool
+            spec.prefix_hit = cfg.prefix_hit
             spec.prefix_range = (4, 8)
     else:
-        cfg = get_config(args.arch)
-        plan = ParallelPlan(engine_rows=cfg.engine_rows, tp_base=16,
+        mcfg = get_config(cfg.arch)
+        plan = ParallelPlan(engine_rows=mcfg.engine_rows, tp_base=16,
                             data_rows=16)
         from repro.serving.simulator import CostModel, SimBackend
-        kv_per_tok = cfg.kv_cache_dims_per_token * cfg.num_layers * 2 \
+        kv_per_tok = mcfg.kv_cache_dims_per_token * mcfg.num_layers * 2 \
             / (plan.engine_rows * plan.tp_base)
-        budget = 16e9 - cfg.num_params() * 2 / (plan.engine_rows * 16) - 2e9
+        budget = 16e9 - mcfg.num_params() * 2 / (plan.engine_rows * 16) \
+            - 2e9
         blocks = max(int(budget / max(kv_per_tok, 1) / 16), 1024)
-        geom = PoolGeometry(cfg, plan, num_blocks=blocks, block_base=16)
-        backend = SimBackend(CostModel(cfg, plan), switch_mode=args.switch,
-                             injector=injector)
+        geom = PoolGeometry(mcfg, plan, num_blocks=blocks, block_base=16)
+        backend = SimBackend(CostModel(mcfg, plan),
+                             switch_mode=cfg.switch, injector=injector)
         sched = DynamicScheduler(
             plan, geom, backend,
-            SchedulerConfig(strategy=args.strategy,
-                            prefix_cache=args.prefix_cache,
-                            fixed_merge=args.fixed_merge or None),
-            policy=None if args.fixed_merge else FlyingPolicy())
-        spec = WorkloadSpec(n_requests=args.requests, seed=args.seed,
+            SchedulerConfig(strategy=cfg.strategy,
+                            prefix_cache=cfg.prefix_cache,
+                            fixed_merge=cfg.fixed_merge or None),
+            policy=cfg.policy())
+        spec = WorkloadSpec(n_requests=cfg.requests, seed=cfg.seed,
                             phase_seconds=30.0,
-                            priority_frac=args.priority_frac)
-        if args.prefix_cache:
-            spec.prefix_pool = args.prefix_pool
-            spec.prefix_hit = args.prefix_hit
+                            priority_frac=cfg.priority_frac)
+        if cfg.prefix_cache:
+            spec.prefix_pool = cfg.prefix_pool
+            spec.prefix_hit = cfg.prefix_hit
             spec.prefix_range = (512, 2048)
 
-    spec.arrival = args.arrival
-    spec.rate = args.rate
-    spec.background_frac = args.background_frac
-    spec.cancel_frac = args.cancel_frac
+    spec.arrival = cfg.arrival
+    spec.rate = cfg.rate
+    spec.background_frac = cfg.background_frac
+    spec.cancel_frac = cfg.cancel_frac
+    return sched, spec, injector
 
-    import json
 
+def build_door(cfg: ServeConfig, sched):
+    from repro.serving.frontdoor import (FrontDoor, FrontDoorConfig,
+                                         SLOClass)
+    tiers = (SLOClass("priority", priority=1,
+                      deadline_ttft=cfg.ttft_deadline or None,
+                      deadline_tpot=cfg.tpot_deadline or None),
+             SLOClass("standard"),
+             SLOClass("background", sheddable=True))
+    return FrontDoor(sched, FrontDoorConfig(
+        queue_cap=cfg.queue_cap, shed=not cfg.no_shed,
+        enforce_deadlines=not cfg.no_shed, tiers=tiers))
+
+
+# ---------------------------------------------------------------------------
+# --serve: the always-on HTTP server
+# ---------------------------------------------------------------------------
+
+def serve_http(cfg: ServeConfig) -> None:
+    import asyncio
+
+    from repro.serving.asyncloop import AsyncServeLoop
+    from repro.serving.metrics import RollingTierMetrics
+    from repro.serving.server import ServeHTTP
+
+    sched, _spec, _inj = build_stack(cfg)
+    door = build_door(cfg, sched)
+    loop = AsyncServeLoop(
+        door, pace=cfg.pace, stream_buf=cfg.stream_buf,
+        wall_dilation=cfg.wall_dilation,
+        rolling=RollingTierMetrics(window_s=cfg.metrics_window))
+
+    async def main():
+        srv = await ServeHTTP(loop).start(cfg.host, cfg.port)
+        print(f"serving on http://{cfg.host}:{srv.port}  "
+              f"(pace={cfg.pace}, forecast={cfg.forecast}, "
+              f"arch={cfg.arch}, backend="
+              f"{'real' if cfg.real else 'sim'})")
+        print("  POST /v1/completions | /v1/chat/completions   "
+              "GET /metrics /healthz")
+        try:
+            await srv.serve_forever()
+        except asyncio.CancelledError:
+            pass
+        finally:
+            await srv.stop()
+            door.shutdown(cfg.diagnostic or None)
+
+    try:
+        asyncio.run(main())
+    except KeyboardInterrupt:
+        print("\nshutdown")
+
+
+# ---------------------------------------------------------------------------
+# offline trace replay (the original mode)
+# ---------------------------------------------------------------------------
+
+def run_offline(cfg: ServeConfig) -> None:
     from repro.core.scheduler import SchedulerWedged
+    from repro.serving.metrics import summarize, tier_report
+    from repro.serving.workload import generate
+
+    sched, spec, injector = build_stack(cfg)
 
     def write_diag(diag: dict):
-        if args.diagnostic:
-            with open(args.diagnostic, "w") as f:
+        if cfg.diagnostic:
+            with open(cfg.diagnostic, "w") as f:
                 json.dump(diag, f, indent=2, sort_keys=True, default=str)
                 f.write("\n")
-            print(f"  diagnostic    : {args.diagnostic}")
+            print(f"  diagnostic    : {cfg.diagnostic}")
 
     frontdoor = None
-    if args.frontdoor:
-        from repro.serving.frontdoor import (FrontDoor, FrontDoorConfig,
-                                             SLOClass)
-        from repro.serving.metrics import tier_report
-        tiers = (SLOClass("priority", priority=1,
-                          deadline_ttft=args.ttft_deadline or None,
-                          deadline_tpot=args.tpot_deadline or None),
-                 SLOClass("standard"),
-                 SLOClass("background", sheddable=True))
-        frontdoor = FrontDoor(sched, FrontDoorConfig(
-            queue_cap=args.queue_cap, shed=not args.no_shed,
-            enforce_deadlines=not args.no_shed, tiers=tiers))
+    if cfg.frontdoor:
+        frontdoor = build_door(cfg, sched)
         try:
             for r in generate(spec):
                 frontdoor.submit(copy.deepcopy(r))
@@ -198,9 +326,10 @@ def main():
                        if w.diagnostic is not None else {})
             raise
     m = summarize(sched.pool.all.values())
-    print(f"arch={args.arch} strategy={args.strategy} "
-          f"fixed_merge={args.fixed_merge or 'dynamic'}")
-    print(f"  requests done : {sum(1 for r in sched.pool.all.values() if r.state == 'done')}"
+    print(f"arch={cfg.arch} strategy={cfg.strategy} "
+          f"fixed_merge={cfg.fixed_merge or 'dynamic'}")
+    print(f"  requests done : "
+          f"{sum(1 for r in sched.pool.all.values() if r.state == 'done')}"
           f"/{len(sched.pool.all)}")
     print(f"  mean TTFT     : {m.mean_ttft * 1e3:9.1f} ms")
     print(f"  P90 TTFT      : {m.p90_ttft * 1e3:9.1f} ms")
@@ -209,7 +338,7 @@ def main():
     print(f"  peak tput     : {m.peak_throughput:9.0f} tok/s")
     print(f"  mode switches : {sched.switches}")
     print(f"  preempts      : {sched.preempt_stats}")
-    if args.prefix_cache and sched.prefix_cache is not None:
+    if cfg.prefix_cache and sched.prefix_cache is not None:
         s = sched.prefix_cache.stats
         tot = s["hit_requests"] + s["miss_requests"]
         print(f"  prefix cache  : {s['hit_requests']}/{tot} hits "
@@ -219,9 +348,10 @@ def main():
     if injector is not None or sched.quarantined or sched.incidents:
         print(f"  quarantined   : {sorted(sched.quarantined)}")
         print(f"  recovered     : {sched.preempt_stats['recovered']} reqs, "
-              f"{sched.preempt_stats['recomputed_tokens']} tokens recomputed")
-        print(f"  degraded ticks: {sched.preempt_stats['degraded_ticks']}  "
-              f"rollbacks: {sched.preempt_stats['rollbacks']}")
+              f"{sched.preempt_stats['recomputed_tokens']} tokens "
+              f"recomputed")
+        print(f"  degraded ticks: {sched.preempt_stats['degraded_ticks']}"
+              f"  rollbacks: {sched.preempt_stats['rollbacks']}")
         for inc in sched.incidents:
             extra = {k: v for k, v in inc.items()
                      if k not in ("t", "tick", "kind", "snapshot")}
@@ -238,12 +368,20 @@ def main():
                   f"goodput={row['goodput']:.2f}")
         # graceful drain: admission is already empty here, so this just
         # emits the structured shutdown artifact
-        diag = frontdoor.shutdown(args.diagnostic or None)
-        if args.diagnostic:
-            print(f"  diagnostic    : {args.diagnostic}")
+        diag = frontdoor.shutdown(cfg.diagnostic or None)
+        if cfg.diagnostic:
+            print(f"  diagnostic    : {cfg.diagnostic}")
         del diag
-    elif args.diagnostic:
+    elif cfg.diagnostic:
         write_diag(sched._diagnostic().to_dict())
+
+
+def main(argv=None):
+    cfg = parse_config(argv)
+    if cfg.serve:
+        serve_http(cfg)
+    else:
+        run_offline(cfg)
 
 
 if __name__ == "__main__":

@@ -32,6 +32,7 @@ never a ``SchedulerWedged`` from resource exhaustion.
 """
 from __future__ import annotations
 
+import heapq
 import json
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -105,6 +106,15 @@ class FrontDoor:
         self.reject_reasons: Dict[str, str] = {}
         self.counters = {"submitted": 0, "admitted": 0, "rejected": 0}
         self._admission_open = True
+        self._idle_spins = 0
+        # arrival observation (§D13): a min-heap of accepted requests
+        # keyed by arrival time, drained into the forecasting policy's
+        # ``observe`` as the virtual clock reaches each timestamp —
+        # never at submit time, or an offline trace (every request
+        # submitted up front with future timestamps) would leak the
+        # future into the forecast.
+        self._observe_q: List[Tuple[float, int, Request]] = []
+        self._observe_n = 0
         # admitted-context ceiling in tokens: the fleet's free pool at
         # construction (blocks x block capacity), scaled
         self._fleet_tokens = sum(a.free_blocks() * a.capacity
@@ -128,6 +138,13 @@ class FrontDoor:
             req.deadline_tpot = slo.deadline_tpot
         self.requests[req.req_id] = req
         self.counters["submitted"] += 1
+        if getattr(getattr(self.sched, "policy", None),
+                   "observe", None) is not None:
+            # offered load, not admitted load: the forecast models the
+            # arrival process itself, so shed/rejected requests count
+            self._observe_n += 1
+            heapq.heappush(self._observe_q,
+                           (req.arrival, self._observe_n, req))
         if not self._admission_open:
             return self._reject(req, "draining")
         if self._kv_never_fits(req):
@@ -211,6 +228,20 @@ class FrontDoor:
         if r.prefilled > 0:
             return PREFILL
         return ADMITTED
+
+    def _observe_arrivals(self) -> None:
+        """Feed newly-arrived requests to a forecasting policy (§D13:
+        ``ForecastPolicy.observe``). Each request is observed exactly
+        once, at the first tick whose clock covers its arrival — the
+        same information a live front door would have."""
+        observe = getattr(getattr(self.sched, "policy", None),
+                          "observe", None)
+        if observe is None or not self._observe_q:
+            return
+        now = self.sched.now
+        while self._observe_q and self._observe_q[0][0] <= now:
+            t, _, r = heapq.heappop(self._observe_q)
+            observe(t, r.tier, r.total_context())
 
     # -- admission + shedding ------------------------------------------
     def _arrived(self) -> List[Request]:
@@ -336,14 +367,23 @@ class FrontDoor:
     # -- drive ---------------------------------------------------------
     def _next_event(self) -> Optional[float]:
         """Earliest future timestamp the loop must reach while idle:
-        queue arrivals, scheduler-pool arrivals, scripted cancels, and
+        queue arrivals, scheduler-pool arrivals, scripted cancels,
         pending TTFT expiries (an expiry IS an event — it frees the
-        slot a blocked admission waits on)."""
+        slot a blocked admission waits on), and a forecasting policy's
+        next scheduled action (§D13: a pre-bind AHEAD of a predicted
+        burst must fire while the fleet is idle — exactly when no other
+        event would wake the loop)."""
         now = self.sched.now
         cands: List[float] = []
         nxt = self.sched.pool.next_arrival()
         if nxt is not None:
             cands.append(nxt)
+        hook = getattr(getattr(self.sched, "policy", None),
+                       "next_action_t", None)
+        if hook is not None:
+            t = hook(now)
+            if t is not None:
+                cands.append(t)
         for r in self._queue:
             if r.arrival > now:
                 cands.append(r.arrival)
@@ -358,58 +398,81 @@ class FrontDoor:
         future = [c for c in cands if c > now + 1e-12]
         return min(future) if future else None
 
+    def tick(self) -> bool:
+        """One continuous-batching iteration — the unit every driver
+        (offline ``run`` below, the §D13 ``AsyncServeLoop``) repeats:
+        lifecycle sweep (scripted cancels, deadline expiry), admission
+        from the bounded queue, one scheduler step, then a second sweep
+        so tokens produced THIS tick are judged against their deadlines
+        before the next tick's admissions. Returns whether the
+        scheduler made progress."""
+        self._observe_arrivals()
+        self._sweep()
+        self._admit()
+        progressed = self.sched.step()
+        self._sweep()
+        return progressed
+
+    def idle_advance(self) -> bool:
+        """No-progress transition for one tick: advance the virtual
+        clock to the next event (arrival, scripted cancel, pending
+        TTFT expiry, forecast pre-bind), force-resume stranded paused
+        requests, or raise the structured wedge after 64 fruitless
+        spins. Returns False when fully drained."""
+        sched = self.sched
+        nxt = self._next_event()
+        if sched.waiting or sched.running or sched.paused:
+            if sched._seized:
+                self._idle_spins = 0
+                return True       # scripted pool fault window: tick on
+            if sched.force_resume():
+                self._idle_spins = 0
+                return True
+            if nxt is not None:
+                sched.now = max(sched.now, nxt)
+                return True
+            self._idle_spins += 1
+            if self._idle_spins > 64:
+                raise SchedulerWedged(
+                    f"front door wedged: {len(sched.waiting)} "
+                    f"waiting, {len(sched.running)} running, "
+                    f"{len(sched.paused)} paused and no future "
+                    f"event (layout {sched.layout.describe()})",
+                    sched._diagnostic())
+            return True
+        if nxt is None:
+            return False          # fully drained
+        sched.now = max(sched.now, nxt)
+        return True
+
     def run(self, max_steps: int = 2_000_000,
             t_end: Optional[float] = None) -> None:
         """Serve until everything submitted reached a terminal state
         (or ``t_end``). Mirrors ``DynamicScheduler.run``'s idle logic —
         forced resume for stranded paused requests, structured wedge
         when nothing can progress — with the lifecycle sweep and
-        admission control folded into every tick."""
+        admission control folded into every tick. Exhausting
+        ``max_steps`` with live work raises ``SchedulerWedged`` (the
+        cap is a livelock backstop, never a clean exit)."""
         sched = self.sched
-        steps = 0
-        idle_spins = 0
-        while steps < max_steps:
-            steps += 1
-            self._sweep()
-            self._admit()
-            progressed = sched.step()
-            self._sweep()
+        self._idle_spins = 0
+        for _ in range(max_steps):
+            progressed = self.tick()
             if t_end is not None and sched.now >= t_end:
                 break
             if progressed:
-                idle_spins = 0
+                self._idle_spins = 0
                 continue
-            nxt = self._next_event()
-            if sched.waiting or sched.running or sched.paused:
-                if sched._seized:
-                    continue      # scripted pool fault window: tick on
-                forced = False
-                for r in list(sched.paused):
-                    if sched._transition(sched._resume_layout(r)) \
-                            and r not in sched.paused:
-                        forced = True
-                        break
-                if forced:
-                    idle_spins = 0
-                    continue
-                if nxt is not None:
-                    sched.now = max(sched.now, nxt)
-                    continue
-                idle_spins += 1
-                if idle_spins > 64:
-                    raise SchedulerWedged(
-                        f"front door wedged: {len(sched.waiting)} "
-                        f"waiting, {len(sched.running)} running, "
-                        f"{len(sched.paused)} paused and no future "
-                        f"event (layout {sched.layout.describe()})",
-                        sched._diagnostic())
-                continue
-            if nxt is None:
-                break             # fully drained
-            sched.now = max(sched.now, nxt)
-        drain = getattr(sched.backend, "drain", None)
-        if drain is not None:
-            drain()
+            if not self.idle_advance():
+                break
+        else:
+            raise SchedulerWedged(
+                f"front door exhausted max_steps={max_steps} with work "
+                f"still live: {len(sched.waiting)} waiting, "
+                f"{len(sched.running)} running, {len(sched.paused)} "
+                f"paused (layout {sched.layout.describe()})",
+                sched._diagnostic())
+        sched.drain_backend()
 
     # -- graceful shutdown ---------------------------------------------
     def shutdown(self, path: Optional[str] = None,

@@ -120,3 +120,98 @@ def tier_report(reqs: Sequence[Request]) -> Dict[str, Dict]:
             "goodput": met / max(len(admitted), 1),
         }
     return out
+
+
+# ---------------------------------------------------------------------------
+# §D13: rolling metrics for the LIVE /metrics endpoint
+# ---------------------------------------------------------------------------
+
+class RollingTierMetrics:
+    """Sliding-window per-tier serving metrics for an always-on server.
+
+    ``tier_report`` above is an offline post-mortem over a finished
+    trace; a live endpoint needs the same percentiles over a *trailing
+    window* plus an instantaneous token rate, updated in O(1) amortized
+    per event.  The async serve loop feeds it two event streams:
+
+      * ``note_request(r)`` when a request reaches a terminal state
+        (window-evicted after ``window_s``), and
+      * ``note_tokens(t, tier, n)`` for streamed-token counts (one call
+        per tick per tier, pre-aggregated — not one per token).
+
+    Lifecycle counters are cumulative (a counter that silently forgot
+    aborts would hide a leak); latencies and rates are windowed.
+    """
+
+    def __init__(self, window_s: float = 60.0):
+        from collections import deque
+        self.window_s = window_s
+        self._done = {}      # tier -> deque[(finish_t, ttft, tpot, met)]
+        self._tokens = {}    # tier -> deque[(t, n)]
+        self.counters: Dict[str, Dict[str, int]] = {}
+        self._deque = deque
+
+    def _tier(self, store, tier):
+        d = store.get(tier)
+        if d is None:
+            d = store[tier] = self._deque()
+        return d
+
+    def _count(self, tier: str, key: str, n: int = 1) -> None:
+        c = self.counters.setdefault(tier, {})
+        c[key] = c.get(key, 0) + n
+
+    def _evict(self, d, now: float) -> None:
+        horizon = now - self.window_s
+        while d and d[0][0] < horizon:
+            d.popleft()
+
+    # ------------------------------------------------------------------
+    def note_request(self, r: Request) -> None:
+        """One request reaching a terminal lifecycle state."""
+        self._count(r.tier, r.state)
+        if r.admitted_t is not None:
+            self._count(r.tier, "admitted")
+        if r.state != "done" or r.first_token_t is None:
+            return
+        ttft = r.first_token_t - r.arrival
+        tpot = (r.finish_t - r.first_token_t) / max(r.generated - 1, 1) \
+            if r.generated > 1 else float("nan")
+        d = self._tier(self._done, r.tier)
+        d.append((r.finish_t, ttft, tpot, met_slo(r)))
+        self._evict(d, r.finish_t)
+
+    def note_tokens(self, t: float, tier: str, n: int = 1) -> None:
+        if n <= 0:
+            return
+        d = self._tier(self._tokens, tier)
+        d.append((t, n))
+        self._evict(d, t)
+
+    # ------------------------------------------------------------------
+    def report(self, now: float) -> Dict[str, Dict]:
+        """Per-tier window report, shaped like ``tier_report`` rows so
+        dashboards can consume either."""
+        out: Dict[str, Dict] = {}
+        tiers = set(self._done) | set(self._tokens) | set(self.counters)
+        for tier in sorted(tiers):
+            d = self._tier(self._done, tier)
+            self._evict(d, now)
+            ttft = [e[1] for e in d]
+            tpot = [e[2] for e in d if e[2] == e[2]]   # drop NaNs
+            tok = self._tier(self._tokens, tier)
+            self._evict(tok, now)
+            span = min(self.window_s, max(now - tok[0][0], 1e-9)) \
+                if tok else self.window_s
+            met = sum(1 for e in d if e[3])
+            row = {
+                "window_s": self.window_s,
+                "done_window": len(d),
+                "p50_ttft_s": _pct(ttft, 50), "p99_ttft_s": _pct(ttft, 99),
+                "p50_tpot_s": _pct(tpot, 50), "p99_tpot_s": _pct(tpot, 99),
+                "tok_per_s": sum(n for _, n in tok) / span,
+                "goodput_window": met / max(len(d), 1),
+            }
+            row.update(self.counters.get(tier, {}))
+            out[tier] = row
+        return out

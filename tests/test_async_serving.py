@@ -1,0 +1,487 @@
+"""Async serving core (§D13).
+
+The event-driven continuous-batching loop, the OpenAI-style HTTP/SSE
+endpoint, predictive fleet rebind, and the satellite regressions that
+ride with them:
+
+  - ``DynamicScheduler.run`` / ``FrontDoor.run`` raising the structured
+    ``SchedulerWedged`` on ``max_steps`` exhaustion (previously a
+    silent return-as-if-drained);
+  - slow-consumer backpressure: a stream nobody reads must fill its
+    BOUNDED queue, exit ABORTED through the normal lifecycle, release
+    every KV block (pool fingerprint vs an untouched scheduler), and
+    stall no other stream;
+  - stream/offline equivalence: the async path serves the same trace
+    to the same outcomes as offline ``FrontDoor.run``, and on a real
+    engine the streamed token ids are identical to what the offline
+    path reads back under greedy decoding;
+  - the HTTP server over a real socket: streaming completion, metrics,
+    disconnect-triggered abort;
+  - ``ForecastPolicy``: rate/periodicity learning, idle-time pre-bind
+    ahead of a scripted burst, hysteresis;
+  - ``ServeConfig``: JSON load + CLI override + unknown-key refusal.
+"""
+import asyncio
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.kv_adaptor import PoolGeometry, bind_fleet
+from repro.core.modes import FleetLayout, ParallelPlan
+from repro.core.policy import FlyingPolicy, ForecastPolicy, TierForecast
+from repro.core.scheduler import (LIVE, DynamicScheduler, SchedulerConfig,
+                                  SchedulerWedged)
+from repro.core.task_pool import TERMINAL_STATES, Request
+from repro.serving.asyncloop import AsyncServeLoop, synth_token
+from repro.serving.frontdoor import FrontDoor, FrontDoorConfig, SLOClass
+from repro.serving.loadgen import drive_http, drive_inprocess
+from repro.serving.metrics import RollingTierMetrics
+from repro.serving.server import ServeHTTP
+from repro.serving.simulator import CostModel, SimBackend
+from repro.serving.workload import WorkloadSpec, generate
+
+CFG = get_config("llama3-8b")
+PLAN = ParallelPlan(engine_rows=1, tp_base=16, data_rows=16)
+
+TIERS = (SLOClass("priority", priority=1),
+         SLOClass("standard"),
+         SLOClass("background", sheddable=True))
+
+
+def make_sched(blocks=40000, policy=None, strategy=LIVE):
+    geom = PoolGeometry(CFG, PLAN, num_blocks=blocks, block_base=16)
+    be = SimBackend(CostModel(CFG, PLAN), switch_mode="flying")
+    return DynamicScheduler(PLAN, geom, be,
+                            SchedulerConfig(strategy=strategy),
+                            policy=policy or FlyingPolicy())
+
+
+def make_loop(pace="virtual", stream_buf=256, policy=None, blocks=40000,
+              **door_kw):
+    sched = make_sched(blocks=blocks, policy=policy)
+    door = FrontDoor(sched, FrontDoorConfig(tiers=TIERS, **door_kw))
+    return AsyncServeLoop(door, pace=pace, stream_buf=stream_buf)
+
+
+def req(i, arrival=0.0, prompt=512, out=32, tier="standard", **kw):
+    return Request(req_id=f"r{i}", arrival=arrival, prompt_len=prompt,
+                   output_len=out, tier=tier, **kw)
+
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+# ---------------------------------------------------------------------------
+# satellite: max_steps exhaustion raises the structured wedge
+# ---------------------------------------------------------------------------
+
+def test_run_max_steps_exhaustion_raises_wedged():
+    """Hitting the step cap with work still live must raise — the old
+    behavior returned as if drained, silently swallowing the backlog."""
+    s = make_sched()
+    for i in range(8):
+        s.submit(req(i, prompt=2000, out=400))
+    with pytest.raises(SchedulerWedged) as exc:
+        s.run(max_steps=5)
+    assert "max_steps=5" in str(exc.value)
+    assert exc.value.diagnostic is not None
+    d = exc.value.diagnostic.to_dict()
+    assert len(d["running"]) + len(d["waiting"]) > 0
+
+
+def test_run_completes_below_cap_unchanged():
+    s = make_sched()
+    s.submit(req(0, out=16))
+    s.run(max_steps=2_000_000)
+    assert s.pool.all["r0"].state == "done"
+
+
+def test_frontdoor_run_max_steps_exhaustion_raises_wedged():
+    sched = make_sched()
+    fd = FrontDoor(sched, FrontDoorConfig(tiers=TIERS))
+    for i in range(8):
+        fd.submit(req(i, prompt=2000, out=400))
+    with pytest.raises(SchedulerWedged) as exc:
+        fd.run(max_steps=5)
+    assert "max_steps=5" in str(exc.value)
+
+
+# ---------------------------------------------------------------------------
+# satellite: slow-consumer backpressure
+# ---------------------------------------------------------------------------
+
+def _pool_fingerprint(s):
+    """Canonical allocator state (PR 8's conservation check): rebind to
+    uniform(1), flush parked refcount-0 cached blocks, snapshot."""
+    bind_fleet(s.adaptors, FleetLayout.uniform(PLAN, 1))
+    for ad in s.adaptors:
+        taken = ad.seize(-1)
+        ad.restore(taken)
+    fp = []
+    for ad in s.adaptors:
+        assert set(ad.free) >= ad._free_set
+        fp.append((set(ad._free_set), dict(ad._evict_pool),
+                   dict(ad.table)))
+    return fp
+
+
+def test_slow_consumer_fills_bounded_queue_and_aborts():
+    """A client that stops reading its SSE stream: the bounded queue
+    fills, the request exits ABORTED through the lifecycle, its KV is
+    fully released, and concurrent healthy streams are unaffected."""
+    loop = make_loop(stream_buf=4, blocks=6000)
+
+    async def main():
+        await loop.start()
+        slow = loop.submit(req(0, out=64))           # never consumed
+        fast = loop.submit(req(1, out=64))
+        toks = await asyncio.wait_for(fast.collect(), timeout=30)
+        # wait for the slow stream's terminal transition
+        for _ in range(3000):
+            if slow.closed:
+                break
+            await asyncio.sleep(0.01)
+        # everything the bound allowed through is still readable
+        leftover = await asyncio.wait_for(slow.collect(), timeout=5)
+        await loop.stop()
+        return slow, fast, toks, leftover
+
+    slow, fast, toks, leftover = run(main())
+    assert slow.overflowed
+    assert slow.final_state == "aborted"
+    assert leftover == [synth_token("r0", i) for i in range(4)]
+    r0 = loop.door.requests["r0"]
+    assert r0.state == "aborted"
+    assert r0.generated < 64                  # production actually stopped
+    # the healthy stream never stalled: full output, in order
+    assert toks == [synth_token("r1", i) for i in range(64)]
+    assert fast.final_state == "done"
+    # KV conservation: allocator state identical to a virgin scheduler
+    clean = make_sched(blocks=6000)
+    assert _pool_fingerprint(loop.door.sched) == _pool_fingerprint(clean)
+
+
+# ---------------------------------------------------------------------------
+# stream / offline equivalence
+# ---------------------------------------------------------------------------
+
+def _equiv_spec(n=120):
+    return WorkloadSpec(n_requests=n, arrival="bursty", rate=4.0,
+                        burst_mult=6.0, phase_seconds=8.0,
+                        burst_seconds=3.0, length_dist="lognormal",
+                        priority_frac=0.15, background_frac=0.2,
+                        prompt_range=(128, 2000), output_range=(32, 128),
+                        seed=11)
+
+
+def test_async_trace_matches_offline_outcomes():
+    """Same trace, same seed: the async loop must reach the same
+    per-request terminal states and token counts as the offline
+    ``FrontDoor.run`` path — the §D13 equivalence that makes the
+    saturation benchmark a fair comparison."""
+    reqs = generate(_equiv_spec())
+
+    offline = FrontDoor(make_sched(), FrontDoorConfig(tiers=TIERS))
+    for r in generate(_equiv_spec()):
+        offline.submit(r)
+    offline.run()
+    want = {r.req_id: (r.state, r.generated)
+            for r in offline.requests.values()}
+
+    loop = make_loop()
+    out = run(drive_inprocess(loop, reqs, collect_tokens=True))
+    for rec in out["records"]:
+        state, generated = want[rec["req_id"]]
+        assert rec["state"] == state, rec
+        assert rec["n_tokens"] == generated, rec
+        assert rec["tokens"] == [synth_token(rec["req_id"], i)
+                                 for i in range(rec["n_tokens"])]
+
+
+def test_real_engine_stream_token_identity():
+    """Greedy decoding on the real engine: the token ids STREAMED by the
+    async path are byte-identical to what the offline path reads back
+    with ``generated_tokens`` after ``run()``."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.core.engine import FlyingEngine
+    from repro.models.model import build_model
+
+    cfg = get_config("llama3-8b").reduced()
+    plan = ParallelPlan(engine_rows=1, tp_base=1, data_rows=1)
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.key(0))
+
+    def build():
+        geom = PoolGeometry(cfg, plan, num_blocks=64, block_base=4)
+        eng = FlyingEngine(model, plan, geom, params, batch_per_engine=2,
+                           max_blocks_per_req=16, prefill_len=8)
+        sched = DynamicScheduler(
+            plan, geom, eng,
+            SchedulerConfig(strategy="hard", max_batch_per_group=2,
+                            prefill_chunk=8))
+        return sched, eng
+
+    def reqs():
+        return [Request(req_id="a", arrival=0.0, prompt_len=24,
+                        output_len=6),
+                Request(req_id="b", arrival=0.001, prompt_len=8,
+                        output_len=8)]
+
+    # offline reference
+    sched, eng = build()
+    for r in reqs():
+        sched.submit(r)
+    sched.run(max_steps=400)
+    want = {rid: eng.generated_tokens(rid) for rid in ("a", "b")}
+    assert all(len(v) > 0 for v in want.values())
+
+    # async streaming run
+    sched2, _ = build()
+    door = FrontDoor(sched2, FrontDoorConfig(tiers=TIERS))
+    loop = AsyncServeLoop(door, pace="virtual")
+    out = run(drive_inprocess(loop, reqs(), collect_tokens=True))
+    got = {rec["req_id"]: rec["tokens"] for rec in out["records"]}
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# HTTP server over a real socket
+# ---------------------------------------------------------------------------
+
+async def _post(port, path, body, *, read_all=True):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    data = json.dumps(body).encode()
+    writer.write((f"POST {path} HTTP/1.1\r\nHost: t\r\n"
+                  "Content-Type: application/json\r\n"
+                  f"Content-Length: {len(data)}\r\n\r\n").encode() + data)
+    await writer.drain()
+    if not read_all:
+        return reader, writer
+    out = await reader.read()
+    writer.close()
+    return out.decode()
+
+
+async def _get(port, path):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write(f"GET {path} HTTP/1.1\r\nHost: t\r\n\r\n".encode())
+    await writer.drain()
+    out = await reader.read()
+    writer.close()
+    return out.decode()
+
+
+def test_http_server_streams_completion_and_metrics():
+    async def main():
+        srv = ServeHTTP(make_loop())
+        await srv.start(port=0)
+        assert (await _get(srv.port, "/healthz")).startswith(
+            "HTTP/1.1 200")
+        out = await _post(srv.port, "/v1/completions",
+                          {"prompt": "x" * 64, "max_tokens": 8,
+                           "stream": True})
+        lines = [l for l in out.splitlines() if l.startswith("data: ")]
+        assert lines[-1] == "data: [DONE]"
+        evs = [json.loads(l[6:]) for l in lines[:-1]]
+        toks = [e["token"] for e in evs if "token" in e]
+        req_id = evs[0]["id"]
+        assert toks == [synth_token(req_id, i) for i in range(8)]
+        assert evs[-1]["choices"][0]["finish_reason"] == "stop"
+        # non-streaming + chat alias
+        out = await _post(srv.port, "/v1/chat/completions",
+                          {"messages": [{"role": "user",
+                                         "content": "hello"}],
+                           "max_tokens": 4})
+        body = json.loads(out.split("\r\n\r\n", 1)[1])
+        assert body["usage"]["completion_tokens"] == 4
+        assert body["choices"][0]["message"]["content"]
+        # live metrics
+        m = json.loads((await _get(srv.port, "/metrics"))
+                       .split("\r\n\r\n", 1)[1])
+        assert m["tiers"]["standard"]["done"] == 2
+        assert m["counters"]["admitted"] == 2
+        await srv.stop()
+
+    run(main())
+
+
+def test_http_disconnect_aborts_request():
+    """Dropping the socket mid-stream must abort the request through
+    the lifecycle (KV released), not leave it generating."""
+    async def main():
+        # wall pace so the stream is slow enough to hang up mid-flight
+        srv = ServeHTTP(make_loop(pace="wall"))
+        await srv.start(port=0)
+        reader, writer = await _post(
+            srv.port, "/v1/completions",
+            {"prompt": "x" * 64, "max_tokens": 5000, "stream": True},
+            read_all=False)
+        got = 0
+        while got < 2:
+            line = await asyncio.wait_for(reader.readline(), timeout=30)
+            if line.startswith(b"data: ") and b"token" in line:
+                got += 1
+        writer.close()                      # client hangs up
+        r = srv.loop.door.requests["cmpl-1"]
+        for _ in range(400):
+            if r.state in TERMINAL_STATES:
+                break
+            await asyncio.sleep(0.05)
+        assert r.state == "aborted"
+        assert r.generated < 5000
+        await srv.stop()
+
+    run(main())
+
+
+def test_http_loadgen_replay():
+    """The HTTP load generator replays a mixed trace over real sockets;
+    scripted cancels become client disconnects that the server turns
+    into aborts."""
+    spec = _equiv_spec(30)
+    spec.cancel_frac = 0.0
+    reqs = generate(spec)
+
+    async def main():
+        srv = ServeHTTP(make_loop())
+        await srv.start(port=0)
+        out = await drive_http("127.0.0.1", srv.port, reqs,
+                               time_scale=0.02, collect_tokens=True)
+        states = {r["state"] for r in out["records"]}
+        assert states <= {"done", "shed", "background"}, states
+        done = [r for r in out["records"] if r["state"] == "done"]
+        assert len(done) >= 25
+        await srv.stop()
+        return out
+
+    out = run(main())
+    # token content is deterministic per server request id; counts must
+    # match what was asked for on every completed stream
+    by_id = {r.req_id: r for r in reqs}
+    for rec in out["records"]:
+        if rec["state"] == "done":
+            assert rec["n_tokens"] == by_id[rec["req_id"]].output_len
+
+
+# ---------------------------------------------------------------------------
+# ForecastPolicy
+# ---------------------------------------------------------------------------
+
+def test_tier_forecast_recovers_poisson_rate():
+    import random
+    rng = random.Random(3)
+    tf = TierForecast(tau=2.0)
+    t = 0.0
+    for _ in range(3000):
+        t += rng.expovariate(8.0)
+        tf.observe(t, ctx=500)
+    assert 6.0 < tf.rate(t) < 10.5
+    assert abs(tf.ctx - 500) < 1e-6
+    # decays toward zero when the stream stops
+    assert tf.rate(t + 20.0) < 0.01
+
+
+def test_forecast_policy_learns_period_and_schedules_wakeup():
+    fp = ForecastPolicy(bind_rate=1.5, tau_s=2.0, lead_s=0.75)
+    t0s = [5.0 + 10.0 * k for k in range(4)]
+    for t0 in t0s:
+        for i in range(20):
+            fp.observe(t0 + i * 0.05, "priority", 400)
+    assert fp._period is not None and abs(fp._period - 10.0) < 1.0
+    # next onset predicted at ~45, wake-up lead_s earlier
+    nxt = fp.next_action_t(40.0)
+    assert nxt is not None and abs(nxt - (45.0 - 0.75)) < 1.5
+    # hysteresis: bind held for hold_s past the last hot signal, then
+    # released in the quiet part of the gap
+    assert fp._want_bind(t0s[-1] + 1.0)
+    assert not fp._want_bind(t0s[-1] + fp.hold_s + 4.0)
+
+
+def test_forecast_policy_prebinds_island_before_burst():
+    """End-to-end through the front door: periodic priority bursts on a
+    background-traffic floor. After the learner converges, the TP
+    island must be carved while the priority queue is still EMPTY (the
+    ``prebinds`` stat) — the next burst lands on a warm island."""
+    fp = ForecastPolicy(inner=FlyingPolicy(), bind_rate=1.5,
+                        tau_s=2.0, lead_s=1.0, hold_s=3.0)
+    sched = make_sched(policy=fp)
+    fd = FrontDoor(sched, FrontDoorConfig(tiers=TIERS))
+    n = 0
+    for k in range(4):                       # 4 bursts, period 12s
+        t0 = 6.0 + 12.0 * k
+        for i in range(12):
+            fd.submit(req(f"p{n}", arrival=t0 + i * 0.1, prompt=256,
+                          out=16, tier="priority", priority=1))
+            n += 1
+    for j in range(40):                      # light background floor
+        fd.submit(req(f"bg{j}", arrival=1.0 + j * 1.2, prompt=512,
+                      out=32, tier="background"))
+    fd.run()
+    assert all(r.state == "done" for r in fd.requests.values())
+    assert fp._period is not None and 10.0 < fp._period < 14.0
+    assert fp.stats["prebinds"] >= 1, fp.stats
+    # the pre-bind really fired ahead of traffic: priority TTFT in the
+    # LAST burst (warm island) beats the FIRST burst (cold reactive
+    # bind) on the same arrival pattern
+    def burst_ttft(k):
+        t0 = 6.0 + 12.0 * k
+        rs = [r for r in fd.requests.values()
+              if r.tier == "priority" and t0 <= r.arrival < t0 + 2.0]
+        return max(r.first_token_t - r.arrival for r in rs)
+    assert burst_ttft(3) <= burst_ttft(0) + 1e-9
+
+
+def test_forecast_policy_passthrough_attrs():
+    fp = ForecastPolicy(inner=FlyingPolicy(live=True, sp=True))
+    assert fp.live and fp.sp and fp.islands
+
+
+# ---------------------------------------------------------------------------
+# rolling metrics
+# ---------------------------------------------------------------------------
+
+def test_rolling_metrics_window_and_counters():
+    m = RollingTierMetrics(window_s=10.0)
+    r = req(0, out=8)
+    r.state = "done"
+    r.admitted_t = 0.5
+    r.first_token_t = 1.0
+    r.finish_t = 3.0
+    r.generated = 8
+    m.note_request(r)
+    m.note_tokens(3.0, "standard", 8)
+    rep = m.report(4.0)["standard"]
+    assert rep["done_window"] == 1
+    assert rep["p99_ttft_s"] == pytest.approx(1.0)
+    assert rep["tok_per_s"] > 0
+    # the completion ages out of the window; counters persist
+    rep = m.report(60.0)["standard"]
+    assert rep["done_window"] == 0
+    assert rep["done"] == 1 and rep["admitted"] == 1
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig
+# ---------------------------------------------------------------------------
+
+def test_serve_config_json_and_cli_overrides(tmp_path):
+    from repro.launch.serve import ServeConfig, parse_config
+    p = tmp_path / "serve.json"
+    p.write_text(json.dumps({"requests": 99, "strategy": "live",
+                             "rate": 5.0, "fault": ["kill@40:3"]}))
+    cfg = parse_config(["--config", str(p), "--rate", "20"])
+    assert cfg.requests == 99          # from JSON
+    assert cfg.rate == 20.0            # CLI override wins
+    assert cfg.strategy == "live"
+    assert cfg.fault == ("kill@40:3",)
+    cfg = parse_config(["--serve", "--port", "0", "--forecast"])
+    assert cfg.serve and cfg.forecast and cfg.port == 0
+    assert isinstance(cfg.policy(), ForecastPolicy)
+    p.write_text(json.dumps({"reqeusts": 5}))
+    with pytest.raises(SystemExit):
+        ServeConfig.load(str(p))
+    with pytest.raises(SystemExit):
+        parse_config(["--strategy", "bogus"])
